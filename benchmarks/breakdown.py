@@ -1,0 +1,75 @@
+"""Paper Fig. 5: kernel-level latency breakdown.
+
+(a) prefill: index construction on top of the forward pass (paper: 10-15%).
+(b) decode step: hierarchical retrieval + lazy update + sparse attention
+    (paper: retrieval small, update <1%).
+Components are timed in isolation with the same inputs the composed step
+uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (build_lychee, coherent_keys, emit,
+                               structured_tokens, timeit)
+from repro.configs.base import LycheeConfig
+from repro.core import (build_index, chunk_sequence, retrieve,
+                        synthetic_delimiter_table)
+from repro.core.attention import sparse_decode_attention
+from repro.core.update import maybe_lazy_update
+
+
+def run():
+    rng = np.random.default_rng(5)
+    N, d, H, G = 8192, 64, 4, 4
+    cfg = LycheeConfig(min_chunk=8, max_chunk=16, sink=16, buffer_size=64,
+                       budget=512, top_kg=8, max_coarse=32)
+    keys = coherent_keys(rng, N, d, H=H)
+    values = jnp.asarray(rng.standard_normal((H, N, d)), jnp.float32)
+    tokens = structured_tokens(rng, N)
+    table = jnp.asarray(synthetic_delimiter_table(997))
+
+    # ---- prefill side -----------------------------------------------------
+    chunk_fn = jax.jit(lambda tk: chunk_sequence(tk, table, cfg))
+    layout = chunk_fn(tokens)
+    t_chunk = timeit(chunk_fn, tokens, iters=3)
+    build_fn = jax.jit(lambda kk: build_index(kk, layout, cfg))
+    t_build = timeit(build_fn, keys, iters=3)
+    # proxy for the model's prefill forward at this size: one flash pass
+    from repro.models.attention import flash_attention
+    q4 = jnp.asarray(rng.standard_normal((1, H * G, N, d)),
+                     jnp.float32) * 0.1
+    kv4 = jnp.asarray(rng.standard_normal((1, H, N, d)), jnp.float32)
+    pos = jnp.arange(N, dtype=jnp.int32)
+    fwd_fn = jax.jit(lambda qq, kk, vv: flash_attention(
+        qq, kk, vv, q_pos=pos, k_pos=pos, causal=True, scale=d ** -0.5))
+    t_fwd = timeit(fwd_fn, q4, kv4, kv4, iters=3)
+
+    # ---- decode side --------------------------------------------------------
+    index = build_fn(keys)
+    q = jnp.asarray(rng.standard_normal((H * G, d)), jnp.float32)
+    probe = q.reshape(H, G, d).mean(1)
+    retr_fn = jax.jit(lambda pb: retrieve(index, pb, cfg))
+    ret = retr_fn(probe)
+    t_retr = timeit(retr_fn, probe)
+    attn_fn = jax.jit(lambda qq, kk, vv: sparse_decode_attention(
+        qq, kk, vv, ret.token_idx, ret.token_mask, N, cfg, d ** -0.5))
+    t_attn = timeit(attn_fn, q, keys, values)
+    upd_fn = jax.jit(lambda kk: maybe_lazy_update(index, kk, N + 16, cfg))
+    t_upd = timeit(upd_fn, keys)
+
+    step_total = t_retr + t_attn + t_upd
+    return emit([
+        {"phase": "prefill", "component": "chunking_ms", "ms": t_chunk},
+        {"phase": "prefill", "component": "index_build_ms", "ms": t_build},
+        {"phase": "prefill", "component": "attention_fwd_ms", "ms": t_fwd},
+        {"phase": "prefill", "component": "index_frac_of_prefill",
+         "ms": (t_chunk + t_build) / (t_chunk + t_build + t_fwd)},
+        {"phase": "decode", "component": "retrieval_ms", "ms": t_retr},
+        {"phase": "decode", "component": "sparse_attention_ms", "ms": t_attn},
+        {"phase": "decode", "component": "lazy_update_ms", "ms": t_upd},
+        {"phase": "decode", "component": "update_frac_of_step",
+         "ms": t_upd / step_total},
+    ], "breakdown_fig5")

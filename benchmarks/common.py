@@ -1,0 +1,70 @@
+"""Shared benchmark utilities: synthetic caches with controllable local
+coherence, recall metric (paper Table 3 definition), and timing helpers.
+
+All benchmarks run on CPU with small dimensions; they reproduce the paper's
+*mechanisms and orderings* (which method recalls more, how overheads decompose,
+how memory scales) rather than its absolute H20 wall-clock numbers — the
+absolute-performance analysis for the TPU target lives in the §Roofline
+dry-run pipeline.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LycheeConfig
+from repro.core import (build_index, chunk_sequence, fixed_chunking,
+                        retrieve, synthetic_delimiter_table)
+
+
+def coherent_keys(rng, N: int, d: int, H: int = 1, n_modes: int = 32,
+                  run_len: int = 24, noise: float = 0.3) -> jnp.ndarray:
+    """Key cache with paper-premise local coherence: contiguous runs share a
+    semantic direction."""
+    modes = rng.standard_normal((n_modes, d)) * 3.0
+    ids = np.repeat(rng.integers(0, n_modes, size=N // run_len + 1),
+                    run_len)[:N]
+    keys = modes[ids] + rng.standard_normal((N, d)) * noise
+    return jnp.asarray(np.broadcast_to(keys, (H, N, d)).copy(), jnp.float32)
+
+
+def structured_tokens(rng, N: int, vocab: int = 997) -> jnp.ndarray:
+    """Token stream with delimiter statistics of structured text."""
+    return jnp.asarray(rng.integers(0, vocab, size=(N,)), jnp.int32)
+
+
+def recall_rate(token_idx, token_mask, keys_h, q, k_truth: int = 64) -> float:
+    """Paper Table 3 metric: fraction of the ground-truth top-k attention
+    tokens (by exact dot product) retrieved within the budget."""
+    scores = np.asarray(keys_h @ q)
+    truth = set(np.argsort(-scores)[:k_truth].tolist())
+    got = set(np.asarray(token_idx)[np.asarray(token_mask)].tolist())
+    return len(got & truth) / k_truth
+
+
+def build_lychee(keys, tokens, cfg: LycheeConfig, vocab: int = 997):
+    table = jnp.asarray(synthetic_delimiter_table(vocab))
+    layout = chunk_sequence(tokens, table, cfg)
+    return build_index(keys, layout, cfg), layout
+
+
+def timeit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in milliseconds (jit-warmed)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return 1e3 * float(np.median(ts))
+
+
+def emit(rows: List[Dict], name: str) -> List[Dict]:
+    for r in rows:
+        r["bench"] = name
+    return rows

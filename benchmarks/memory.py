@@ -1,0 +1,48 @@
+"""Paper Fig. 8 / App. C: index memory overhead vs full KV cache.
+
+Exact byte accounting of the LycheeIndex pytree against the KV tensors it
+indexes (Llama-3.1-8B geometry: 32 layers, 8 kv heads, head_dim 128; first
+2 layers full per App. A). Three columns:
+
+* physical_pct   — everything our static-shape TPU index allocates,
+* resident_pct   — what decode actually READS (drops ``chunk_key``:
+                   Algorithm 1 scores only coarse/fine centroids; chunk
+                   keys are build-time + write-only-at-graft),
+* paper reports ~1% for its dynamic-shape CUDA variant; the gap is the
+  static worst-case padding (M = N/min_chunk slots for ~N/12 real chunks)
+  plus chunk_key retention — see EXPERIMENTS.md §Perf (memory iteration).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs.base import LycheeConfig
+from repro.core import empty_index
+
+
+def run():
+    cfg = LycheeConfig()
+    H, dh, n_layers, full_layers = 8, 128, 32, 2
+    rows = []
+    for N in (8192, 16384, 32768, 65536):
+        kv_bytes = 2 * H * N * dh * 2          # k+v, bf16
+        idx = empty_index(N, H, dh, cfg, dtype=jnp.bfloat16)
+        by_field = {k: np.prod(v.shape) * v.dtype.itemsize
+                    for k, v in idx._asdict().items()}
+        total = sum(by_field.values())
+        resident = total - by_field["chunk_key"]
+        centroids = by_field["fine_centroid"] + by_field["coarse_centroid"]
+        scale = (n_layers - full_layers) / n_layers / kv_bytes * 100
+        rows.append({
+            "context": N,
+            "kv_gb": kv_bytes * n_layers / 2**30,
+            "physical_pct": total * scale,
+            "resident_pct": resident * scale,
+            "centroid_pct": centroids * scale,
+            "chunk_key_pct": by_field["chunk_key"] * scale,
+        })
+    return emit(rows, "memory_fig8")

@@ -1,0 +1,158 @@
+"""Paper Table 6 (RULER) proxy: does the retrieval layer FIND the queried
+record under a tight budget, in a real model's key geometry?
+
+Full RULER accuracy needs a pretrained LLM (induction heads do not form in
+CPU-minutes — we verified: a 2-layer model trained here reaches the
+uniform-over-values plateau, so end-task exact-match is uninformative at
+this scale). What is measurable and faithful to the paper's mechanism is
+**answer-record retrieval recall**: we briefly train the toy model on the
+KV-lookup grammar so its key cache has task geometry, prefill real
+prompts, and check whether the tokens of the QUERIED record are inside the
+retrieved set, for
+
+  * LycheeCluster with structure-aware chunks (delimiters = the grammar's
+    separators),
+  * LycheeCluster with fixed-size chunks (Fig. 6 ablation at task level),
+  * Quest fixed pages at the same budget.
+
+The paper's Table 6 claim (parity with full attention) follows whenever
+the needed record is retrieved — full attention trivially "retrieves"
+everything.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import LycheeConfig, get_config
+from repro.core import chunk_sequence, fixed_chunking, retrieve
+from repro.core.baselines import build_quest, quest_select
+from repro.core.index import build_index
+from repro.models import model as MD
+from repro.models.model import chunked_ce
+from repro.training.data import (NL, QUERY, SEP, structured_retrieval_task)
+from repro.training.optimizer import adamw_init, adamw_update, lr_schedule
+
+_CKPT = "experiments/toy_ruler"
+VOCAB = 256
+N_RECORDS = 24
+VAL_LEN = 4
+
+
+def _cfg():
+    return get_config("llama31-8b", reduced=True).replace(
+        vocab=VOCAB, dtype="float32", n_layers=2,
+        lychee=LycheeConfig(enabled=False))
+
+
+def _delim_table():
+    t = np.zeros(VOCAB, np.int32)
+    t[NL] = 3
+    t[SEP] = 2
+    t[QUERY] = 4
+    return jnp.asarray(t)
+
+
+def _train(cfg, steps=150, batch=32):
+    from repro.training.checkpoint import restore, save
+    params = MD.init_model(jax.random.key(0), cfg)
+    if os.path.exists(os.path.join(_CKPT, "manifest.json")):
+        try:
+            params, _ = restore(_CKPT, params)
+            return params
+        except Exception:   # noqa: BLE001 — stale layout: retrain
+            pass
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(params, opt, tok):
+        def loss_fn(p):
+            x, _ = MD.forward(p, tok, cfg)
+            labels = tok[:, 1:]
+            mask = jnp.ones_like(labels, jnp.float32)
+            return chunked_ce(x[:, :-1], p["embed"], labels, mask, 0.0)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr = lr_schedule(opt.step, base_lr=1e-3, total_steps=steps)
+        params, opt, _ = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    loss = None
+    for i in range(steps):
+        tokens, answers, _ = structured_retrieval_task(
+            VOCAB, batch, N_RECORDS, VAL_LEN, seed=1000 + i)
+        tok = jnp.asarray(np.concatenate([tokens, answers], axis=1))
+        params, opt, loss = step(params, opt, tok)
+    save(_CKPT, params)
+    print(f"  [ruler_proxy] toy model LM loss={float(loss):.3f}")
+    return params
+
+
+def run():
+    cfg = _cfg()
+    params = _train(cfg)
+    table = _delim_table()
+    ly = LycheeConfig(budget=48, sink=0, buffer_size=0, max_coarse=8,
+                      top_kg=4, min_chunk=4, max_chunk=16,
+                      full_attn_layers=0)
+
+    tokens, answers, apos = structured_retrieval_task(
+        VOCAB, 16, N_RECORDS, VAL_LEN, seed=9)
+    S = tokens.shape[1]
+    # real key geometry: prefill and take the first layer group's K cache
+    _, state = jax.jit(lambda p, tk: MD.prefill(p, tk, cfg, S + 8))(
+        params, jnp.asarray(tokens))
+    k_all = state["groups"][0]["k"]            # (G, B, Hkv, n_cache, dh)
+
+    # the model's REAL layer-0 queries at the last prompt position:
+    # x0 = embed(tokens); q = RoPE(rmsnorm(x0) @ wq) — exact for layer 0
+    from repro.models.attention import _project_qkv
+    bp0 = jax.tree.map(lambda a: a[0], params["pattern"][0])
+    from repro.models.layers import rmsnorm
+    x0 = MD.embed_inputs(params, jnp.asarray(tokens), cfg)
+    qf, _, _ = _project_qkv(bp0["attn"], rmsnorm(bp0["norm1"], x0),
+                            jnp.arange(S, dtype=jnp.int32), cfg)
+    Hq = qf.shape[1]
+    Hkv = k_all.shape[2]
+    q_last = qf[:, :, S - 1]                   # (B, Hq, dh)
+    probe_all = q_last.reshape(tokens.shape[0], Hkv, Hq // Hkv, -1).mean(2)
+
+    hits = {"lychee_structure_aware": [], "lychee_fixed": [], "quest": []}
+    neff = {m: [] for m in hits}
+    for b in range(tokens.shape[0]):
+        keys = k_all[0, b][:, :S]              # (Hkv, S, dh)
+        tk = jnp.asarray(tokens[b])
+        probe = probe_all[b]
+        # answer-record token span
+        span = set(range(int(apos[b]) - 2, int(apos[b]) + VAL_LEN + 1))
+
+        lay_sa = chunk_sequence(tk, table, ly)
+        lay_fx = fixed_chunking(S, 16, ly)
+        for name, lay in [("lychee_structure_aware", lay_sa),
+                          ("lychee_fixed", lay_fx)]:
+            idx = build_index(keys, lay, ly)
+            # top_kc assumes full max_chunk-length chunks; this grammar's
+            # records are ~7 tokens, so correct kc by the TRUE mean chunk
+            # length to give every method the same effective token budget
+            mean_len = float(np.asarray(lay.length).sum() /
+                             max(int(lay.count), 1))
+            eff_budget = int(ly.budget * ly.max_chunk / max(mean_len, 1.0))
+            ret = retrieve(idx, probe, ly, budget=eff_budget)
+            got = set(np.asarray(ret.token_idx)[
+                np.asarray(ret.token_mask)].tolist())
+            hits[name].append(len(got & span) / len(span))
+            neff[name].append(len(got))
+        qidx = build_quest(keys, page=16)
+        ti, tm = quest_select(qidx, probe, ly.budget)
+        got = set(np.asarray(ti)[np.asarray(tm)].tolist())
+        hits["quest"].append(len(got & span) / len(span))
+        neff["quest"].append(len(got))
+
+    rows = [{"method": m, "answer_record_recall": float(np.mean(v)),
+             "budget": ly.budget,
+             "effective_tokens": float(np.mean(neff[m]))}
+            for m, v in hits.items()]
+    return emit(rows, "ruler_proxy_tab6")

@@ -1,0 +1,64 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only <name>]`` prints a CSV of
+every row and writes experiments/bench/<bench>.json. The roofline numbers
+(the TPU-side performance report) come from ``repro.launch.dryrun`` +
+``benchmarks.roofline`` instead — this harness covers the paper's
+algorithmic tables/figures on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+BENCHES = [
+    "chunking",           # Fig. 2 pilot + Fig. 6 ablation
+    "pooling",            # Table 3
+    "budget",             # Fig. 7
+    "retrieval_quality",  # Table 1 proxy (selection policies)
+    "tpot",               # Fig. 4
+    "breakdown",          # Fig. 5
+    "memory",             # Fig. 8 / App. C
+    "stability",          # Fig. 9 / App. D
+    "granularity",        # Fig. 10 / App. E
+    "ruler_proxy",        # Table 6 / Table 1 end-task proxy
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = [args.only] if args.only else BENCHES
+    failures = []
+    print("bench,key,value")
+    for name in names:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run()
+        except Exception as e:      # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+            continue
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump(rows, f, indent=1, default=float)
+        for r in rows:
+            items = [f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                     for k, v in r.items() if k != "bench"]
+            print(f"{name},{','.join(items)}")
+        print(f"# {name}: {time.time() - t0:.1f}s")
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

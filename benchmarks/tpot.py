@@ -1,0 +1,63 @@
+"""Paper Fig. 4: per-step decode cost vs context length.
+
+Full attention scans the whole cache every token (linear growth);
+LycheeCluster's cost is bounded by the budget. We time the decode-attention
+operator (the component the paper's speedup comes from) at growing context
+lengths on CPU, plus ClusterKV-style selection for comparison. Absolute
+milliseconds are CPU numbers; the shape of the curves (linear vs flat) is
+the reproduced claim, and the TPU-side magnitude comes from §Roofline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (build_lychee, coherent_keys, emit,
+                               structured_tokens, timeit)
+from repro.configs.base import LycheeConfig
+from repro.core import full_decode_attention, retrieve
+from repro.core.attention import sparse_decode_attention
+from repro.core.baselines import build_clusterkv, clusterkv_select
+
+
+def run():
+    rng = np.random.default_rng(4)
+    d, H, G = 64, 4, 4
+    budget = 512
+    cfg = LycheeConfig(min_chunk=8, max_chunk=16, sink=16, buffer_size=64,
+                       budget=budget, top_kg=8, max_coarse=32)
+    rows = []
+    for N in (2048, 4096, 8192, 16384):
+        keys = coherent_keys(rng, N, d, H=H)
+        values = jnp.asarray(rng.standard_normal((H, N, d)), jnp.float32)
+        tokens = structured_tokens(rng, N)
+        index, _ = build_lychee(keys, tokens, cfg)
+        cidx = build_clusterkv(keys, tokens_per_cluster=32, iters=4)
+        q = jnp.asarray(rng.standard_normal((H * G, d)), jnp.float32)
+        probe = q.reshape(H, G, d).mean(1)
+
+        full_fn = jax.jit(lambda qq, kk, vv: full_decode_attention(
+            qq, kk, vv, N, d ** -0.5))
+        t_full = timeit(full_fn, q, keys, values)
+
+        @jax.jit
+        def lychee_fn(qq, pb, kk, vv):
+            ret = retrieve(index, pb, cfg)
+            return sparse_decode_attention(qq, kk, vv, ret.token_idx,
+                                           ret.token_mask, N, cfg, d ** -0.5)
+        t_ly = timeit(lychee_fn, q, probe, keys, values)
+
+        @jax.jit
+        def ckv_fn(qq, pb, kk, vv):
+            ti, tm = clusterkv_select(cidx, pb, budget)
+            return sparse_decode_attention(qq, kk, vv, ti, tm, N, cfg,
+                                           d ** -0.5)
+        t_ckv = timeit(ckv_fn, q, probe, keys, values)
+
+        rows.append({"context": N, "full_ms": t_full, "lychee_ms": t_ly,
+                     "clusterkv_ms": t_ckv,
+                     "speedup_vs_full": t_full / t_ly})
+    return emit(rows, "tpot_fig4")

@@ -1,0 +1,74 @@
+"""End-to-end serving driver (the paper's scenario): batched long-prompt
+requests, LycheeCluster-managed decode vs full attention.
+
+Serves a reduced-config model (random weights — the timing story does not
+depend on weight values) with a batch of long prompts, generating with the
+batched engine under (a) full attention and (b) LycheeCluster, and prints
+per-token decode latency for both plus the retrieval statistics.
+
+Run:  PYTHONPATH=src python examples/serve_longcontext.py \
+          [--arch granite-3-8b] [--ctx 2048] [--gen 64] [--batch 2]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import LycheeConfig, get_config
+from repro.models import model as MD
+from repro.serving import Engine, SamplerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--ctx", type=int, default=2048)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    lychee = LycheeConfig(budget=256, sink=16, buffer_size=64,
+                          max_coarse=32, top_kg=8, full_attn_layers=0)
+    cfg = get_config(args.arch, reduced=True).replace(
+        dtype="float32", lychee=lychee)
+    params = MD.init_model(jax.random.key(0), cfg)
+    prompts = rng.integers(0, cfg.vocab,
+                           size=(args.batch, args.ctx)).astype(np.int32)
+    n_cache = args.ctx + (cfg.n_patches or 0) + args.gen + 32
+
+    extras = {}
+    if cfg.n_patches:
+        extras["patches"] = jax.numpy.asarray(
+            rng.standard_normal((args.batch, cfg.n_patches, cfg.d_model))
+            .astype(np.float32) * 0.02)
+    if cfg.is_encdec:
+        extras["frames"] = jax.numpy.asarray(
+            rng.standard_normal((args.batch, cfg.n_audio_frames,
+                                 cfg.d_model)).astype(np.float32) * 0.02)
+
+    results = {}
+    for name, c in [("lychee", cfg),
+                    ("full", cfg.replace(lychee=LycheeConfig(enabled=False)))]:
+        engine = Engine(c, params, n_cache=n_cache)
+        res = engine.generate(prompts, args.gen,
+                              SamplerConfig(temperature=0.8, top_k=50),
+                              extras=extras)
+        results[name] = res
+        print(f"[{name:6s}] prefill {res.prefill_s:.2f}s   "
+              f"decode {res.decode_s:.2f}s   TPOT {res.tpot_ms:.1f}ms")
+    sp = results["full"].tpot_ms / results["lychee"].tpot_ms
+    print(f"decode speedup (lychee vs full): {sp:.2f}x at ctx={args.ctx} "
+          f"budget={lychee.budget}")
+    print("sample generation (lychee):",
+          results["lychee"].tokens[0, :16].tolist())
+    if sp < 1.0:
+        print("note: on CPU the retrieval overhead crosses over around "
+              "ctx≈8k (see `python -m benchmarks.run --only tpot`: 5.3x at "
+              "8k, 14x at 16k for the attention op); at small ctx full "
+              "attention is cheap enough to win. TPU-target magnitudes "
+              "come from the §Roofline dry-run pipeline.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""End-to-end training driver: train a ~100M-parameter xLSTM-125M-family
+model (or any --arch at reduced scale) on the synthetic LM stream for a few
+hundred steps with the full substrate: data pipeline -> train_step (AdamW,
+schedule, remat) -> checkpointing.
+
+Run:  PYTHONPATH=src python examples/train_lm.py \
+          [--arch xlstm-125m] [--steps 200] [--batch 8] [--seq 256] [--full]
+
+``--full`` uses the published architecture shape (xlstm-125m is ~125M params
+and trains on CPU in reasonable time at short seq); otherwise the reduced
+config keeps the smoke-scale shape.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as MD
+from repro.training import synthetic_lm_batches
+from repro.training.checkpoint import save
+from repro.training.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt", default="experiments/train_lm_ckpt")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full).replace(
+        dtype="float32")
+    params = MD.init_model(jax.random.key(0), cfg)
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(params))
+    print(f"arch={cfg.name}  params={n_params/1e6:.1f}M  "
+          f"steps={args.steps}  batch={args.batch}x{args.seq}")
+
+    step_fn, init_state = make_train_step(
+        cfg, base_lr=3e-4, total_steps=args.steps)
+    opt = init_state(params)
+    data = synthetic_lm_batches(cfg.vocab, args.batch, args.seq)
+
+    rng = np.random.default_rng(0)
+    losses = []
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {"tokens": jnp.asarray(next(data))}
+        if cfg.n_patches:
+            batch["patches"] = jnp.asarray(rng.standard_normal(
+                (args.batch, cfg.n_patches, cfg.d_model)) * 0.02,
+                jnp.float32)
+        if cfg.is_encdec:
+            batch["frames"] = jnp.asarray(rng.standard_normal(
+                (args.batch, cfg.n_audio_frames, cfg.d_model)) * 0.02,
+                jnp.float32)
+        params, opt, metrics = step_fn(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        if i % args.log_every == 0:
+            print(f"step {i:4d}  loss {losses[-1]:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'LEARNING' if last < first - 0.1 else 'check config'})")
+    save(args.ckpt, params, step=args.steps)
+    print("checkpoint saved to", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

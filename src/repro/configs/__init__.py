@@ -1,0 +1,5 @@
+from repro.configs.base import (ARCH_IDS, EXTRA_IDS, LycheeConfig,
+                                ModelConfig, get_config, list_archs, register)
+
+__all__ = ["ARCH_IDS", "EXTRA_IDS", "LycheeConfig", "ModelConfig",
+           "get_config", "list_archs", "register"]

@@ -1,0 +1,198 @@
+"""Model configuration system.
+
+Every assigned architecture gets a module in ``repro/configs/<id>.py`` that
+builds a :class:`ModelConfig` with the exact published shape, plus a
+``reduced()`` variant (≤2 layers, d_model ≤ 512, ≤4 experts) used by the CPU
+smoke tests. Configs are registered by id and selectable via ``--arch``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Block kinds understood by repro.models.model
+# ---------------------------------------------------------------------------
+# "attn"        : global causal self-attention + gated MLP
+# "attn_local"  : sliding-window causal self-attention + gated MLP
+# "mla"         : DeepSeek multi-head latent attention + dense MLP
+# "mla_moe"     : MLA + MoE FFN
+# "swa_moe"     : sliding-window attention + MoE FFN
+# "mamba"       : Mamba2 SSM block
+# "shared_attn" : zamba2-style shared transformer block (weights shared
+#                 across groups; passed as scan closure constants)
+# "mlstm"/"slstm": xLSTM blocks
+# "enc_attn"    : bidirectional encoder attention + MLP (whisper encoder)
+# "dec_cross"   : decoder self-attn + cross-attn + MLP (whisper decoder)
+
+
+@dataclasses.dataclass(frozen=True)
+class LycheeConfig:
+    """Hyper-parameters of the paper's technique (§4, App. A)."""
+
+    enabled: bool = True
+    min_chunk: int = 8            # minimum chunk length before delimiter search
+    max_chunk: int = 16           # forced split threshold
+    buffer_size: int = 128        # decode-time recent-token buffer
+    sink: int = 16                # attention-sink tokens always kept
+    budget: int = 1024            # retrieved token budget
+    avg_chunks_per_cluster: int = 2
+    max_coarse: int = 64          # P <= 64 coarse units
+    kmeans_iters: int = 10
+    top_kg: int = 8               # coarse units kept
+    full_attn_layers: int = 2     # first N layers keep full attention
+    child_cap: int = 8            # static max fine clusters per coarse unit
+    pooling: str = "mean"         # "mean" | "max" (Table 3 ablation)
+    use_kernel: bool = False      # Pallas sparse-attention path (True on TPU;
+                                  # interpret-mode validated in tests)
+
+    def top_kc(self, budget: Optional[int] = None) -> int:
+        """Fine clusters kept so that selected tokens ≈ budget."""
+        b = self.budget if budget is None else budget
+        # each cluster holds ~avg_chunks_per_cluster chunks of <= max_chunk
+        per_cluster = self.avg_chunks_per_cluster * self.max_chunk
+        return max(1, b // per_cluster)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                 # dense|moe|ssm|hybrid|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+
+    # --- block layout -----------------------------------------------------
+    prelude: Tuple[str, ...] = ()          # unrolled leading blocks
+    pattern: Tuple[str, ...] = ("attn",)   # scanned group pattern
+    n_groups: int = 0                      # groups scanned; 0 -> derive
+
+    # --- attention flavour --------------------------------------------------
+    window: int = 0                # sliding-window size for *_local / swa
+    attn_softcap: float = 0.0      # gemma2 logit soft-capping
+    final_softcap: float = 0.0
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # --- MLA (deepseek) -----------------------------------------------------
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- SSM (mamba2 / zamba) ----------------------------------------------
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    conv_width: int = 4
+
+    # --- hybrid (zamba2) ----------------------------------------------------
+    shared_attn_every: int = 0     # a shared attn block every N blocks
+
+    # --- enc-dec (whisper) ---------------------------------------------------
+    n_enc_layers: int = 0
+    n_audio_frames: int = 1500     # stub frontend output length
+
+    # --- vlm ---------------------------------------------------------------
+    n_patches: int = 0             # stub vision frontend output length
+
+    # --- train-time extras --------------------------------------------------
+    mtp_depth: int = 0             # deepseek multi-token prediction heads
+    tie_embeddings: bool = False
+    lr_schedule: str = "cosine"    # minicpm -> "wsd"
+
+    # --- numerics / distribution -------------------------------------------
+    dtype: str = "bfloat16"
+    fsdp: bool = False             # additionally shard params over data axis
+    remat: bool = True
+    opt_state_dtype: str = "float32"   # bf16 for the very large archs
+
+    lychee: LycheeConfig = dataclasses.field(default_factory=LycheeConfig)
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def groups(self) -> int:
+        if self.n_groups:
+            return self.n_groups
+        body = self.n_layers - len(self.prelude)
+        assert body % len(self.pattern) == 0, (
+            f"{self.name}: {body} body layers not divisible by pattern "
+            f"{self.pattern}")
+        return body // len(self.pattern)
+
+    @property
+    def uses_attention(self) -> bool:
+        kinds = set(self.prelude) | set(self.pattern)
+        return bool(kinds - {"mamba", "mlstm", "slstm"})
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    def validate(self) -> "ModelConfig":
+        assert self.n_layers == len(self.prelude) + self.groups * len(self.pattern)
+        if self.n_experts:
+            assert self.top_k > 0
+        return self
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+_REDUCED: Dict[str, Callable[[], ModelConfig]] = {}
+
+ARCH_IDS = [
+    "deepseek-v3-671b", "xlstm-125m", "zamba2-2.7b", "gemma2-27b",
+    "mixtral-8x22b", "gemma3-12b", "minicpm-2b", "internvl2-2b",
+    "granite-3-8b", "whisper-small",
+]
+# the paper's own evaluation model, included as an extra config
+EXTRA_IDS = ["llama31-8b"]
+
+
+def register(name: str, full: Callable[[], ModelConfig],
+             reduced: Callable[[], ModelConfig]) -> None:
+    _REGISTRY[name] = full
+    _REDUCED[name] = reduced
+
+
+def _ensure_loaded() -> None:
+    for arch in ARCH_IDS + EXTRA_IDS:
+        mod = arch.replace("-", "_").replace(".", "_")
+        if arch not in _REGISTRY:
+            importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    _ensure_loaded()
+    table = _REDUCED if reduced else _REGISTRY
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]().validate()
+
+
+def list_archs() -> Tuple[str, ...]:
+    _ensure_loaded()
+    return tuple(ARCH_IDS)

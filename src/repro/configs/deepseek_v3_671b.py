@@ -1,0 +1,51 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437].
+
+61 layers, d_model 7168, 128 heads, MLA (kv_lora 512, q_lora 1536, decoupled
+RoPE 64), first 3 layers dense FFN (18432), remaining 58 MoE with 1 shared +
+256 routed experts (d_ff 2048) top-8, MTP depth 1, vocab 129280.
+"""
+from repro.configs.base import LycheeConfig, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b",
+        arch_type="moe",
+        n_layers=61,
+        d_model=7168,
+        n_heads=128,
+        n_kv_heads=128,        # MLA: per-head keys reconstructed from latent
+        d_ff=18432,            # dense prelude FFN width
+        vocab=129_280,
+        head_dim=128,
+        prelude=("mla",) * 3,
+        pattern=("mla_moe",),
+        n_experts=256,
+        top_k=8,
+        n_shared_experts=1,
+        d_ff_expert=2048,
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_dim=128,
+        qk_rope_dim=64,
+        v_head_dim=128,
+        mtp_depth=1,
+        fsdp=True,
+        opt_state_dtype="bfloat16",   # fp32 Adam for 671B exceeds 512x16GB
+        lychee=LycheeConfig(),
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=256, n_heads=8, n_kv_heads=8, head_dim=32,
+        d_ff=512, vocab=512, prelude=("mla",), pattern=("mla_moe",),
+        n_experts=4, top_k=2, d_ff_expert=128,
+        q_lora_rank=64, kv_lora_rank=64, qk_nope_dim=32, qk_rope_dim=16,
+        v_head_dim=32, fsdp=False, opt_state_dtype="float32",
+        lychee=LycheeConfig(budget=128, sink=4, buffer_size=16,
+                            max_coarse=8, full_attn_layers=0),
+    )
+
+
+register("deepseek-v3-671b", full, reduced)

@@ -1,0 +1,41 @@
+"""Gemma2-27B [arXiv:2408.00118].
+
+46 layers alternating local (window 4096) / global attention, d_model 4608,
+32 heads (head_dim 128), GQA kv=16, d_ff 36864, vocab 256000, attention logit
+softcap 50, final logit softcap 30.
+"""
+from repro.configs.base import LycheeConfig, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-27b",
+        arch_type="dense",
+        n_layers=46,
+        d_model=4608,
+        n_heads=32,
+        n_kv_heads=16,
+        d_ff=36864,
+        vocab=256_000,
+        head_dim=128,
+        prelude=("attn_local", "attn"),
+        pattern=("attn_local", "attn"),
+        window=4096,
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        tie_embeddings=True,
+        fsdp=True,
+        lychee=LycheeConfig(),
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=512, vocab=512, window=64, fsdp=False, prelude=(),
+        lychee=LycheeConfig(budget=128, sink=4, buffer_size=16,
+                            max_coarse=8, full_attn_layers=0),
+    )
+
+
+register("gemma2-27b", full, reduced)

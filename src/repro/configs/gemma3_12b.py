@@ -1,0 +1,42 @@
+"""Gemma3-12B [hf:google/gemma-3-1b-pt family].
+
+48 layers in a 5:1 local:global pattern (window 1024 local layers), d_model
+3840, 16 heads (head_dim 256), GQA kv=8, d_ff 15360, vocab 262144, 128k
+context, qk-norm.
+"""
+from repro.configs.base import LycheeConfig, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-12b",
+        arch_type="dense",
+        n_layers=48,
+        d_model=3840,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=15360,
+        vocab=262_144,
+        head_dim=256,
+        prelude=("attn_local",) * 5 + ("attn",),
+        pattern=("attn_local",) * 5 + ("attn",),
+        window=1024,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        fsdp=True,
+        lychee=LycheeConfig(),
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=512, vocab=512, window=64, prelude=(), pattern=("attn_local", "attn"),
+        fsdp=False,
+        lychee=LycheeConfig(budget=128, sink=4, buffer_size=16,
+                            max_coarse=8, full_attn_layers=0),
+    )
+
+
+register("gemma3-12b", full, reduced)

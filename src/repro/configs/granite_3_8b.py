@@ -1,0 +1,37 @@
+"""Granite-3 8B [hf:ibm-granite/granite-3.0 family].
+
+40 layers, d_model 4096, 32 heads (head_dim 128), GQA kv=8, d_ff 12800,
+vocab 49155.
+"""
+from repro.configs.base import LycheeConfig, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="granite-3-8b",
+        arch_type="dense",
+        n_layers=40,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=12800,
+        vocab=49_155,
+        head_dim=128,
+        prelude=("attn", "attn"),
+        pattern=("attn",),
+        rope_theta=10_000_000.0,
+        tie_embeddings=True,
+        lychee=LycheeConfig(),
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=512, vocab=512, prelude=(),
+        lychee=LycheeConfig(budget=128, sink=4, buffer_size=16,
+                            max_coarse=8, full_attn_layers=0),
+    )
+
+
+register("granite-3-8b", full, reduced)

@@ -1,0 +1,39 @@
+"""InternVL2-2B [arXiv:2404.16821].
+
+InternLM2-1.8B language backbone: 24 layers, d_model 2048, 16 heads
+(head_dim 128), GQA kv=8, d_ff 8192, vocab 92553. The InternViT vision
+encoder + MLP projector is a STUB per the assignment carve-out:
+``input_specs`` feeds precomputed patch embeddings (n_patches × d_model)
+that are prepended to the token embeddings.
+"""
+from repro.configs.base import LycheeConfig, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-2b",
+        arch_type="vlm",
+        n_layers=24,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab=92_553,
+        head_dim=128,
+        prelude=("attn", "attn"),
+        pattern=("attn",),
+        n_patches=256,           # one 448x448 tile -> 256 projected patches
+        lychee=LycheeConfig(),
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=512, vocab=512, n_patches=16, prelude=(),
+        lychee=LycheeConfig(budget=128, sink=4, buffer_size=16,
+                            max_coarse=8, full_attn_layers=0),
+    )
+
+
+register("internvl2-2b", full, reduced)

@@ -1,0 +1,37 @@
+"""Llama-3.1-8B — the paper's own evaluation model (Team, 2024).
+
+Included beyond the assigned pool so the paper's experiments (LongBench V2 /
+RULER settings) have their native config. 32 layers, d_model 4096, 32 heads
+(head_dim 128), GQA kv=8, d_ff 14336, vocab 128256.
+"""
+from repro.configs.base import LycheeConfig, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llama31-8b",
+        arch_type="dense",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=14336,
+        vocab=128_256,
+        head_dim=128,
+        prelude=("attn", "attn"),   # paper keeps first 2 layers full
+        pattern=("attn",),
+        rope_theta=500_000.0,
+        lychee=LycheeConfig(),
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=512, vocab=512, prelude=(),
+        lychee=LycheeConfig(budget=128, sink=4, buffer_size=16,
+                            max_coarse=8, full_attn_layers=0),
+    )
+
+
+register("llama31-8b", full, reduced)

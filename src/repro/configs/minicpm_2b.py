@@ -1,0 +1,38 @@
+"""MiniCPM-2B [arXiv:2404.06395].
+
+Llama-like: 40 layers, d_model 2304, 36 heads (head_dim 64), MHA kv=36,
+d_ff 5760, vocab 122753. Trained with the WSD (warmup-stable-decay) schedule,
+which the training substrate implements.
+"""
+from repro.configs.base import LycheeConfig, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-2b",
+        arch_type="dense",
+        n_layers=40,
+        d_model=2304,
+        n_heads=36,
+        n_kv_heads=36,
+        d_ff=5760,
+        vocab=122_753,
+        head_dim=64,
+        prelude=("attn", "attn"),
+        pattern=("attn",),
+        lr_schedule="wsd",
+        tie_embeddings=True,
+        lychee=LycheeConfig(),
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+        d_ff=512, vocab=512, prelude=(),
+        lychee=LycheeConfig(budget=128, sink=4, buffer_size=16,
+                            max_coarse=8, full_attn_layers=0),
+    )
+
+
+register("minicpm-2b", full, reduced)

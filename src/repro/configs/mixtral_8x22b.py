@@ -1,0 +1,43 @@
+"""Mixtral-8x22B [arXiv:2401.04088].
+
+56 layers, d_model 6144, 48 heads (head_dim 128), GQA kv=8, MoE with 8
+experts (d_ff 16384) top-2, sliding-window attention, vocab 32768.
+"""
+from repro.configs.base import LycheeConfig, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b",
+        arch_type="moe",
+        n_layers=56,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=16384,
+        vocab=32_768,
+        head_dim=128,
+        prelude=("swa_moe", "swa_moe"),
+        pattern=("swa_moe",),
+        window=4096,
+        n_experts=8,
+        top_k=2,
+        d_ff_expert=16384,
+        rope_theta=1_000_000.0,
+        fsdp=True,
+        opt_state_dtype="bfloat16",
+        lychee=LycheeConfig(),
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=256, n_heads=8, n_kv_heads=2, head_dim=32,
+        d_ff=512, d_ff_expert=512, vocab=512, window=64, n_experts=4, prelude=(),
+        top_k=2, fsdp=False, opt_state_dtype="float32",
+        lychee=LycheeConfig(budget=128, sink=4, buffer_size=16,
+                            max_coarse=8, full_attn_layers=0),
+    )
+
+
+register("mixtral-8x22b", full, reduced)

@@ -1,0 +1,40 @@
+"""Whisper-small [arXiv:2212.04356].
+
+Encoder-decoder: 12 encoder + 12 decoder layers, d_model 768, 12 heads
+(head_dim 64), MHA, d_ff 3072, vocab 51865. The mel-spectrogram + conv
+frontend is a STUB per the assignment carve-out: ``input_specs`` feeds
+precomputed frame embeddings (n_audio_frames × d_model) to the encoder.
+LycheeCluster manages the decoder's self-attention cache.
+"""
+from repro.configs.base import LycheeConfig, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small",
+        arch_type="audio",
+        n_layers=12,               # decoder layers
+        n_enc_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        d_ff=3072,
+        vocab=51_865,
+        head_dim=64,
+        prelude=("dec_cross",),
+        pattern=("dec_cross",),
+        n_audio_frames=1500,
+        lychee=LycheeConfig(full_attn_layers=1),
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, n_enc_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
+        head_dim=64, d_ff=512, vocab=512, n_audio_frames=64,
+        lychee=LycheeConfig(budget=128, sink=4, buffer_size=16,
+                            max_coarse=8, full_attn_layers=0),
+    )
+
+
+register("whisper-small", full, reduced)

@@ -1,0 +1,34 @@
+"""xLSTM-125M [arXiv:2405.04517].
+
+12 blocks alternating mLSTM / sLSTM (the xLSTM[1:1] small configuration),
+d_model 768, 4 heads, vocab 50304. Attention-free: LycheeCluster is
+inapplicable (no KV cache) — see DESIGN.md §Arch-applicability.
+"""
+from repro.configs.base import LycheeConfig, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m",
+        arch_type="ssm",
+        n_layers=12,
+        d_model=768,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,                     # xLSTM blocks carry their own projections
+        vocab=50_304,
+        head_dim=192,
+        pattern=("mlstm", "slstm"),
+        ssm_expand=2,
+        lychee=LycheeConfig(enabled=False),
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+        vocab=512,
+    )
+
+
+register("xlstm-125m", full, reduced)

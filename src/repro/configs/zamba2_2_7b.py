@@ -1,0 +1,45 @@
+"""Zamba2-2.7B [arXiv:2411.15242].
+
+54 Mamba2 blocks with a single *shared* attention+MLP transformer block
+interleaved every 6th position (weights shared across all invocations).
+d_model 2560, 32 heads, d_ff 10240, ssm_state 64, vocab 32000.
+
+Hybrid: LycheeCluster manages the shared attention block's KV caches; the
+Mamba2 state is O(1) natively.
+"""
+from repro.configs.base import LycheeConfig, ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-2.7b",
+        arch_type="hybrid",
+        n_layers=54,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=10240,
+        vocab=32_000,
+        head_dim=80,
+        prelude=("mamba",) * 5 + ("shared_attn",),
+        pattern=("mamba", "mamba", "mamba", "mamba", "mamba", "shared_attn"),
+        ssm_state=64,
+        ssm_heads=80,            # (2*2560)/64 headdim -> 80 heads of 64
+        ssm_expand=2,
+        conv_width=4,
+        shared_attn_every=6,
+        lychee=LycheeConfig(full_attn_layers=1),
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+        d_ff=512, vocab=512, prelude=(), pattern=("mamba", "shared_attn"),
+        ssm_state=16, ssm_heads=8, lychee=LycheeConfig(
+            budget=128, sink=4, buffer_size=16, max_coarse=8,
+            full_attn_layers=0),
+    )
+
+
+register("zamba2-2.7b", full, reduced)

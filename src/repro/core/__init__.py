@@ -1,0 +1,20 @@
+"""LycheeCluster core: the paper's contribution as composable JAX modules."""
+from repro.core.attention import (full_decode_attention,
+                                  sparse_decode_attention)
+from repro.core.chunking import (byte_delimiter_table, chunk_sequence,
+                                 fixed_chunking, synthetic_delimiter_table)
+from repro.core.index import build_index
+from repro.core.kmeans import spherical_kmeans
+from repro.core.pooling import l2_normalize, pool_chunks
+from repro.core.retrieval import Retrieval, retrieve, retrieve_dense, ub_scores
+from repro.core.types import ChunkLayout, LycheeIndex, empty_index, index_dims
+from repro.core.update import lazy_update, maybe_lazy_update
+
+__all__ = [
+    "ChunkLayout", "LycheeIndex", "Retrieval", "build_index",
+    "byte_delimiter_table", "chunk_sequence", "empty_index",
+    "fixed_chunking", "full_decode_attention", "index_dims", "l2_normalize",
+    "lazy_update", "maybe_lazy_update", "pool_chunks", "retrieve",
+    "retrieve_dense", "sparse_decode_attention", "spherical_kmeans",
+    "synthetic_delimiter_table", "ub_scores",
+]

@@ -1,0 +1,331 @@
+"""Sparse exact attention over retrieved tokens (Algorithm 1 step 3).
+
+The active set per kv head is [attention sinks | retrieved chunk tokens |
+recent-token buffer] — the paper keeps ``sink``=16 initial tokens and a
+``buffer``=128 recent window always resident (App. A). Retrieved indices
+overlapping the sink/recent ranges are masked out so no position is counted
+twice in the softmax.
+
+This module is the pure-jnp implementation — the oracle for the Pallas
+``sparse_attention`` kernel and the path used on CPU. It serves both
+LycheeCluster and the baseline selectors (Quest/ClusterKV/StreamingLLM),
+which emit the same (token_idx, token_mask) interface.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LycheeConfig
+
+_NEG = -1e30
+
+
+def assemble_active_set(token_idx: jax.Array, token_mask: jax.Array,
+                        t, sink: int, buffer: int, n_ctx: int):
+    """Build the final gather list for one kv head.
+
+    token_idx/mask: (S,) retrieved positions; t: scalar current length.
+    Returns (idx (sink+S+buffer,), mask) with overlaps removed.
+    """
+    t = jnp.asarray(t, jnp.int32)
+    sink_idx = jnp.arange(sink, dtype=jnp.int32)
+    sink_mask = sink_idx < t
+    recent_idx = t - buffer + jnp.arange(buffer, dtype=jnp.int32)
+    recent_mask = recent_idx >= jnp.minimum(sink, t)
+    recent_idx = jnp.clip(recent_idx, 0, n_ctx - 1)
+    ret_mask = (token_mask & (token_idx >= sink)
+                & (token_idx < jnp.maximum(t - buffer, sink)))
+    idx = jnp.concatenate([sink_idx, token_idx, recent_idx])
+    mask = jnp.concatenate([sink_mask, ret_mask, recent_mask])
+    return jnp.clip(idx, 0, n_ctx - 1), mask
+
+
+def assemble_spans(ret_starts: jax.Array, ret_lens: jax.Array, t,
+                   cfg: LycheeConfig, max_chunk: int | None = None):
+    """Combine retrieved chunk spans with the sink span and recent-window
+    spans into one overlap-free span list (per kv head).
+
+    Layout of coverage (r0 = max_chunk-aligned start of the recent window):
+      [0, sink_len) sink | [sink, r0) retrieved (clipped) | [r0, t) recent.
+    Head/tail clipping keeps every position counted at most once in the
+    softmax. ret_starts/ret_lens: (H, S). Returns (starts (H, C), lens).
+    """
+    mc = max_chunk or cfg.max_chunk
+    t = jnp.asarray(t, jnp.int32)
+    r0 = jnp.maximum((t - cfg.buffer_size) // mc * mc, 0)
+    sink_len = jnp.minimum(jnp.int32(cfg.sink), r0)
+
+    # clip retrieved spans to [sink_len, r0)
+    s2 = jnp.maximum(ret_starts, sink_len)
+    l2 = jnp.clip(ret_lens - (s2 - ret_starts), 0, mc)
+    l2 = jnp.clip(jnp.minimum(l2, r0 - s2), 0, mc)
+
+    H = ret_starts.shape[0]
+    R = cfg.buffer_size // mc + 1
+    recent_s = r0 + jnp.arange(R, dtype=jnp.int32) * mc        # (R,)
+    recent_l = jnp.clip(t - recent_s, 0, mc)
+    sink_s = jnp.zeros((1,), jnp.int32)
+    sink_l = sink_len[None]
+
+    starts = jnp.concatenate(
+        [jnp.broadcast_to(sink_s, (H, 1)), s2,
+         jnp.broadcast_to(recent_s, (H, R))], axis=1)
+    lens = jnp.concatenate(
+        [jnp.broadcast_to(sink_l, (H, 1)), l2,
+         jnp.broadcast_to(recent_l, (H, R))], axis=1)
+    return starts, lens
+
+
+def sparse_span_attention(q, k_cache, v_cache, starts, lens, *,
+                          max_chunk: int = 16, scale: float = 1.0,
+                          softcap: float = 0.0) -> jax.Array:
+    """Production (GSPMD) span attention: same contract as
+    ``kernels.ref.sparse_chunk_attention_ref`` but keeps the gathered K/V
+    in the CACHE dtype (§Perf iteration 1c).
+
+    With the context dim sharded (decode_32k: 'model'), GSPMD lowers the
+    gathers to zero-filled per-shard partials + an all-reduce of the
+    gathered block — bf16 partials HALVE that all-reduce, which is the
+    dominant decode collective (measured 2×3.2 GiB/step on granite
+    decode_32k). Accuracy is preserved via f32 accumulation
+    (preferred_element_type), the MXU's native bf16-in/f32-acc mode.
+    """
+    B, Hkv, G, dk = q.shape
+    N = k_cache.shape[2]
+    C = starts.shape[-1]
+    offs = jnp.arange(max_chunk, dtype=jnp.int32)
+    tok = jnp.clip(starts[..., None], 0, N) + offs
+    mask = offs < jnp.clip(lens, 0, max_chunk)[..., None]
+    tok = jnp.clip(tok, 0, N - 1).reshape(B, Hkv, C * max_chunk)
+    mask = mask.reshape(B, Hkv, C * max_chunk)
+
+    k_sel = jnp.take_along_axis(k_cache, tok[..., None], axis=2)
+    v_sel = jnp.take_along_axis(v_cache, tok[..., None], axis=2)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", q.astype(k_sel.dtype), k_sel,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[:, :, None, :], logits, _NEG)
+    m = jnp.max(logits, -1, keepdims=True)
+    p = jnp.where(mask[:, :, None, :], jnp.exp(logits - m), 0.0)
+    den = jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgs,bhsd->bhgd", (p / den).astype(v_sel.dtype),
+                     v_sel, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _span_attend_partial(q, k_loc, v_loc, starts, lens, lo, hi, *,
+                         max_chunk: int, scale: float, softcap: float):
+    """Flash-style PARTIAL attention of one context shard.
+
+    q: (B, H, G, dk); k_loc/v_loc: (B, H, n_loc, d*) — the rows this shard
+    owns, covering global positions [lo, hi); starts/lens: (B, H, C)
+    GLOBAL span table (replicated across context shards). Rows outside
+    [lo, hi) are masked; the caller combines (m, l, acc) across shards.
+    Returns m (B,H,G,1) f32, l (B,H,G,1) f32, acc (B,H,G,dv) f32.
+    """
+    B, Hkv, G, dk = q.shape
+    n_loc = k_loc.shape[2]
+    C = starts.shape[-1]
+    offs = jnp.arange(max_chunk, dtype=jnp.int32)
+    row = starts[..., None] + offs                       # (B, H, C, mc) global
+    valid = offs < jnp.clip(lens, 0, max_chunk)[..., None]
+    mine = (row >= lo) & (row < hi)
+    tok = jnp.clip(row - lo, 0, n_loc - 1).reshape(B, Hkv, C * max_chunk)
+    mask = (valid & mine).reshape(B, Hkv, C * max_chunk)
+
+    k_sel = jnp.take_along_axis(k_loc, tok[..., None], axis=2)
+    v_sel = jnp.take_along_axis(v_loc, tok[..., None], axis=2)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", q.astype(k_sel.dtype), k_sel,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[:, :, None, :], logits, _NEG)
+    m = jnp.max(logits, -1, keepdims=True)               # (B,H,G,1)
+    p = jnp.where(mask[:, :, None, :], jnp.exp(logits - m), 0.0)
+    l = jnp.sum(p, -1, keepdims=True)
+    acc = jnp.einsum("bhgs,bhsd->bhgd", p.astype(v_sel.dtype), v_sel,
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def sparse_span_attention_ctxsharded(q, k_cache, v_cache, starts, lens,
+                                     ctx_axes, *, max_chunk: int = 16,
+                                     scale: float = 1.0,
+                                     softcap: float = 0.0) -> jax.Array:
+    """Context-sharded decode attention via shard_map flash-combine
+    (§Perf iteration 1d — a collective schedule the paper doesn't use).
+
+    GSPMD's gather-from-sharded-context lowers to zero-filled full-size
+    partials + an all-reduce of the ENTIRE gathered block (measured
+    2×3.2 GiB/step on granite decode_32k). Here each context shard attends
+    over the spans it OWNS (one local gather, no communication), and only
+    the online-softmax statistics (m, l, acc) — O(B·H·G·dv) bytes — are
+    combined across shards: the collective shrinks by ~S_sel·heads/dv ≈
+    three orders of magnitude. Identical math to the oracle (exact
+    max-shifted combine, not an approximation).
+
+    q: (B, Hkv, G, dk); k_cache/v_cache: (B, Hkv, N, d*) sharded over
+    ``ctx_axes`` on dim 2 (and optionally batch-sharded on dim 0);
+    starts/lens: (B, Hkv, C) global span table.
+    """
+    from repro.sharding.ctx import batch_axes, current_mesh, \
+        is_context_parallel
+    shard_map = jax.shard_map
+    mesh = current_mesh()
+    P = jax.sharding.PartitionSpec
+    baxes = None if is_context_parallel() else batch_axes()
+    B = q.shape[0]
+    bspec = baxes if (baxes and B % _axes_size(mesh, baxes) == 0) else None
+
+    qs = P(bspec, None, None, None)
+    kvs = P(bspec, None, ctx_axes, None)
+    sp = P(bspec, None, None)
+
+    n_shards = _axes_size(mesh, ctx_axes)
+    shard_n = k_cache.shape[2] // n_shards
+
+    def body(q_l, k_l, v_l, st_l, ln_l):
+        # linear index of this shard along the (possibly multi-axis) ctx
+        idx = jnp.zeros((), jnp.int32)
+        for ax in (ctx_axes if isinstance(ctx_axes, tuple) else (ctx_axes,)):
+            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+        lo = idx * shard_n
+        m, l, acc = _span_attend_partial(
+            q_l, k_l, v_l, st_l, ln_l, lo, lo + shard_n,
+            max_chunk=max_chunk, scale=scale, softcap=softcap)
+        # exact flash combine across context shards
+        m_g = jax.lax.pmax(m, ctx_axes)
+        alpha = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * alpha, ctx_axes)
+        acc_g = jax.lax.psum(acc * alpha, ctx_axes)
+        return (acc_g / jnp.maximum(l_g, 1e-30)).astype(q_l.dtype)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(qs, kvs, kvs, sp, sp),
+                   out_specs=qs)
+    return fn(q, k_cache, v_cache, starts, lens)
+
+
+def full_decode_attention_ctxsharded(q, k_cache, v_cache, t, ctx_axes, *,
+                                     scale: float, softcap: float = 0.0):
+    """Dense (full-attention) decode over a context-sharded cache via the
+    same shard_map flash-combine as the sparse path (§Perf iteration 4).
+
+    The GSPMD dense path materialises the (B, H, G, N) f32 logits of the
+    WHOLE cache per step (minicpm decode_32k: 15 GiB/device at B=128,
+    36 heads); here each shard computes logits over its local slab and
+    only (m, l, acc) stats cross shards. q: (B, Hq, dk); caches
+    (B, Hkv, N, d*) sharded over ``ctx_axes`` on dim 2. Returns (B, Hq, dv).
+    """
+    from repro.sharding.ctx import batch_axes, current_mesh, \
+        is_context_parallel
+    mesh = current_mesh()
+    P = jax.sharding.PartitionSpec
+    B, Hq, dk = q.shape
+    Hkv, N = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    baxes = None if is_context_parallel() else batch_axes()
+    bspec = baxes if (baxes and B % _axes_size(mesh, baxes) == 0) else None
+    qs = P(bspec, None, None)
+    kvs = P(bspec, None, ctx_axes, None)
+    n_shards = _axes_size(mesh, ctx_axes)
+    shard_n = N // n_shards
+    tt = jnp.asarray(t, jnp.int32)
+
+    def body(q_l, k_l, v_l):
+        idx = jnp.zeros((), jnp.int32)
+        for ax in (ctx_axes if isinstance(ctx_axes, tuple) else (ctx_axes,)):
+            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+        lo = idx * shard_n
+        pos = lo + jnp.arange(shard_n, dtype=jnp.int32)
+        mask = pos < tt                                    # (n_loc,)
+        B_l = q_l.shape[0]                                 # batch LOCAL shape
+        qg = q_l.reshape(B_l, Hkv, G, dk)
+        logits = jnp.einsum("bhgd,bhnd->bhgn", qg.astype(k_l.dtype), k_l,
+                            preferred_element_type=jnp.float32) * scale
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        logits = jnp.where(mask[None, None, None, :], logits, _NEG)
+        m = jnp.max(logits, -1, keepdims=True)
+        p = jnp.where(mask[None, None, None, :],
+                      jnp.exp(logits - m), 0.0)
+        l = jnp.sum(p, -1, keepdims=True)
+        acc = jnp.einsum("bhgn,bhnd->bhgd", p.astype(v_l.dtype), v_l,
+                         preferred_element_type=jnp.float32)
+        m_g = jax.lax.pmax(m, ctx_axes)
+        alpha = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * alpha, ctx_axes)
+        acc_g = jax.lax.psum(acc * alpha, ctx_axes)
+        out = acc_g / jnp.maximum(l_g, 1e-30)
+        return out.reshape(B_l, Hq, -1).astype(q_l.dtype)
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(qs, kvs, kvs),
+                       out_specs=qs)
+    return fn(q, k_cache, v_cache)
+
+
+def _axes_size(mesh, axes) -> int:
+    if axes is None or mesh is None:
+        return 1
+    s = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        s *= mesh.shape[a]
+    return s
+
+
+def attend_gathered(q: jax.Array, k_sel: jax.Array, v_sel: jax.Array,
+                    mask: jax.Array, scale: float,
+                    softcap: float = 0.0) -> jax.Array:
+    """q: (G, d) query group; k_sel/v_sel: (S, dk)/(S, dv); mask: (S,)."""
+    logits = (q @ k_sel.T) * scale                    # (G, S)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[None, :], logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(mask[None, :], w, 0.0)              # all-masked safety
+    return w @ v_sel
+
+
+def sparse_decode_attention(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, token_idx: jax.Array,
+                            token_mask: jax.Array, t, cfg: LycheeConfig,
+                            scale: float, softcap: float = 0.0) -> jax.Array:
+    """One decode step of budgeted sparse attention.
+
+    q: (Hq, dk); k_cache: (Hkv, N, dk); v_cache: (Hkv, N, dv);
+    token_idx/mask: (Hkv, S). Returns (Hq, dv).
+    """
+    Hq, dk = q.shape
+    Hkv, N, _ = k_cache.shape
+    G = Hq // Hkv
+    qg = q.reshape(Hkv, G, dk)
+
+    def per_head(h):
+        idx, mask = assemble_active_set(token_idx[h], token_mask[h], t,
+                                        cfg.sink, cfg.buffer_size, N)
+        k_sel = k_cache[h][idx]
+        v_sel = v_cache[h][idx]
+        return attend_gathered(qg[h], k_sel, v_sel, mask, scale, softcap)
+
+    out = jax.vmap(per_head)(jnp.arange(Hkv))         # (Hkv, G, dv)
+    return out.reshape(Hq, -1)
+
+
+def full_decode_attention(q: jax.Array, k_cache: jax.Array,
+                          v_cache: jax.Array, t, scale: float,
+                          softcap: float = 0.0) -> jax.Array:
+    """Dense reference: attends to all positions < t. Same signature family."""
+    Hq, dk = q.shape
+    Hkv, N, dv = v_cache.shape
+    G = Hq // Hkv
+    qg = q.reshape(Hkv, G, dk)
+    mask = jnp.arange(N) < jnp.asarray(t, jnp.int32)
+    logits = jnp.einsum("hgd,hnd->hgn", qg, k_cache) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[None, None, :], logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hgn,hnd->hgd", w, v_cache)
+    return out.reshape(Hq, dv)

@@ -1,0 +1,138 @@
+"""Baseline sparse-attention selectors the paper compares against (§5.1).
+
+All emit the same ``(token_idx, token_mask)`` per-kv-head interface as
+:mod:`repro.core.retrieval`, so they share the exact-attention executor and
+the Pallas kernel — the comparison isolates the *selection* policy, exactly
+like the paper's pilot study holds the scoring metric fixed.
+
+* Quest (Tang et al., 2024): fixed-size pages with per-page min/max key
+  statistics; page score = Σ_d max(q_d·min_d, q_d·max_d) (their Eq. 3 upper
+  bound); top-(budget/page) pages retrieved.
+* ClusterKV (Liu et al., 2025a): token-level spherical k-means in semantic
+  space; clusters ranked by qᵀμ; tokens of the top clusters retrieved until
+  the budget is filled.
+* StreamingLLM (Xiao et al., 2024): sinks + sliding window only (an
+  eviction-style lower bound — selection returns nothing extra).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LycheeConfig
+from repro.core.kmeans import spherical_kmeans
+from repro.core.pooling import l2_normalize
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Quest
+# ---------------------------------------------------------------------------
+class QuestIndex(NamedTuple):
+    kmin: jax.Array   # (H, Pg, d) per-page elementwise min of keys
+    kmax: jax.Array   # (H, Pg, d)
+    valid: jax.Array  # (H, Pg)
+    page: int
+
+
+def build_quest(keys: jax.Array, page: int = 16, n_tokens=None) -> QuestIndex:
+    """keys: (H, N, d). Pages are fixed [i*page, (i+1)*page) ranges."""
+    H, N, d = keys.shape
+    Pg = (N + page - 1) // page
+    pad = Pg * page - N
+    kp = jnp.pad(keys, ((0, 0), (0, pad), (0, 0)))
+    t = jnp.int32(N) if n_tokens is None else jnp.asarray(n_tokens, jnp.int32)
+    pos = jnp.arange(Pg * page)
+    tmask = (pos < t).reshape(Pg, page)
+    kp = kp.reshape(H, Pg, page, d)
+    big = jnp.where(tmask[None, :, :, None], kp, jnp.inf)
+    small = jnp.where(tmask[None, :, :, None], kp, -jnp.inf)
+    kmin = jnp.min(big, axis=2)
+    kmax = jnp.max(small, axis=2)
+    valid = jnp.any(tmask, axis=1)[None].repeat(H, 0)
+    kmin = jnp.where(valid[..., None], kmin, 0.0)
+    kmax = jnp.where(valid[..., None], kmax, 0.0)
+    return QuestIndex(kmin=kmin, kmax=kmax, valid=valid, page=page)
+
+
+def quest_select(qidx: QuestIndex, probe: jax.Array, budget: int):
+    """probe: (H, d). Returns (token_idx (H, S), token_mask)."""
+    H, Pg, d = qidx.kmin.shape
+    page = qidx.page
+    k_pages = max(1, min(budget // page, Pg))
+
+    def per_head(h):
+        q = probe[h]
+        score = jnp.sum(jnp.maximum(q * qidx.kmin[h], q * qidx.kmax[h]), -1)
+        score = jnp.where(qidx.valid[h], score, _NEG)
+        top_s, top_p = jax.lax.top_k(score, k_pages)
+        pmask = top_s > _NEG / 2
+        tok = (top_p[:, None] * page
+               + jnp.arange(page, dtype=jnp.int32)).reshape(-1)
+        mask = jnp.repeat(pmask, page)
+        return tok, mask
+
+    return jax.vmap(per_head)(jnp.arange(H))
+
+
+# ---------------------------------------------------------------------------
+# ClusterKV
+# ---------------------------------------------------------------------------
+class ClusterKVIndex(NamedTuple):
+    centroid: jax.Array   # (H, C, d)
+    valid: jax.Array      # (H, C)
+    members: jax.Array    # (H, C, cap) token ids, -1 pad
+    nmember: jax.Array    # (H, C)
+
+
+def build_clusterkv(keys: jax.Array, tokens_per_cluster: int = 32,
+                    cap_factor: int = 4, iters: int = 10,
+                    n_tokens=None) -> ClusterKVIndex:
+    """Token-granular spherical clustering. keys: (H, N, d)."""
+    from repro.core.index import build_member_lists
+    H, N, d = keys.shape
+    C = max(1, N // tokens_per_cluster)
+    cap = tokens_per_cluster * cap_factor
+    t = jnp.int32(N) if n_tokens is None else jnp.asarray(n_tokens, jnp.int32)
+    mask = jnp.arange(N) < t
+    kn = l2_normalize(keys) * mask[None, :, None]
+
+    def per_head(kh):
+        km = spherical_kmeans(kh, mask, C, iters)
+        members, nm = build_member_lists(km.assign, mask, C, cap)
+        return km.centroid, km.valid, members, nm
+
+    cent, valid, members, nm = jax.vmap(per_head)(kn)
+    return ClusterKVIndex(centroid=cent, valid=valid, members=members,
+                          nmember=nm)
+
+
+def clusterkv_select(cidx: ClusterKVIndex, probe: jax.Array, budget: int,
+                     tokens_per_cluster: int = 32):
+    H, C, d = cidx.centroid.shape
+    cap = cidx.members.shape[-1]
+    k_cl = max(1, min(budget // tokens_per_cluster, C))
+
+    def per_head(h):
+        score = jnp.einsum("cd,d->c", cidx.centroid[h], probe[h])
+        score = jnp.where(cidx.valid[h], score, _NEG)
+        top_s, top_c = jax.lax.top_k(score, k_cl)
+        cmask = top_s > _NEG / 2
+        tok = cidx.members[h][top_c].reshape(-1)
+        mask = (tok >= 0) & jnp.repeat(cmask, cap)
+        return jnp.maximum(tok, 0), mask
+
+    return jax.vmap(per_head)(jnp.arange(H))
+
+
+# ---------------------------------------------------------------------------
+# StreamingLLM (sink + window only)
+# ---------------------------------------------------------------------------
+def streaming_select(H: int, cfg: LycheeConfig):
+    """Retrieves nothing: active set = sinks + recent buffer only."""
+    tok = jnp.zeros((H, 1), jnp.int32)
+    mask = jnp.zeros((H, 1), bool)
+    return tok, mask

@@ -1,0 +1,148 @@
+"""Structure-aware chunking (paper §4.3, App. B).
+
+The algorithm accumulates tokens greedily; once ``min_chunk`` tokens have
+accumulated it searches the look-ahead window (up to ``max_chunk``) for the
+*highest-priority* natural delimiter and splits right after it. If none is
+found, a forced split at ``max_chunk`` is applied — so on delimiter-free
+(minified/adversarial) input the method degrades to fixed-size chunking,
+exactly as App. B promises.
+
+Delimiters follow the paper's 4-level hierarchy (Table 4):
+  Level 1 (strength 4): structural — paragraph breaks, ``}`` ``]`` ``>``,
+  markdown fences; Level 2 (strength 3): sentence terminators ``. ? !`` and
+  single newlines; Level 3 (strength 2): phrasal ``, ; :``; Level 4
+  (strength 1): whitespace. Strength 0 = not a delimiter.
+
+Everything is jit-compatible: the chunk loop is a ``lax.fori_loop`` over M
+static chunk slots, each step doing a tiny static-width window scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LycheeConfig
+from repro.core.types import ChunkLayout
+
+# ---------------------------------------------------------------------------
+# Delimiter tables
+# ---------------------------------------------------------------------------
+
+_BYTE_LEVELS = {
+    # Level-1: structural
+    **{ord(c): 4 for c in "}])>"},
+    # Level-2: sentence terminators + newline
+    **{ord(c): 3 for c in ".?!\n"},
+    # Level-3: phrasal
+    **{ord(c): 2 for c in ",;:"},
+    # Level-4: whitespace
+    **{ord(c): 1 for c in " \t"},
+}
+
+
+def byte_delimiter_table() -> np.ndarray:
+    """Priority strengths for a byte-level tokenizer (used by the toy model
+    and the benchmarks; real deployments supply a table for their tokenizer)."""
+    t = np.zeros(256, dtype=np.int32)
+    for b, s in _BYTE_LEVELS.items():
+        t[b] = s
+    return t
+
+
+def synthetic_delimiter_table(vocab: int, delim_frac: float = 0.12,
+                              seed: int = 0) -> np.ndarray:
+    """Deterministic pseudo-delimiter table for synthetic token streams.
+
+    Marks ``delim_frac`` of ids as delimiters with strengths distributed
+    like natural text (whitespace ≫ phrasal ≫ sentence ≫ structural). Used
+    by the dry-run input specs and synthetic benchmarks.
+    """
+    rng = np.random.default_rng(seed)
+    t = np.zeros(vocab, dtype=np.int32)
+    n = int(vocab * delim_frac)
+    ids = rng.choice(vocab, size=n, replace=False)
+    strengths = rng.choice([1, 2, 3, 4], size=n, p=[0.5, 0.25, 0.15, 0.1])
+    t[ids] = strengths
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Chunking
+# ---------------------------------------------------------------------------
+
+def chunk_sequence(tokens: jax.Array, table: jax.Array,
+                   cfg: LycheeConfig, n_tokens=None) -> ChunkLayout:
+    """Segment ``tokens`` (N,) into variable-length chunks.
+
+    ``n_tokens`` (scalar, optional) allows right-padding: positions >=
+    n_tokens are ignored. Returns a :class:`ChunkLayout` with M =
+    ceil(N / min_chunk) static slots.
+    """
+    N = tokens.shape[0]
+    if n_tokens is None:
+        n_tokens = jnp.int32(N)
+    n_tokens = jnp.asarray(n_tokens, jnp.int32)
+    M = max(1, (N + cfg.min_chunk - 1) // cfg.min_chunk)
+    W = cfg.max_chunk - cfg.min_chunk + 1   # look-ahead window width
+
+    strength = table[tokens]                       # (N,)
+    # pad so dynamic_slice at the tail is safe
+    pad = jnp.zeros((cfg.max_chunk,), strength.dtype)
+    strength_p = jnp.concatenate([strength, pad])
+
+    def body(i, state):
+        start, starts, lengths = state
+        # window of candidate split lengths: min_chunk .. max_chunk
+        # position of a length-l split's last token: start + l - 1
+        win = jax.lax.dynamic_slice(
+            strength_p, (start + cfg.min_chunk - 1,), (W,))      # (W,)
+        best = jnp.max(win)
+        # earliest occurrence of the highest strength
+        off = jnp.argmax(win == best)
+        length = jnp.where(best > 0, cfg.min_chunk + off, cfg.max_chunk)
+        # clip the final chunk to the sequence end
+        length = jnp.minimum(length, jnp.maximum(n_tokens - start, 0))
+        starts = starts.at[i].set(start)
+        lengths = lengths.at[i].set(length)
+        return (start + length, starts, lengths)
+
+    start0 = jnp.int32(0)
+    starts0 = jnp.zeros((M,), jnp.int32)
+    lengths0 = jnp.zeros((M,), jnp.int32)
+    _, starts, lengths = jax.lax.fori_loop(
+        0, M, body, (start0, starts0, lengths0))
+
+    valid = lengths > 0
+    count = jnp.sum(valid.astype(jnp.int32))
+
+    # token -> chunk segment ids: 1 at each chunk start, cumsum - 1
+    onehot = jnp.zeros((N,), jnp.int32)
+    onehot = onehot.at[jnp.where(valid, starts, N)].add(
+        valid.astype(jnp.int32), mode="drop")
+    seg_id = jnp.cumsum(onehot) - 1
+    seg_id = jnp.clip(seg_id, 0, M - 1)
+
+    return ChunkLayout(start=starts, length=lengths, valid=valid,
+                       seg_id=seg_id, count=count)
+
+
+def fixed_chunking(N: int, size: int, cfg: LycheeConfig,
+                   n_tokens=None) -> ChunkLayout:
+    """Fixed-size chunking baseline (ablation, Fig. 6 / pilot study Fig. 2).
+
+    Uses the same static M = ceil(N / min_chunk) slot count as
+    :func:`chunk_sequence` so downstream shapes match.
+    """
+    if n_tokens is None:
+        n_tokens = jnp.int32(N)
+    n_tokens = jnp.asarray(n_tokens, jnp.int32)
+    M = max(1, (N + cfg.min_chunk - 1) // cfg.min_chunk)
+    idx = jnp.arange(M, dtype=jnp.int32)
+    starts = idx * size
+    lengths = jnp.clip(n_tokens - starts, 0, size)
+    valid = lengths > 0
+    seg_id = jnp.minimum(jnp.arange(N, dtype=jnp.int32) // size, M - 1)
+    return ChunkLayout(start=starts, length=lengths, valid=valid,
+                       seg_id=seg_id,
+                       count=jnp.sum(valid.astype(jnp.int32)))

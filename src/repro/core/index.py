@@ -1,0 +1,84 @@
+"""Hierarchical KV index construction (paper §4.3, Algorithm 1 phase 1).
+
+Bottom-up build: pooled chunk keys -> spherical k-means into L fine clusters
+(avg ``avg_chunks_per_cluster`` chunks each) -> the L centroids re-clustered
+into P <= 64 coarse units. Membership lists (fine -> chunks, coarse -> fine)
+are materialised as fixed-capacity index arrays so decode-time traversal is
+pure gathers (TPU adaptation, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LycheeConfig
+from repro.core.chunking import ChunkLayout
+from repro.core.kmeans import spherical_kmeans
+from repro.core.pooling import pool_chunks
+from repro.core.types import LycheeIndex, index_dims
+
+
+def build_member_lists(assign: jax.Array, mask: jax.Array, L: int,
+                       cap: int) -> Tuple[jax.Array, jax.Array]:
+    """Invert an assignment vector into fixed-capacity membership lists.
+
+    assign: (M,) int32 parent ids in [0, L); mask: (M,) bool.
+    Returns (lists (L, cap) int32 with -1 padding, counts (L,) int32).
+    Members beyond ``cap`` are dropped (counted in ``counts`` though, so
+    callers can monitor overflow).
+    """
+    M = assign.shape[0]
+    parked = jnp.where(mask, assign, L)
+    order = jnp.argsort(parked)                  # stable, groups members
+    sorted_parent = parked[order]
+    counts_full = jax.ops.segment_sum(
+        jnp.ones((M,), jnp.int32), parked, num_segments=L + 1)
+    starts = jnp.cumsum(counts_full) - counts_full          # (L+1,)
+    rank = jnp.arange(M, dtype=jnp.int32) - starts[sorted_parent]
+    keep = (sorted_parent < L) & (rank < cap)
+    lists = jnp.full((L, cap), -1, jnp.int32)
+    lists = lists.at[
+        jnp.where(keep, sorted_parent, L),
+        jnp.where(keep, rank, 0)].set(order.astype(jnp.int32), mode="drop")
+    return lists, counts_full[:L]
+
+
+def build_index(keys: jax.Array, layout: ChunkLayout, cfg: LycheeConfig,
+                chunk_cap: int = 6, n_tokens=None) -> LycheeIndex:
+    """Build the three-tier index for one (layer, batch element).
+
+    keys: (H, N, d) token keys. Returns a :class:`LycheeIndex`.
+    """
+    H, N, d = keys.shape
+    M, L, P, CC, FC = index_dims(N, cfg, chunk_cap)
+
+    chunk_key = pool_chunks(keys, layout, M, cfg.pooling, n_tokens)  # (H,M,d)
+
+    def per_head(ck):
+        fine = spherical_kmeans(ck, layout.valid, L, cfg.kmeans_iters)
+        fine_chunks, fine_nch = build_member_lists(
+            fine.assign, layout.valid, L, CC)
+        coarse = spherical_kmeans(fine.centroid * fine.valid[:, None],
+                                  fine.valid, P, cfg.kmeans_iters)
+        children, nchild = build_member_lists(
+            coarse.assign, fine.valid, P, FC)
+        return (fine.centroid, fine.radius, fine.size, fine.valid,
+                fine_chunks, fine_nch,
+                coarse.centroid, coarse.radius, coarse.size, coarse.valid,
+                children, nchild, coarse.assign)
+
+    (f_cent, f_rad, f_size, f_valid, f_chunks, f_nch,
+     c_cent, c_rad, c_size, c_valid, c_children, c_nchild,
+     fine2coarse) = jax.vmap(per_head)(chunk_key)
+
+    return LycheeIndex(
+        chunk_key=chunk_key,
+        chunk_start=layout.start, chunk_len=layout.length,
+        chunk_valid=layout.valid, chunk_count=layout.count,
+        fine_centroid=f_cent, fine_radius=f_rad, fine_size=f_size,
+        fine_valid=f_valid, fine_chunks=f_chunks, fine_nchunks=f_nch,
+        coarse_centroid=c_cent, coarse_radius=c_rad, coarse_size=c_size,
+        coarse_valid=c_valid, coarse_children=c_children,
+        coarse_nchild=c_nchild, fine2coarse=fine2coarse)

@@ -1,0 +1,71 @@
+"""Spherical k-means (Hornik et al., 2012) — paper §4.3.
+
+Inner-product assignment over unit-norm points, fixed iteration count
+(App. A: 10 iterations; init "has negligible impact", so we use a
+deterministic strided init which is reproducible and jit-friendly).
+Centroids are re-normalised each step; covering radii are the max Euclidean
+distance from the centroid to any member (paper Eqn. 2 slack term).
+
+Shapes are static: invalid points (mask=False) never contribute; empty
+clusters keep their previous centroid and get radius 0 / valid=False.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pooling import l2_normalize
+
+
+class KMeansResult(NamedTuple):
+    centroid: jax.Array     # (L, d) unit-norm
+    radius: jax.Array       # (L,)
+    assign: jax.Array       # (M,) int32 cluster id per point
+    size: jax.Array         # (L,) int32 member count
+    valid: jax.Array        # (L,) bool
+
+
+def spherical_kmeans(points: jax.Array, mask: jax.Array, L: int,
+                     iters: int = 10) -> KMeansResult:
+    """points: (M, d) unit-norm (invalid rows are zero); mask: (M,) bool."""
+    M, d = points.shape
+    # deterministic strided init over the (padded) point list: centroids
+    # start at every (M // L)-th point. Invalid seeds are fine — they die
+    # out after the first assignment step.
+    stride = max(1, M // L)
+    init_idx = (jnp.arange(L) * stride) % M
+    cent0 = points[init_idx]
+    # avoid all-zero seed centroids (degenerate dot products)
+    cent0 = jnp.where(jnp.sum(cent0 * cent0, -1, keepdims=True) > 0.5,
+                      cent0, l2_normalize(jnp.ones((L, d), points.dtype)))
+
+    neg = jnp.asarray(-1e30, points.dtype)
+
+    def step(cent, _):
+        sim = points @ cent.T                         # (M, L)
+        assign = jnp.argmax(sim, axis=-1).astype(jnp.int32)
+        assign_safe = jnp.where(mask, assign, L)      # park invalid in slot L
+        s = jax.ops.segment_sum(points, assign_safe, num_segments=L + 1)[:L]
+        cnt = jax.ops.segment_sum(mask.astype(points.dtype), assign_safe,
+                                  num_segments=L + 1)[:L]
+        new = l2_normalize(s)
+        cent = jnp.where(cnt[:, None] > 0, new, cent)
+        return cent, None
+
+    cent, _ = jax.lax.scan(step, cent0, None, length=iters)
+
+    sim = points @ cent.T
+    assign = jnp.argmax(sim, axis=-1).astype(jnp.int32)
+    assign_safe = jnp.where(mask, assign, L)
+    size = jax.ops.segment_sum(
+        mask.astype(jnp.int32), assign_safe, num_segments=L + 1)[:L]
+    # covering radius: max_{member} ||p - mu||
+    dist = jnp.linalg.norm(points - cent[assign], axis=-1)
+    dist = jnp.where(mask, dist, neg)
+    radius = jax.ops.segment_max(dist, assign_safe, num_segments=L + 1)[:L]
+    radius = jnp.where(size > 0, radius, 0.0).astype(points.dtype)
+    return KMeansResult(centroid=cent, radius=radius,
+                        assign=jnp.where(mask, assign, 0),
+                        size=size, valid=size > 0)

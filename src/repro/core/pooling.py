@@ -1,0 +1,55 @@
+"""Chunk representative keys (paper §4.1, §4.3, Table 3 ablation).
+
+Mean pooling over each chunk's token keys followed by L2 normalisation
+("the geometric centroid of the chunk on the unit sphere"), with a max-pool
+variant for the Table-3 ablation. The Pallas fast path lives in
+``repro.kernels.chunk_pool``; this module is the pure-jnp implementation
+used as its oracle and as the general fallback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ChunkLayout
+
+_EPS = 1e-6
+
+
+def l2_normalize(x: jax.Array, axis: int = -1) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.sum(x * x, axis=axis, keepdims=True) + _EPS)
+
+
+def pool_chunks(keys: jax.Array, layout: ChunkLayout, M: int,
+                pooling: str = "mean", n_tokens=None) -> jax.Array:
+    """Pool token keys into chunk representative keys.
+
+    keys: (..., N, d) — arbitrary leading dims (e.g. kv heads).
+    Returns (..., M, d), L2-normalised; padding chunks are zero.
+    """
+    N = keys.shape[-2]
+    seg = layout.seg_id                                   # (N,)
+    token_valid = jnp.arange(N) < (jnp.int32(N) if n_tokens is None
+                                   else jnp.asarray(n_tokens, jnp.int32))
+    seg_safe = jnp.where(token_valid, seg, M)             # dump pad into slot M
+
+    def _pool(k2d):                                       # (N, d) -> (M, d)
+        if pooling == "mean":
+            s = jax.ops.segment_sum(k2d, seg_safe, num_segments=M + 1)
+            cnt = jax.ops.segment_sum(
+                jnp.ones((N, 1), k2d.dtype), seg_safe, num_segments=M + 1)
+            pooled = s / jnp.maximum(cnt, 1.0)
+        elif pooling == "max":
+            pooled = jax.ops.segment_max(
+                jnp.where(token_valid[:, None], k2d, -jnp.inf),
+                seg_safe, num_segments=M + 1)
+            pooled = jnp.where(jnp.isfinite(pooled), pooled, 0.0)
+        else:
+            raise ValueError(f"unknown pooling {pooling!r}")
+        return pooled[:M]
+
+    flat = keys.reshape((-1,) + keys.shape[-2:])
+    pooled = jax.vmap(_pool)(flat)
+    pooled = l2_normalize(pooled)
+    pooled = jnp.where(layout.valid[:, None], pooled, 0.0)
+    return pooled.reshape(keys.shape[:-2] + (M, keys.shape[-1]))

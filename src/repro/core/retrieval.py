@@ -1,0 +1,146 @@
+"""Top-down pruning retrieval (paper §4.4, Algorithm 1 steps 1-2).
+
+Score upper bound (Eqn. 2):  UB(q, u) = qᵀμ_u + ‖q‖₂ · r_u.
+
+Coarse level: score all P units (one small matvec per kv head), keep top-k_g.
+Fine level: gather ONLY the children lists of the surviving units (static
+(k_g · FC) candidates) and keep top-k_c. Chunk level: the selected clusters'
+member chunks expand into token indices. All shapes static; padding is
+masked to -inf before every top-k. ``retrieve_dense`` scores every fine
+cluster (no coarse pruning) — it is the exactness oracle for the capped
+child lists and the ClusterKV-style single-level comparison point.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LycheeConfig
+from repro.core.types import LycheeIndex
+
+_NEG = -1e30
+
+
+class Retrieval(NamedTuple):
+    token_idx: jax.Array    # (H, S) int32 gathered token positions
+    token_mask: jax.Array   # (H, S) bool
+    fine_ids: jax.Array     # (H, kc) selected fine clusters (for stability
+    fine_mask: jax.Array    # (H, kc)  metrics, Fig. 9)
+    coarse_ids: jax.Array   # (H, kg)
+
+
+def ub_scores(q: jax.Array, centroid: jax.Array, radius: jax.Array,
+              valid: jax.Array) -> jax.Array:
+    """UB(q, u) per Eqn. 2. q: (d,), centroid: (n, d), radius/valid: (n,)."""
+    qn = jnp.linalg.norm(q)
+    s = centroid @ q + qn * radius
+    return jnp.where(valid, s, _NEG)
+
+
+def _expand_tokens(index: LycheeIndex, head: int, fine_ids: jax.Array,
+                   fine_mask: jax.Array, max_chunk: int):
+    """fine cluster ids (kc,) -> token indices (kc * CC * max_chunk,)."""
+    CC = index.fine_chunks.shape[-1]
+    chunks = index.fine_chunks[head][fine_ids]              # (kc, CC)
+    cmask = (chunks >= 0) & fine_mask[:, None]
+    chunks_safe = jnp.maximum(chunks, 0)
+    start = index.chunk_start[chunks_safe]                  # (kc, CC)
+    length = jnp.where(cmask, index.chunk_len[chunks_safe], 0)
+    offs = jnp.arange(max_chunk, dtype=jnp.int32)
+    tok = start[..., None] + offs                           # (kc, CC, mc)
+    tmask = offs < length[..., None]
+    return tok.reshape(-1), tmask.reshape(-1)
+
+
+def retrieve(index: LycheeIndex, probe: jax.Array, cfg: LycheeConfig,
+             budget: int | None = None) -> Retrieval:
+    """Hierarchical retrieval for one (layer, batch element).
+
+    probe: (H, d) one query probe per kv head (GQA group mean).
+    """
+    H, d = probe.shape
+    kg = cfg.top_kg
+    kc = cfg.top_kc(budget)
+    FC = index.coarse_children.shape[-1]
+
+    def per_head(h):
+        q = probe[h]
+        # ---- Step 1: coarse-level pruning ------------------------------
+        sg = ub_scores(q, index.coarse_centroid[h], index.coarse_radius[h],
+                       index.coarse_valid[h])
+        _, top_g = jax.lax.top_k(sg, min(kg, sg.shape[0]))          # (kg,)
+        # ---- Step 2: fine-level pruning over gathered children ---------
+        cand = index.coarse_children[h][top_g].reshape(-1)          # (kg*FC,)
+        cmask = cand >= 0
+        cand_safe = jnp.maximum(cand, 0)
+        mu = index.fine_centroid[h][cand_safe]
+        rr = index.fine_radius[h][cand_safe]
+        vv = index.fine_valid[h][cand_safe] & cmask
+        sc = ub_scores(q, mu, rr, vv)
+        k_eff = min(kc, sc.shape[0])
+        top_s, top_i = jax.lax.top_k(sc, k_eff)
+        fine_ids = cand_safe[top_i]
+        fine_mask = top_s > _NEG / 2
+        if k_eff < kc:  # pad to static kc
+            fine_ids = jnp.pad(fine_ids, (0, kc - k_eff))
+            fine_mask = jnp.pad(fine_mask, (0, kc - k_eff))
+        # ---- Step 3 prep: expand chunks into token indices -------------
+        tok, tmask = _expand_tokens(index, h, fine_ids, fine_mask,
+                                    cfg.max_chunk)
+        return tok, tmask, fine_ids, fine_mask, top_g
+
+    tok, tmask, fids, fmask, gids = jax.vmap(per_head)(jnp.arange(H))
+    return Retrieval(token_idx=tok, token_mask=tmask, fine_ids=fids,
+                     fine_mask=fmask, coarse_ids=gids)
+
+
+def retrieve_spans(index: LycheeIndex, probe: jax.Array, cfg: LycheeConfig,
+                   budget: int | None = None):
+    """Like :func:`retrieve` but emits CHUNK SPANS — the TPU-native active-set
+    form consumed by the Pallas sparse-attention kernel (each span is one
+    contiguous DMA). Returns (starts (H, kc*CC), lens (H, kc*CC), ret).
+    """
+    ret = retrieve(index, probe, cfg, budget)
+    H, kc = ret.fine_ids.shape
+    CC = index.fine_chunks.shape[-1]
+
+    def per_head(h):
+        chunks = index.fine_chunks[h][ret.fine_ids[h]]          # (kc, CC)
+        cmask = (chunks >= 0) & ret.fine_mask[h][:, None]
+        cs = jnp.maximum(chunks, 0)
+        starts = jnp.where(cmask, index.chunk_start[cs], 0)
+        lens = jnp.where(cmask, index.chunk_len[cs], 0)
+        return starts.reshape(-1), lens.reshape(-1)
+
+    starts, lens = jax.vmap(per_head)(jnp.arange(H))
+    return starts, lens, ret
+
+
+def retrieve_dense(index: LycheeIndex, probe: jax.Array, cfg: LycheeConfig,
+                   budget: int | None = None) -> Retrieval:
+    """Single-level oracle: scores ALL fine clusters (no coarse pruning)."""
+    H, d = probe.shape
+    kc = cfg.top_kc(budget)
+    kg = cfg.top_kg
+
+    def per_head(h):
+        q = probe[h]
+        sc = ub_scores(q, index.fine_centroid[h], index.fine_radius[h],
+                       index.fine_valid[h])
+        k_eff = min(kc, sc.shape[0])
+        top_s, fine_ids = jax.lax.top_k(sc, k_eff)
+        fine_mask = top_s > _NEG / 2
+        if k_eff < kc:
+            fine_ids = jnp.pad(fine_ids, (0, kc - k_eff))
+            fine_mask = jnp.pad(fine_mask, (0, kc - k_eff))
+        tok, tmask = _expand_tokens(index, h, fine_ids, fine_mask,
+                                    cfg.max_chunk)
+        P = index.coarse_valid.shape[-1]
+        return tok, tmask, fine_ids, fine_mask, jnp.zeros((min(kg, P),),
+                                                          jnp.int32)
+
+    tok, tmask, fids, fmask, gids = jax.vmap(per_head)(jnp.arange(H))
+    return Retrieval(token_idx=tok, token_mask=tmask, fine_ids=fids,
+                     fine_mask=fmask, coarse_ids=gids)

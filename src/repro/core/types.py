@@ -1,0 +1,97 @@
+"""Pytree containers for the hierarchical KV index (paper §4.1/§4.3).
+
+All shapes are STATIC (TPU adaptation, DESIGN.md §2): variable-length
+structures become fixed-capacity arrays + validity masks. Leading dims may be
+batched/stacked: a per-layer index inside a scanned decoder carries a
+``(groups, batch, ...)`` prefix; the functions in core/ operate on the
+*unbatched* layout documented below and are vmapped/scanned by callers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LycheeConfig
+
+
+class ChunkLayout(NamedTuple):
+    """Result of structure-aware chunking over one token sequence.
+
+    M = static max number of chunks (= ceil(N / min_chunk)).
+    """
+
+    start: jax.Array    # (M,) int32 — first token position of each chunk
+    length: jax.Array   # (M,) int32 — number of tokens (0 for padding slots)
+    valid: jax.Array    # (M,) bool
+    seg_id: jax.Array   # (N,) int32 — token -> chunk id (M-1 clamp for pad)
+    count: jax.Array    # ()  int32 — number of real chunks
+
+
+class LycheeIndex(NamedTuple):
+    """Three-tier index for ONE (layer, batch element): coarse -> fine -> chunk.
+
+    H = kv heads, M = max chunks, L = max fine clusters, P = max coarse
+    units, CC = chunk capacity per fine cluster, FC = fine capacity per
+    coarse unit, d = head_dim.
+    """
+
+    # chunk level -----------------------------------------------------------
+    chunk_key: jax.Array      # (H, M, d)  pooled + L2-normalised keys
+    chunk_start: jax.Array    # (M,) int32
+    chunk_len: jax.Array      # (M,) int32
+    chunk_valid: jax.Array    # (M,) bool
+    chunk_count: jax.Array    # () int32   cursor for lazy appends
+
+    # fine cluster level ----------------------------------------------------
+    fine_centroid: jax.Array  # (H, L, d)
+    fine_radius: jax.Array    # (H, L)
+    fine_size: jax.Array      # (H, L) int32   members (for moving average)
+    fine_valid: jax.Array     # (H, L) bool
+    fine_chunks: jax.Array    # (H, L, CC) int32  member chunk ids
+    fine_nchunks: jax.Array   # (H, L) int32
+
+    # coarse unit level -----------------------------------------------------
+    coarse_centroid: jax.Array  # (H, P, d)
+    coarse_radius: jax.Array    # (H, P)
+    coarse_size: jax.Array      # (H, P) int32
+    coarse_valid: jax.Array     # (H, P) bool
+    coarse_children: jax.Array  # (H, P, FC) int32  member fine-cluster ids
+    coarse_nchild: jax.Array    # (H, P) int32
+    fine2coarse: jax.Array      # (H, L) int32
+
+
+def index_dims(N: int, cfg: LycheeConfig, chunk_cap: int = 6):
+    """Static capacities for a context of N tokens."""
+    M = max(1, (N + cfg.min_chunk - 1) // cfg.min_chunk)
+    L = max(1, M // cfg.avg_chunks_per_cluster)
+    P = min(cfg.max_coarse, L)
+    FC = max(cfg.child_cap, 2 * ((L + P - 1) // P))
+    return M, L, P, chunk_cap, FC
+
+
+def empty_index(N: int, H: int, d: int, cfg: LycheeConfig,
+                dtype=jnp.float32, chunk_cap: int = 6) -> LycheeIndex:
+    M, L, P, CC, FC = index_dims(N, cfg, chunk_cap)
+    f = jnp.zeros
+    return LycheeIndex(
+        chunk_key=f((H, M, d), dtype),
+        chunk_start=f((M,), jnp.int32),
+        chunk_len=f((M,), jnp.int32),
+        chunk_valid=f((M,), bool),
+        chunk_count=jnp.zeros((), jnp.int32),
+        fine_centroid=f((H, L, d), dtype),
+        fine_radius=f((H, L), dtype),
+        fine_size=f((H, L), jnp.int32),
+        fine_valid=f((H, L), bool),
+        fine_chunks=f((H, L, CC), jnp.int32),
+        fine_nchunks=f((H, L), jnp.int32),
+        coarse_centroid=f((H, P, d), dtype),
+        coarse_radius=f((H, P), dtype),
+        coarse_size=f((H, P), jnp.int32),
+        coarse_valid=f((H, P), bool),
+        coarse_children=f((H, P, FC), jnp.int32),
+        coarse_nchild=f((H, P), jnp.int32),
+        fine2coarse=f((H, L), jnp.int32),
+    )

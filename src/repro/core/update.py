@@ -1,0 +1,129 @@
+"""Lazy incremental index update (paper §4.4, Algorithm 1 steps 4).
+
+Newly generated tokens accumulate in the recent buffer; every ``max_chunk``
+steps they are packed into a *dynamic chunk*, whose pooled key is grafted
+onto the nearest existing fine cluster (and transitively its coarse unit):
+centroids move by a running average, radii expand monotonically to keep the
+Eqn. 2 bound valid, and the chunk is appended to the cluster's member list
+if capacity allows. No global re-clustering ever happens at decode time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LycheeConfig
+from repro.core.pooling import l2_normalize
+from repro.core.types import LycheeIndex
+
+
+def pack_dynamic_chunk(keys: jax.Array, start, length: int) -> jax.Array:
+    """Pool the keys of the freshly generated chunk.
+
+    keys: (H, N, d) full key cache; start: scalar; length: static chunk size.
+    Returns (H, d) unit-norm representative keys.
+
+    Uses a GATHER of ``length`` rows rather than dynamic_slice: with the
+    context dim sharded (decode), a traced-offset dynamic_slice makes GSPMD
+    all-gather the WHOLE cache to slice 16 rows (measured 1.3 GiB/step on
+    granite decode_32k); the gather lowers to per-shard partials + an
+    all-reduce of just the (H, length, d) block (§Perf iteration 1c).
+    """
+    idx = jnp.asarray(start, jnp.int32) + jnp.arange(length, dtype=jnp.int32)
+    idx = jnp.clip(idx, 0, keys.shape[1] - 1)
+    seg = jnp.take_along_axis(
+        keys, idx[None, :, None], axis=1)                    # (H, len, d)
+    pooled = l2_normalize(jnp.mean(seg.astype(jnp.float32), axis=1))
+    return pooled.astype(keys.dtype)
+
+
+def lazy_update(index: LycheeIndex, new_key: jax.Array, start,
+                length, cfg: LycheeConfig) -> LycheeIndex:
+    """Graft one dynamic chunk into the index (all kv heads at once).
+
+    new_key: (H, d); start/length: scalars for the chunk's token span.
+    """
+    H, M, d = index.chunk_key.shape
+    CC = index.fine_chunks.shape[-1]
+    slot = jnp.minimum(index.chunk_count, M - 1)
+    start = jnp.asarray(start, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+
+    # --- append chunk ------------------------------------------------------
+    chunk_key = jax.lax.dynamic_update_slice(
+        index.chunk_key, new_key[:, None, :], (0, slot, 0))
+    chunk_start = index.chunk_start.at[slot].set(start)
+    chunk_len = index.chunk_len.at[slot].set(length)
+    chunk_valid = index.chunk_valid.at[slot].set(True)
+
+    # --- nearest fine cluster per head (inner-product, App. A) -------------
+    sim = jnp.einsum("hld,hd->hl", index.fine_centroid, new_key)
+    sim = jnp.where(index.fine_valid, sim, -1e30)
+    fid = jnp.argmax(sim, axis=-1).astype(jnp.int32)          # (H,)
+    heads = jnp.arange(H)
+
+    # moving-average centroid, re-normalised (spherical mean)
+    n = index.fine_size[heads, fid].astype(index.fine_centroid.dtype)
+    mu = index.fine_centroid[heads, fid]                      # (H, d)
+    mu_new = l2_normalize((mu * n[:, None] + new_key) / (n[:, None] + 1.0))
+    fine_centroid = index.fine_centroid.at[heads, fid].set(mu_new)
+    fine_size = index.fine_size.at[heads, fid].add(1)
+
+    # monotonic radius expansion: must keep covering old members after the
+    # centroid moved, plus the new chunk.
+    shift = jnp.linalg.norm(mu_new - mu, axis=-1)
+    r_old = index.fine_radius[heads, fid]
+    r_new = jnp.maximum(r_old + shift,
+                        jnp.linalg.norm(new_key - mu_new, axis=-1))
+    fine_radius = index.fine_radius.at[heads, fid].set(
+        r_new.astype(index.fine_radius.dtype))
+
+    # append to member list when capacity allows
+    pos = jnp.minimum(index.fine_nchunks[heads, fid], CC - 1)
+    ok = index.fine_nchunks[heads, fid] < CC
+    fine_chunks = index.fine_chunks.at[
+        heads, jnp.where(ok, fid, 0), jnp.where(ok, pos, 0)].set(
+        jnp.where(ok, slot, index.fine_chunks[heads, 0, 0]))
+    fine_nchunks = index.fine_nchunks.at[heads, fid].add(
+        ok.astype(jnp.int32))
+
+    # --- propagate to the coarse unit ---------------------------------------
+    gid = index.fine2coarse[heads, fid]
+    ng = index.coarse_size[heads, gid].astype(index.coarse_centroid.dtype)
+    mug = index.coarse_centroid[heads, gid]
+    mug_new = l2_normalize((mug * ng[:, None] + new_key) / (ng[:, None] + 1))
+    shift_g = jnp.linalg.norm(mug_new - mug, axis=-1)
+    rg_old = index.coarse_radius[heads, gid]
+    rg_new = jnp.maximum(rg_old + shift_g,
+                         jnp.linalg.norm(mu_new - mug_new, axis=-1))
+    coarse_centroid = index.coarse_centroid.at[heads, gid].set(mug_new)
+    coarse_radius = index.coarse_radius.at[heads, gid].set(
+        rg_new.astype(index.coarse_radius.dtype))
+    coarse_size = index.coarse_size.at[heads, gid].add(1)
+
+    return index._replace(
+        chunk_key=chunk_key, chunk_start=chunk_start, chunk_len=chunk_len,
+        chunk_valid=chunk_valid,
+        chunk_count=jnp.minimum(index.chunk_count + 1, M),
+        fine_centroid=fine_centroid, fine_radius=fine_radius,
+        fine_size=fine_size, fine_chunks=fine_chunks,
+        fine_nchunks=fine_nchunks,
+        coarse_centroid=coarse_centroid, coarse_radius=coarse_radius,
+        coarse_size=coarse_size)
+
+
+def maybe_lazy_update(index: LycheeIndex, keys: jax.Array, t,
+                      cfg: LycheeConfig) -> LycheeIndex:
+    """Conditionally graft a dynamic chunk once ``max_chunk`` new tokens have
+    accumulated past the last indexed position. ``t`` = length AFTER the
+    current token was appended. Jit-safe (lax.cond)."""
+    t = jnp.asarray(t, jnp.int32)
+    size = jnp.int32(cfg.max_chunk)
+    due = (t % size) == 0
+
+    def do(idx):
+        start = t - size
+        new_key = pack_dynamic_chunk(keys, start, cfg.max_chunk)
+        return lazy_update(idx, new_key, start, size, cfg)
+
+    return jax.lax.cond(due, do, lambda idx: idx, index)

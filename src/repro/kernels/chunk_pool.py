@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: variable-length chunk pooling (paper App. A kernel 1).
+
+Pools each chunk's token keys (a contiguous span of <= max_chunk rows) into
+one representative key: masked mean (or max) + L2 normalisation. The paper
+ships a CUDA kernel for this; the TPU adaptation streams each chunk's span
+HBM -> VMEM with an async copy sized to the static ``max_chunk`` bound and
+masks the tail — no dynamic shapes ever reach the compute units.
+
+Grid: one program per tile of TM chunks. Chunk starts/lengths ride in SMEM
+via scalar prefetch so the DMA addresses are known before the body runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_EPS = 1e-6
+
+
+def _kernel(starts_ref, lens_ref, k_hbm, out_ref, scratch, sem, *,
+            max_chunk: int, pooling: str):
+    i = pl.program_id(0)
+    TM = out_ref.shape[0]
+
+    def body(j, carry):
+        m = i * TM + j
+        start = starts_ref[m]
+        ln = lens_ref[m]
+        cp = pltpu.make_async_copy(
+            k_hbm.at[pl.ds(start, max_chunk), :], scratch, sem)
+        cp.start()
+        cp.wait()
+        rows = scratch[...].astype(jnp.float32)            # (mc, d)
+        pos = jax.lax.broadcasted_iota(jnp.int32, rows.shape, 0)
+        mask = pos < ln
+        if pooling == "mean":
+            s = jnp.sum(jnp.where(mask, rows, 0.0), axis=0)
+            pooled = s / jnp.maximum(ln.astype(jnp.float32), 1.0)
+        else:  # max
+            pooled = jnp.max(jnp.where(mask, rows, -jnp.inf), axis=0)
+            pooled = jnp.where(jnp.isfinite(pooled), pooled, 0.0)
+        nrm = pooled * jax.lax.rsqrt(jnp.sum(pooled * pooled) + _EPS)
+        nrm = jnp.where(ln > 0, nrm, 0.0)
+        out_ref[pl.ds(j, 1), :] = nrm[None].astype(out_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(0, TM, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("max_chunk", "pooling",
+                                             "tile_m", "interpret"))
+def chunk_pool(keys: jax.Array, starts: jax.Array, lens: jax.Array, *,
+               max_chunk: int = 16, pooling: str = "mean",
+               tile_m: int = 8, interpret: bool = True) -> jax.Array:
+    """keys: (H, N, d); starts/lens: (M,) int32. Returns (H, M, d).
+
+    Spans are clamped so [start, start+max_chunk) stays in-bounds after a
+    max_chunk-row zero pad; the mask uses the true length.
+    """
+    H, N, d = keys.shape
+    M = starts.shape[0]
+    TM = min(tile_m, M)
+    Mp = ((M + TM - 1) // TM) * TM
+    starts_p = jnp.clip(jnp.pad(starts, (0, Mp - M)), 0, N)
+    lens_p = jnp.clip(jnp.pad(lens, (0, Mp - M)), 0, max_chunk)
+    keys_p = jnp.pad(keys, ((0, 0), (0, max_chunk), (0, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Mp // TM,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.HBM)],
+        out_specs=pl.BlockSpec((TM, d), lambda i, *_: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((max_chunk, d), keys.dtype),
+                        pltpu.SemaphoreType.DMA],
+    )
+    call = pl.pallas_call(
+        functools.partial(_kernel, max_chunk=max_chunk, pooling=pooling),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Mp, d), keys.dtype),
+        interpret=interpret,
+        name="lychee_chunk_pool",
+    )
+    out = jax.vmap(lambda k: call(starts_p, lens_p, k))(keys_p)
+    return out[:, :M]

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: hierarchical UB scoring (paper Eqn. 2).
+
+Computes UB(q, u) = qᵀμ_u + ‖q‖₂·r_u for a tile of centroids per program —
+one fused matvec + AXPY on the MXU/VPU, used at both the coarse and fine
+levels of the index. Centroid tiles are BlockSpec-mapped into VMEM; the
+query is broadcast to every program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, cent_ref, rad_ref, valid_ref, out_ref):
+    q = q_ref[0].astype(jnp.float32)                     # (d,)
+    cent = cent_ref[0].astype(jnp.float32)               # (TL, d)
+    qn = jnp.sqrt(jnp.sum(q * q))
+    s = jnp.dot(cent, q[:, None],
+                preferred_element_type=jnp.float32)[:, 0]  # (TL,)
+    s = s + qn * rad_ref[0].astype(jnp.float32)
+    s = jnp.where(valid_ref[0] > 0, s, _NEG)
+    out_ref[0, :] = s.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_l", "interpret"))
+def hier_score(probe: jax.Array, centroid: jax.Array, radius: jax.Array,
+               valid: jax.Array, *, tile_l: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """probe: (H, d); centroid: (H, L, d); radius/valid: (H, L).
+
+    Returns float32 UB scores (H, L); invalid entries are -1e30.
+    """
+    H, L, d = centroid.shape
+    TL = min(tile_l, L)
+    Lp = ((L + TL - 1) // TL) * TL
+    cent_p = jnp.pad(centroid, ((0, 0), (0, Lp - L), (0, 0)))
+    rad_p = jnp.pad(radius, ((0, 0), (0, Lp - L)))
+    valid_p = jnp.pad(valid.astype(jnp.int32), ((0, 0), (0, Lp - L)))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(H, Lp // TL),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda h, l: (h, 0)),
+            pl.BlockSpec((1, TL, d), lambda h, l: (h, l, 0)),
+            pl.BlockSpec((1, TL), lambda h, l: (h, l)),
+            pl.BlockSpec((1, TL), lambda h, l: (h, l)),
+        ],
+        out_specs=pl.BlockSpec((1, TL), lambda h, l: (h, l)),
+        out_shape=jax.ShapeDtypeStruct((H, Lp), jnp.float32),
+        interpret=interpret,
+        name="lychee_hier_score",
+    )(probe, cent_p, rad_p, valid_p)
+    return out[:, :L]

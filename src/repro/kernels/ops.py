@@ -1,0 +1,41 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True so the kernels execute (and are tested) on
+CPU; on a real TPU runtime set ``repro.kernels.ops.INTERPRET = False`` (or
+pass explicitly) and the same code paths compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.chunk_pool import chunk_pool
+from repro.kernels.hier_score import hier_score
+from repro.kernels.sparse_attention import sparse_chunk_attention
+
+INTERPRET = True
+
+
+def pool_chunk_keys(keys, starts, lens, *, max_chunk=16, pooling="mean",
+                    interpret=None):
+    return chunk_pool(keys, starts, lens, max_chunk=max_chunk,
+                      pooling=pooling,
+                      interpret=INTERPRET if interpret is None else interpret)
+
+
+def score_upper_bound(probe, centroid, radius, valid, *, interpret=None):
+    return hier_score(probe, centroid, radius, valid,
+                      interpret=INTERPRET if interpret is None else interpret)
+
+
+def chunk_attention(q, k_cache, v_cache, starts, lens, *, max_chunk=16,
+                    scale=1.0, softcap=0.0, interpret=None):
+    return sparse_chunk_attention(
+        q, k_cache, v_cache, starts, lens, max_chunk=max_chunk, scale=scale,
+        softcap=softcap,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+__all__ = ["INTERPRET", "chunk_attention", "pool_chunk_keys", "ref",
+           "score_upper_bound"]

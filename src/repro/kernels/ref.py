@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-6
+_NEG = -1e30
+
+
+def chunk_pool_ref(keys: jax.Array, starts: jax.Array, lens: jax.Array, *,
+                   max_chunk: int = 16, pooling: str = "mean") -> jax.Array:
+    """keys: (H, N, d); starts/lens: (M,). Returns (H, M, d)."""
+    H, N, d = keys.shape
+    keys_p = jnp.pad(keys.astype(jnp.float32),
+                     ((0, 0), (0, max_chunk), (0, 0)))
+    offs = jnp.arange(max_chunk)
+
+    def per_chunk(start, ln):
+        rows = jax.lax.dynamic_slice_in_dim(
+            keys_p, jnp.clip(start, 0, N), max_chunk, axis=1)  # (H, mc, d)
+        mask = (offs < ln)[None, :, None]
+        if pooling == "mean":
+            pooled = jnp.sum(jnp.where(mask, rows, 0.0), 1) / jnp.maximum(
+                ln.astype(jnp.float32), 1.0)
+        else:
+            pooled = jnp.max(jnp.where(mask, rows, -jnp.inf), 1)
+            pooled = jnp.where(jnp.isfinite(pooled), pooled, 0.0)
+        nrm = pooled * jax.lax.rsqrt(
+            jnp.sum(pooled * pooled, -1, keepdims=True) + _EPS)
+        return jnp.where(ln > 0, nrm, 0.0)                      # (H, d)
+
+    out = jax.vmap(per_chunk, in_axes=(0, 0), out_axes=1)(starts, lens)
+    return out.astype(keys.dtype)
+
+
+def hier_score_ref(probe: jax.Array, centroid: jax.Array, radius: jax.Array,
+                   valid: jax.Array) -> jax.Array:
+    """probe: (H, d); centroid: (H, L, d); radius/valid: (H, L)."""
+    p = probe.astype(jnp.float32)
+    c = centroid.astype(jnp.float32)
+    qn = jnp.linalg.norm(p, axis=-1, keepdims=True)
+    s = jnp.einsum("hld,hd->hl", c, p) + qn * radius.astype(jnp.float32)
+    return jnp.where(valid.astype(bool), s, _NEG)
+
+
+def sparse_chunk_attention_ref(q, k_cache, v_cache, starts, lens, *,
+                               max_chunk: int = 16, scale: float = 1.0,
+                               softcap: float = 0.0) -> jax.Array:
+    """Same contract as kernels.sparse_attention.sparse_chunk_attention."""
+    B, Hkv, G, dk = q.shape
+    N = k_cache.shape[2]
+    C = starts.shape[-1]
+    offs = jnp.arange(max_chunk, dtype=jnp.int32)
+    tok = jnp.clip(starts[..., None], 0, N) + offs          # (B, H, C, mc)
+    mask = offs < jnp.clip(lens, 0, max_chunk)[..., None]
+    tok = jnp.clip(tok, 0, N - 1).reshape(B, Hkv, C * max_chunk)
+    mask = mask.reshape(B, Hkv, C * max_chunk)
+
+    # oracle semantics: exact f32 math over the selected rows (gather
+    # first so only the selection is cast; the bf16-partials GSPMD
+    # optimisation lives in core.attention.sparse_span_attention)
+    k_sel = jnp.take_along_axis(
+        k_cache, tok[..., None], axis=2).astype(jnp.float32)
+    v_sel = jnp.take_along_axis(
+        v_cache, tok[..., None], axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                        k_sel) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[:, :, None, :], logits, _NEG)
+    m = jnp.max(logits, -1, keepdims=True)
+    p = jnp.where(mask[:, :, None, :], jnp.exp(logits - m), 0.0)
+    den = jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p / den, v_sel)
+    return out.astype(q.dtype)

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: budgeted sparse attention over retrieved chunks
+(paper Algorithm 1 step 3 — the decode hot loop).
+
+The active set produced by hierarchical retrieval is a list of *contiguous
+chunk spans* (start, len <= max_chunk) — structure-aware chunks, the sink
+span, and the recent-buffer spans all share this form. Each grid step DMAs a
+tile of TC spans from the HBM-resident KV cache into VMEM (one contiguous
+copy per span — this is why chunk-granular retrieval maps so well to TPU:
+gathers become span DMAs, unlike token-scatter designs such as ClusterKV),
+then runs one flash-attention update (online softmax, f32 accumulators).
+
+Grid: (C // TC,) per (batch, kv-head); callers vmap the leading dims.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(starts_ref, lens_ref, q_ref, k_hbm, v_hbm, out_ref,
+            k_scr, v_scr, len_scr, m_scr, l_scr, acc_scr, ksem, vsem, *,
+            max_chunk: int, tile_c: int, scale: float, softcap: float):
+    i = pl.program_id(0)
+    n_tiles = pl.num_programs(0)
+    G = q_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # ---- DMA the tile's spans into VMEM ---------------------------------
+    def fetch(j, carry):
+        c = i * tile_c + j
+        start = starts_ref[c]
+        kcp = pltpu.make_async_copy(
+            k_hbm.at[pl.ds(start, max_chunk), :],
+            k_scr.at[pl.ds(j * max_chunk, max_chunk), :], ksem)
+        vcp = pltpu.make_async_copy(
+            v_hbm.at[pl.ds(start, max_chunk), :],
+            v_scr.at[pl.ds(j * max_chunk, max_chunk), :], vsem)
+        kcp.start()
+        vcp.start()
+        len_scr[pl.ds(j, 1)] = lens_ref[c][None].astype(jnp.int32)
+        kcp.wait()
+        vcp.wait()
+        return carry
+
+    jax.lax.fori_loop(0, tile_c, fetch, 0)
+
+    # ---- flash update ----------------------------------------------------
+    S = tile_c * max_chunk
+    q = q_ref[...].astype(jnp.float32)                       # (G, dk)
+    k = k_scr[...].astype(jnp.float32)                       # (S, dk)
+    v = v_scr[...].astype(jnp.float32)                       # (S, dv)
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (tile_c, max_chunk), 1)
+    mask = (pos < len_scr[...][:, None]).reshape(1, S)
+    logits = jnp.where(mask, logits, _NEG)
+
+    m_prev = m_scr[...]                                      # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(mask, p, 0.0)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, -1, keepdims=True)
+    acc_scr[...] = alpha * acc_scr[...] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(i == n_tiles - 1)
+    def _finish():
+        out_ref[...] = (acc_scr[...] /
+                        jnp.maximum(l_scr[...], 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("max_chunk", "tile_c", "scale",
+                                             "softcap", "interpret"))
+def sparse_chunk_attention(q: jax.Array, k_cache: jax.Array,
+                           v_cache: jax.Array, starts: jax.Array,
+                           lens: jax.Array, *, max_chunk: int = 16,
+                           tile_c: int = 8, scale: float = 1.0,
+                           softcap: float = 0.0,
+                           interpret: bool = True) -> jax.Array:
+    """Single-position decode attention over chunk spans.
+
+    q: (B, Hkv, G, dk); k_cache: (B, Hkv, N, dk); v_cache: (B, Hkv, N, dv);
+    starts/lens: (B, Hkv, C) int32 (len == 0 -> span skipped).
+    Returns (B, Hkv, G, dv) in q.dtype.
+    """
+    B, Hkv, G, dk = q.shape
+    N = k_cache.shape[2]
+    dv = v_cache.shape[3]
+    C = starts.shape[-1]
+    TC = min(tile_c, C)
+    Cp = ((C + TC - 1) // TC) * TC
+
+    starts_p = jnp.clip(jnp.pad(starts, ((0, 0), (0, 0), (0, Cp - C))), 0, N)
+    lens_p = jnp.clip(jnp.pad(lens, ((0, 0), (0, 0), (0, Cp - C))),
+                      0, max_chunk)
+    k_p = jnp.pad(k_cache, ((0, 0), (0, 0), (0, max_chunk), (0, 0)))
+    v_p = jnp.pad(v_cache, ((0, 0), (0, 0), (0, max_chunk), (0, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Cp // TC,),
+        in_specs=[
+            pl.BlockSpec((G, dk), lambda i, *_: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.HBM),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.HBM),
+        ],
+        out_specs=pl.BlockSpec((G, dv), lambda i, *_: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((TC * max_chunk, dk), k_cache.dtype),
+            pltpu.VMEM((TC * max_chunk, dv), v_cache.dtype),
+            pltpu.VMEM((TC,), jnp.int32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dv), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    call = pl.pallas_call(
+        functools.partial(_kernel, max_chunk=max_chunk, tile_c=TC,
+                          scale=scale, softcap=softcap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, dv), q.dtype),
+        interpret=interpret,
+        name="lychee_sparse_attention",
+    )
+    inner = jax.vmap(jax.vmap(lambda s, ln, qq, kk, vv: call(s, ln, qq, kk, vv)))
+    return inner(starts_p, lens_p, q, k_p, v_p)

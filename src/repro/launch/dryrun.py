@@ -1,0 +1,264 @@
+"""Multi-pod dry-run: prove the distribution config is coherent without
+real hardware.
+
+``.lower().compile()`` every (architecture × input shape × mesh)
+combination against 512 placeholder host devices; print/record
+``memory_analysis()`` (fits-per-device proof) and ``cost_analysis()``
+(FLOPs/bytes for §Roofline), plus collective bytes parsed from the
+optimized HLO.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+      --shape decode_32k [--multipod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+# The VERY FIRST statements — before any other import (jax locks the device
+# count on first init):
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp                       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
+
+from repro.configs.base import ARCH_IDS, get_config           # noqa: E402
+from repro.launch.mesh import make_production_mesh            # noqa: E402
+from repro.launch import specs as SP                          # noqa: E402
+from repro.models import model as MD                          # noqa: E402
+from repro.serving.engine import serve_step                   # noqa: E402
+from repro.sharding.ctx import (context_parallel, mesh_context,  # noqa: E402
+                                serving_mode)  # noqa: E402
+from repro.sharding.rules import decode_state_specs, param_specs  # noqa: E402
+from repro.training.optimizer import adamw_init               # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Collective-bytes accounting (roofline's third term)
+# ---------------------------------------------------------------------------
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+# opcode position: `<name> = <type(s)> <opcode>(...` — match the opcode
+# token (plain or async "-start"); "-done" ops reference the start's bytes
+# and must not be double counted.
+_OP_RE = re.compile(
+    r"\s(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|c64)"
+                       r"\[([\d,]*)\]")
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output sizes of every collective op in the optimized HLO.
+
+    Linear scan: a cheap substring test gates the (non-backtracking) regex,
+    and shapes are read from the type prefix of the matched line only.
+    """
+    out = {k: 0 for k in _KINDS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if "all-" not in line and "reduce-scatter" not in line and \
+                "collective-permute" not in line:
+            continue
+        if " = " not in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # type prefix sits between "= " and the opcode
+        eq = line.index(" = ")
+        prefix = line[eq + 3:m.start()]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(prefix):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES[dt]
+        out[kind] += nbytes
+        out["count"] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lowering per input-shape kind
+# ---------------------------------------------------------------------------
+def lower_train(cfg, mesh, microbatch: int = 0):
+    params_s = SP.params_specs_shapes(cfg)
+    opt_s = jax.eval_shape(
+        lambda p: adamw_init(p, cfg.opt_state_dtype), params_s)
+    batch = SP.batch_specs(cfg, "train_4k")
+    with mesh_context(mesh):
+        pspecs = param_specs(params_s, cfg, mesh)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    # moments shard like params; step replicated
+    from repro.training.optimizer import AdamWState
+    opt_sh = AdamWState(step=NamedSharding(mesh, P()), mu=p_sh, nu=p_sh)
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    b_sh = {k: NamedSharding(mesh, P(baxes) + P(*([None] * (v.ndim - 1))))
+            for k, v in batch.items()}
+
+    from repro.training.train_step import make_train_step
+    step_fn, _ = make_train_step(cfg, microbatch=microbatch)
+
+    def raw(params, opt, b):
+        params, opt, metrics = step_fn.__wrapped__(params, opt, b) \
+            if hasattr(step_fn, "__wrapped__") else step_fn(params, opt, b)
+        return params, opt, metrics["loss"]
+
+    with mesh_context(mesh):
+        # donate params+opt: output buffers alias inputs (§Perf iter. 2)
+        return jax.jit(raw, in_shardings=(p_sh, opt_sh, b_sh),
+                       out_shardings=(p_sh, opt_sh, None),
+                       donate_argnums=(0, 1)
+                       ).lower(params_s, opt_s, batch)
+
+
+def lower_prefill(cfg, mesh):
+    params_s = SP.params_specs_shapes(cfg)
+    batch = SP.batch_specs(cfg, "prefill_32k")
+    n_cache = SP.n_cache_for(cfg, SP.SHAPES["prefill_32k"]["seq"])
+    with mesh_context(mesh):
+        pspecs = param_specs(params_s, cfg, mesh)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    b_sh = {k: NamedSharding(mesh, P(baxes) + P(*([None] * (v.ndim - 1))))
+            for k, v in batch.items()}
+
+    def raw(params, b):
+        extras = {k: v for k, v in b.items() if k != "tokens"}
+        return MD.prefill(params, b["tokens"], cfg, n_cache, extras=extras)
+
+    with mesh_context(mesh):
+        return jax.jit(raw, in_shardings=(p_sh, b_sh)).lower(params_s, batch)
+
+
+def lower_decode(cfg, mesh, shape_name):
+    params_s = SP.params_specs_shapes(cfg)
+    state_s = SP.state_specs(cfg, shape_name)
+    tok = SP.batch_specs(cfg, shape_name)["token"]
+    baxes, caxes = SP.mesh_axes_for(shape_name, mesh)
+    with mesh_context(mesh):
+        pspecs = param_specs(params_s, cfg, mesh, serving=True)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    st_specs = decode_state_specs(state_s, mesh, baxes, caxes)
+    st_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), st_specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    tok_sh = NamedSharding(mesh, P(baxes) if baxes else P())
+    ctx_par = SP.SHAPES[shape_name]["batch"] == 1
+
+    def raw(params, token, state):
+        return serve_step(params, token, state, cfg)
+
+    with mesh_context(mesh), context_parallel(ctx_par), serving_mode():
+        # donate the state: the serving engine reuses the buffers in place
+        # every step (§Perf iteration 1b) — without it the step double-
+        # buffers the entire KV cache + index
+        return jax.jit(raw, in_shardings=(p_sh, tok_sh, st_sh),
+                       out_shardings=(None, st_sh),
+                       donate_argnums=(2,)
+                       ).lower(params_s, tok, state_s)
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, outdir: str,
+            verbose: bool = True) -> dict:
+    t0 = time.time()
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = SP.SHAPES[shape]["kind"]
+    if kind == "train":
+        lowered = lower_train(cfg, mesh,
+                              microbatch=int(os.environ.get("MICROBATCH",
+                                                            "0")))
+    elif kind == "prefill":
+        lowered = lower_prefill(cfg, mesh)
+    else:
+        lowered = lower_decode(cfg, mesh, shape)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "argument_bytes_per_device": getattr(
+            mem, "argument_size_in_bytes", 0),
+        "output_bytes_per_device": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes_per_device": getattr(
+            mem, "peak_memory_in_bytes",
+            getattr(mem, "temp_size_in_bytes", 0)),
+        "collective_bytes": coll,
+    }
+    if verbose:
+        print(f"[{arch} × {shape} × {rec['mesh']}] "
+              f"lower {rec['lower_s']}s compile {rec['compile_s']}s")
+        print(f"  flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e}")
+        print(f"  per-device: args={rec['argument_bytes_per_device']/2**30:.2f}GiB "
+              f"temp={rec['temp_bytes_per_device']/2**30:.2f}GiB")
+        print(f"  collectives: {coll}")
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        tag = f"{arch}_{shape}_{rec['mesh'].replace('x', '-')}"
+        with open(os.path.join(outdir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SP.SHAPES) + [None])
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"],
+                    help="--all filter: which production mesh(es)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SP.SHAPES:
+                if args.mesh in ("single", "both"):
+                    combos.append((a, s, False))
+                if args.mesh in ("multi", "both"):
+                    combos.append((a, s, True))
+    else:
+        assert args.arch and args.shape
+        combos = [(args.arch, args.shape, args.multipod)]
+
+    failures = []
+    for a, s, mp in combos:
+        try:
+            run_one(a, s, mp, args.out)
+        except Exception as e:  # noqa: BLE001
+            failures.append((a, s, mp, repr(e)))
+            print(f"FAILED [{a} × {s} × {'2x16x16' if mp else '16x16'}]: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""ShapeDtypeStruct input stand-ins for every (architecture × input shape)
+— weak-type-correct, shardable, no device allocation.
+
+The four assigned input shapes:
+
+  train_4k       seq=4096    global_batch=256   lowers train_step
+  prefill_32k    seq=32768   global_batch=32    lowers prefill (index build)
+  decode_32k     seq=32768   global_batch=128   lowers serve_step
+  long_500k      seq=524288  global_batch=1     lowers serve_step (ctx-par)
+
+Decode shapes lower ONE new token against a seq-length KV cache; the cache
+slack (+8192) keeps every context/chunk/cluster dim divisible by the 512-way
+multi-pod mesh (N, M=N/8, L=M/2 all divisible by 1024).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+SHAPES: Dict[str, dict] = {
+    "train_4k": dict(kind="train", seq=4_096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+CACHE_SLACK = 8_192          # decode headroom; keeps dims 1024-divisible
+
+
+def n_cache_for(cfg: ModelConfig, seq: int) -> int:
+    return seq + (cfg.n_patches or 0) + CACHE_SLACK
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Model-input ShapeDtypeStructs for the given input shape.
+
+    For train: {"tokens", ...extras}. For prefill: same at prompt length.
+    For decode: {"token": (B,)} (the state comes from ``state_specs``).
+    """
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    dt = jnp.dtype(cfg.dtype)
+    if sh["kind"] in ("train", "prefill"):
+        out = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.n_patches:
+            out["patches"] = _sds((B, cfg.n_patches, cfg.d_model), dt)
+        if cfg.is_encdec:
+            out["frames"] = _sds((B, cfg.n_audio_frames, cfg.d_model), dt)
+        return out
+    return {"token": _sds((B,), jnp.int32)}
+
+
+def decode_prompt_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """The prompt whose prefill *shapes* define the decode state."""
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    dt = jnp.dtype(cfg.dtype)
+    out = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.n_patches:
+        out["patches"] = _sds((B, cfg.n_patches, cfg.d_model), dt)
+    if cfg.is_encdec:
+        out["frames"] = _sds((B, cfg.n_audio_frames, cfg.d_model), dt)
+    return out
+
+
+def state_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStructs of the decode state — via ``jax.eval_shape`` over
+    prefill, so dry-runs never allocate the multi-hundred-GB caches."""
+    from repro.models import model as MD
+    sh = SHAPES[shape_name]
+    n_cache = n_cache_for(cfg, sh["seq"])
+    prompt = decode_prompt_specs(cfg, shape_name)
+
+    def full(params, tokens, extras):
+        _, state = MD.prefill(params, tokens, cfg, n_cache, extras=extras)
+        return state
+
+    params_s = params_specs_shapes(cfg)
+    extras = {k: v for k, v in prompt.items() if k != "tokens"}
+    return jax.eval_shape(full, params_s, prompt["tokens"], extras)
+
+
+def params_specs_shapes(cfg: ModelConfig):
+    from repro.models import model as MD
+    return jax.eval_shape(
+        lambda: MD.init_model(jax.random.key(0), cfg))
+
+
+def mesh_axes_for(shape_name: str, mesh) -> Tuple[Optional[tuple],
+                                                  Optional[tuple]]:
+    """(batch_axes, ctx_axes) policy per input shape (DESIGN.md §5).
+
+    * train/prefill/decode batches shard over ('pod','data');
+    * decode_32k additionally shards the context/chunk/cluster dims over
+      'model' (the batch already occupies 'data');
+    * long_500k (batch=1) shards the context over EVERYTHING — sequence/
+      context parallelism over ('pod','data','model').
+    """
+    has_pod = "pod" in mesh.axis_names
+    batch = ("pod", "data") if has_pod else ("data",)
+    sh = SHAPES[shape_name]
+    if sh["kind"] in ("train", "prefill"):
+        return batch, None
+    if sh["batch"] == 1:
+        ctx = ("pod", "data", "model") if has_pod else ("data", "model")
+        return None, ctx
+    return batch, ("model",)

@@ -1,0 +1,74 @@
+"""Training launcher.
+
+On real hardware this runs the pjit'd train step on the production mesh;
+on this CPU container it runs a host-mesh (or unsharded) training loop —
+the mesh plumbing is identical, only the device count differs. The
+production-mesh *lowering* is exercised by ``repro.launch.dryrun``.
+
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b \
+      --reduced --steps 50 [--mesh-data 1 --mesh-model 1]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as MD
+from repro.training import synthetic_lm_batches
+from repro.training.checkpoint import save
+from repro.training.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh-data", type=int, default=0,
+                    help=">0: run under a host mesh of this data size")
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    if args.reduced:
+        cfg = cfg.replace(dtype="float32")
+    mesh = (make_host_mesh(args.mesh_data, args.mesh_model)
+            if args.mesh_data else None)
+    params = MD.init_model(jax.random.key(0), cfg)
+    step_fn, init_state = make_train_step(
+        cfg, base_lr=args.lr, total_steps=args.steps, mesh=mesh)
+    opt = init_state(params)
+    data = synthetic_lm_batches(cfg.vocab, args.batch, args.seq)
+    rng = np.random.default_rng(0)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {"tokens": jnp.asarray(next(data))}
+        if cfg.n_patches:
+            batch["patches"] = jnp.asarray(rng.standard_normal(
+                (args.batch, cfg.n_patches, cfg.d_model)) * 0.02, jnp.float32)
+        if cfg.is_encdec:
+            batch["frames"] = jnp.asarray(rng.standard_normal(
+                (args.batch, cfg.n_audio_frames, cfg.d_model)) * 0.02,
+                jnp.float32)
+        params, opt, metrics = step_fn(params, opt, batch)
+        if i % 10 == 0:
+            print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if args.ckpt:
+        save(args.ckpt, params, step=args.steps)
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

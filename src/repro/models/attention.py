@@ -1,0 +1,315 @@
+"""Attention variants: GQA (global / sliding-window / bidirectional / cross)
+and DeepSeek MLA, each with a full-sequence forward (train / prefill) and a
+single-token decode step that plugs into LycheeCluster.
+
+Prefill/train uses a blocked flash-style attention (lax.scan over KV blocks,
+online softmax) so no S×S logits tensor is ever materialised — required for
+prefill_32k / train_4k to fit. Decode uses either dense cache attention
+(prelude layers — the paper keeps the first layers full), windowed ring-
+buffer attention (local layers), or LycheeCluster hierarchical retrieval +
+budgeted sparse attention (global layers).
+
+MLA decode runs in *absorbed latent space*: q̃ = W_ukᵀ q_nope scores the
+576-dim latent cache directly, so retrieval, the index, and the sparse
+attention all operate on the compressed cache — LycheeCluster composes with
+MLA without decompressing unselected tokens (a TPU-friendly synergy the
+paper doesn't exploit; see DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import (build_index, chunk_sequence, empty_index,
+                        full_decode_attention, maybe_lazy_update)
+from repro.core.attention import (assemble_spans,
+                                  full_decode_attention_ctxsharded,
+                                  sparse_span_attention,
+                                  sparse_span_attention_ctxsharded)
+from repro.core.retrieval import retrieve_spans
+from repro.core.types import ChunkLayout
+from repro.kernels import ops as kops
+from repro.models.layers import apply_rope, init_rmsnorm, rmsnorm, trunc_normal
+from repro.sharding.ctx import kv_axes, shard
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blocked flash attention (forward; differentiable)
+# ---------------------------------------------------------------------------
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+                    window: int = 0, scale: float, softcap: float = 0.0,
+                    block_k: int = 512) -> jax.Array:
+    """q: (B, Hq, Sq, dk); k/v: (B, Hkv, Sk, d*); positions: (Sq,)/(Sk,).
+
+    GQA broadcast is handled internally. Never materialises Sq×Sk.
+    """
+    B, Hq, Sq, dk = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, Sq, dk).astype(jnp.float32)
+
+    BK = min(block_k, Sk)
+    pad = (-Sk) % BK
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kpos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+    nblk = (Sk + pad) // BK
+    kb = kp.reshape(B, Hkv, nblk, BK, -1).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(B, Hkv, nblk, BK, -1).transpose(2, 0, 1, 3, 4)
+    pb = kpos.reshape(nblk, BK)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, pblk = xs                       # (B,Hkv,BK,dk) etc.
+        logits = jnp.einsum("bhgsd,bhtd->bhgst", qf,
+                            kblk.astype(jnp.float32)) * scale
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        valid = pblk >= 0                            # (BK,)
+        mask = jnp.broadcast_to(valid[None, :], (Sq, BK))
+        if causal:
+            mask = mask & (pblk[None, :] <= q_pos[:, None])
+        if window:
+            mask = mask & (q_pos[:, None] - pblk[None, :] < window)
+        logits = jnp.where(mask[None, None, None], logits, _NEG)
+        m_new = jnp.maximum(m, jnp.max(logits, -1))
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, -1)
+        acc = alpha[..., None] * acc + jnp.einsum(
+            "bhgst,bhtd->bhgsd", p, vblk.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    dv = v.shape[-1]
+    init = (jnp.full((B, Hkv, G, Sq), _NEG, jnp.float32),
+            jnp.zeros((B, Hkv, G, Sq), jnp.float32),
+            jnp.zeros((B, Hkv, G, Sq, dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Hq, Sq, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def init_gqa(key, cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
+    d = d_in or cfg.d_model
+    dh = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": trunc_normal(k1, (d, cfg.n_heads * dh), dt),
+        "wk": trunc_normal(k2, (d, cfg.n_kv_heads * dh), dt),
+        "wv": trunc_normal(k3, (d, cfg.n_kv_heads * dh), dt),
+        "wo": trunc_normal(k4, (cfg.n_heads * dh, d), dt, scale=0.02 / 2),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh, dt)
+        p["k_norm"] = init_rmsnorm(dh, dt)
+    return p
+
+
+def _project_qkv(p, x, positions, cfg, rope: bool = True):
+    B, S, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, dh)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # (B, H, S, dh)
+    return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3))
+
+
+def gqa_forward(p: dict, x: jax.Array, positions: jax.Array,
+                cfg: ModelConfig, kind: str, rope: bool = True) -> Tuple:
+    """Full-sequence forward. Returns (out (B,S,d), k, v) — k/v (B,Hkv,S,dh)
+    post-RoPE, ready for caching/indexing."""
+    dh = cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, x, positions, cfg, rope)
+    q = shard(q, "batch", "model", None, None)
+    k = shard(k, "batch", "model", None, None)
+    v = shard(v, "batch", "model", None, None)
+    causal = kind != "enc_attn"
+    window = cfg.window if kind in ("attn_local", "swa_moe") else 0
+    out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
+                          causal=causal, window=window,
+                          scale=1.0 / dh ** 0.5, softcap=cfg.attn_softcap)
+    B, Hq, S, _ = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, Hq * dh) @ p["wo"]
+    return shard(out, "batch", None, None), k, v
+
+
+# -- decode ------------------------------------------------------------------
+def _lychee_attend(q, k_cache, v_cache, index, t, cfg: ModelConfig):
+    """q: (B, Hq, dk). Returns (out (B, Hq, dv), updated index)."""
+    B, Hq, dk = q.shape
+    Hkv = k_cache.shape[1]
+    G = Hq // Hkv
+    ly = cfg.lychee
+    probe = q.reshape(B, Hkv, G, dk).mean(axis=2)           # (B, Hkv, dk)
+
+    def per_b(idx_b, probe_b):
+        s, ln, _ = retrieve_spans(idx_b, probe_b, ly)
+        return assemble_spans(s, ln, t, ly)
+
+    starts, lens = jax.vmap(per_b)(index, probe)            # (B, Hkv, C)
+    qg = q.reshape(B, Hkv, G, dk)
+    scale = 1.0 / dk ** 0.5 if cfg.qk_nope_dim == 0 else \
+        1.0 / (cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5
+    ctx_ax = kv_axes()[2]
+    if ly.use_kernel:
+        out = kops.chunk_attention(qg, k_cache, v_cache, starts, lens,
+                                   max_chunk=ly.max_chunk, scale=scale,
+                                   softcap=cfg.attn_softcap)
+    elif ctx_ax is not None:
+        # §Perf iteration 1d: shard_map flash-combine over the context
+        # shards — collective is O(B·H·G·dv), not O(gathered block)
+        out = sparse_span_attention_ctxsharded(
+            qg, k_cache, v_cache, starts, lens, ctx_ax,
+            max_chunk=ly.max_chunk, scale=scale, softcap=cfg.attn_softcap)
+    else:
+        out = sparse_span_attention(qg, k_cache, v_cache, starts, lens,
+                                    max_chunk=ly.max_chunk, scale=scale,
+                                    softcap=cfg.attn_softcap)
+    # lazy update (Algorithm 1 step 4): graft a dynamic chunk when due
+    index = jax.vmap(lambda i, kc: maybe_lazy_update(i, kc, t + 1, ly))(
+        index, k_cache)
+    return out.reshape(B, Hq, -1), index
+
+
+def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
+               kind: str, use_lychee: bool, rope: bool = True) -> Tuple:
+    """x: (B, 1, d); cache: {"k","v"[, "index"]}. Returns (out, cache)."""
+    B = x.shape[0]
+    dh = cfg.resolved_head_dim
+    pos = jnp.full((1,), t, jnp.int32)
+    q, k_t, v_t = _project_qkv(p, x, pos, cfg, rope)        # (B,H,1,dh)
+    q = q[:, :, 0]                                          # (B, Hq, dh)
+
+    local = kind in ("attn_local", "swa_moe") and cfg.window
+    if local:
+        W = cache["k"].shape[2]
+        slot = jnp.mod(jnp.asarray(t, jnp.int32), W)
+        k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_t, slot, 2)
+        v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_t, slot, 2)
+        n_valid = jnp.minimum(jnp.asarray(t, jnp.int32) + 1, W)
+        out = jax.vmap(lambda qq, kk, vv: full_decode_attention(
+            qq, kk, vv, n_valid, 1.0 / dh ** 0.5, cfg.attn_softcap))(
+            q, k_c, v_c)
+        cache = dict(cache, k=k_c, v=v_c)
+    else:
+        tt = jnp.asarray(t, jnp.int32)
+        k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_t, tt, 2)
+        v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_t, tt, 2)
+        k_c = shard(k_c, *kv_axes())
+        v_c = shard(v_c, *kv_axes())
+        cache = dict(cache, k=k_c, v=v_c)
+        if use_lychee and cfg.lychee.enabled and "index" in cache:
+            out, index = _lychee_attend(q, k_c, v_c, cache["index"], tt, cfg)
+            cache = dict(cache, index=index)
+        elif kv_axes()[2] is not None:
+            # §Perf iteration 4: dense prelude attention, shard-local flash
+            out = full_decode_attention_ctxsharded(
+                q, k_c, v_c, tt + 1, kv_axes()[2], scale=1.0 / dh ** 0.5,
+                softcap=cfg.attn_softcap)
+        else:
+            out = jax.vmap(lambda qq, kk, vv: full_decode_attention(
+                qq, kk, vv, tt + 1, 1.0 / dh ** 0.5, cfg.attn_softcap))(
+                q, k_c, v_c)
+
+    out = out.reshape(B, 1, -1) @ p["wo"]
+    return shard(out, "batch", None, None), cache
+
+
+def gqa_prefill_cache(k: jax.Array, v: jax.Array, cfg: ModelConfig,
+                      kind: str, layout: Optional[ChunkLayout],
+                      n_cache: int, use_lychee: bool) -> dict:
+    """Build the decode cache (and Lychee index) after a prefill forward.
+
+    k/v: (B, Hkv, S, dh) post-RoPE."""
+    B, Hkv, S, dh = k.shape
+    local = kind in ("attn_local", "swa_moe") and cfg.window
+    if local:
+        W = min(cfg.window, n_cache)
+        lo = max(0, S - W)
+        ring_k = jnp.zeros((B, Hkv, W, dh), k.dtype)
+        ring_v = jnp.zeros((B, Hkv, W, dh), v.dtype)
+        slots = jnp.arange(lo, S, dtype=jnp.int32) % W
+        ring_k = ring_k.at[:, :, slots].set(k[:, :, lo:])
+        ring_v = ring_v.at[:, :, slots].set(v[:, :, lo:])
+        return {"k": ring_k, "v": ring_v}
+    pad = n_cache - S
+    k_c = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    v_c = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    k_c = shard(k_c, *kv_axes())
+    v_c = shard(v_c, *kv_axes())
+    cache = {"k": k_c, "v": v_c}
+    if use_lychee and cfg.lychee.enabled and layout is not None:
+        # layout is batched (leading B dim) — vmap over (keys, layout) pairs
+        cache["index"] = jax.vmap(
+            lambda kb, lay: build_index(kb, lay, cfg.lychee))(k, layout)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+def cross_forward(p: dict, x: jax.Array, enc_k: jax.Array, enc_v: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, d); enc_k/enc_v: (B, H, F, dh) precomputed from encoder."""
+    B, S, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, dh).transpose(0, 2, 1, 3)
+    F = enc_k.shape[2]
+    out = flash_attention(
+        q, enc_k, enc_v,
+        q_pos=jnp.arange(S, dtype=jnp.int32),
+        k_pos=jnp.arange(F, dtype=jnp.int32), causal=False,
+        scale=1.0 / dh ** 0.5)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1) @ p["wo"]
+    return out
+
+
+def init_cross(key, cfg: ModelConfig) -> dict:
+    dh = cfg.resolved_head_dim
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq": trunc_normal(k1, (d, cfg.n_heads * dh), dt),
+        "wk": trunc_normal(k2, (d, cfg.n_heads * dh), dt),
+        "wv": trunc_normal(k3, (d, cfg.n_heads * dh), dt),
+        "wo": trunc_normal(k4, (cfg.n_heads * dh, d), dt, scale=0.02 / 2),
+    }
+
+
+def cross_kv(p: dict, enc_out: jax.Array, cfg: ModelConfig):
+    B, F, _ = enc_out.shape
+    dh = cfg.resolved_head_dim
+    k = (enc_out @ p["wk"]).reshape(B, F, cfg.n_heads, dh)
+    v = (enc_out @ p["wv"]).reshape(B, F, cfg.n_heads, dh)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def cross_decode(p: dict, x: jax.Array, enc_k, enc_v, cfg: ModelConfig):
+    B = x.shape[0]
+    dh = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, cfg.n_heads, dh)
+    F = enc_k.shape[2]
+    out = jax.vmap(lambda qq, kk, vv: full_decode_attention(
+        qq, kk, vv, F, 1.0 / dh ** 0.5))(q, enc_k, enc_v)
+    return out.reshape(B, 1, -1) @ p["wo"]

@@ -1,0 +1,110 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings.
+
+Pure-pytree modules: ``init_*`` returns a nested dict of arrays, ``*_apply``
+consumes it. Compute norms/softmax in f32, matmuls in the param dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import shard
+
+
+def trunc_normal(key, shape, dtype, scale: float = 0.02):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    # gemma-style (1 + scale); zero-init scale == identity for all archs
+    return (xf * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * (1.0 + p["scale"].astype(jnp.float32))
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh) or (..., S, dh); positions: (..., S) — broadcasts
+    over any leading batch dims of x not present in positions."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                     # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, dh/2)
+    if x.ndim - positions.ndim == 3:                  # head dim present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": trunc_normal(k1, (d, ff), dtype),
+        "w_in": trunc_normal(k2, (d, ff), dtype),
+        "w_out": trunc_normal(k3, (ff, d), dtype, scale=0.02 / 2),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    g = x @ p["w_gate"]
+    h = x @ p["w_in"]
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    out = (g * h) @ p["w_out"]
+    return shard(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def init_embed(key, vocab: int, d: int, dtype, tie: bool) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok_embed": trunc_normal(k1, (vocab, d), dtype)}
+    if not tie:
+        p["out_head"] = trunc_normal(k2, (d, vocab), dtype)
+    return p
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok_embed"], tokens, axis=0)
+
+
+def unembed(p: dict, x: jax.Array, softcap: float = 0.0) -> jax.Array:
+    if "out_head" in p:
+        logits = x @ p["out_head"]
+    else:
+        logits = x @ p["tok_embed"].T
+    logits = logits.astype(jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return shard(logits, "batch", None, "model")

@@ -1,0 +1,210 @@
+"""Mamba2 block (SSD — state-space duality form) [Zamba2, arXiv:2411.15242].
+
+The selective-SSM recurrence  h_t = a_t·h_{t-1} + dt_t·(B_t ⊗ x_t),
+y_t = C_t·h_t + D·x_t  (scalar decay per head) is computed with the chunked
+SSD algorithm: quadratic attention-like form inside chunks of Q tokens +
+a tiny inter-chunk state scan — O(S·Q) work, no S×S tensor, TPU-friendly
+einsums. ``chunked_ssd`` is shared with the xLSTM mLSTM cell (identical
+algebra with (k, v, q, log f, i) in place of (B, x, C, log a, dt)).
+
+Decode is the O(1) single-step recurrence on the (heads, headdim, state)
+state — the reason hybrid/SSM archs run long_500k natively.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_rmsnorm, rmsnorm, trunc_normal
+from repro.sharding.ctx import shard
+
+
+def chunked_ssd(x: jax.Array, B: jax.Array, C: jax.Array, loga: jax.Array,
+                gate: jax.Array, h0: jax.Array | None = None,
+                chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Chunked scan for  h_t = exp(loga_t)·h_{t-1} + gate_t·(B_t ⊗ x_t),
+    y_t = C_t · h_t.
+
+    x: (b, S, H, P) values; B/C: (b, S, H, N); loga/gate: (b, S, H).
+    Returns (y (b, S, H, P), h_last (b, H, P, N)).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        x, B, C, loga, gate = map(zf, (x, B, C, loga, gate))
+    nc = (S + pad) // Q
+    xc = x.reshape(b, nc, Q, H, P)
+    Bc = B.reshape(b, nc, Q, H, N)
+    Cc = C.reshape(b, nc, Q, H, N)
+    lc = loga.reshape(b, nc, Q, H)
+    gc = gate.reshape(b, nc, Q, H)
+
+    s = jnp.cumsum(lc, axis=2)                        # (b,nc,Q,H) cum log-decay
+    s_tot = s[:, :, -1]                               # (b,nc,H)
+
+    # ---- intra-chunk (quadratic, causal) -----------------------------------
+    # G[i,j] = (C_i·B_j) · exp(s_i - s_j) · gate_j,  j <= i
+    # NB: mask INSIDE the exp — for j > i, s_i - s_j is positive and grows
+    # with Q·|log f|, overflowing exp at seq >= ~128; masking after the exp
+    # hits the classic jnp.where-gradient NaN (inf in the dead branch).
+    dot = jnp.einsum("bnihd,bnjhd->bnhij", Cc, Bc)    # (b,nc,H,Q,Q)
+    si = s.transpose(0, 1, 3, 2)                      # (b,nc,H,Q)
+    dmat = si[..., :, None] - si[..., None, :]        # (b,nc,H,Q,Q)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    w = jnp.exp(jnp.where(causal, dmat, -1e30)) * dot
+    w = w * gc.transpose(0, 1, 3, 2)[..., None, :]
+    y_intra = jnp.einsum("bnhij,bnjhp->bnihp", w, xc)
+
+    # ---- chunk summary states ----------------------------------------------
+    # S_n = Σ_j exp(s_tot - s_j)·gate_j·(B_j ⊗ x_j)   (b,nc,H,P,N)
+    wj = jnp.exp(s_tot[:, :, None] - s) * gc          # (b,nc,Q,H)
+    Sn = jnp.einsum("bnjh,bnjhp,bnjhd->bnhpd", wj, xc, Bc)
+
+    # ---- inter-chunk scan ---------------------------------------------------
+    def step(h, inp):
+        st, dec = inp                                 # (b,H,P,N), (b,H)
+        h_new = h * jnp.exp(dec)[..., None, None] + st
+        return h_new, h                               # emit PREVIOUS state
+
+    h_init = (jnp.zeros((b, H, P, N), x.dtype) if h0 is None else h0)
+    h_last, h_prev = jax.lax.scan(
+        step, h_init,
+        (Sn.transpose(1, 0, 2, 3, 4), s_tot.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)          # (b,nc,H,P,N)
+
+    # ---- inter-chunk contribution -------------------------------------------
+    y_inter = jnp.einsum("bnihd,bnhpd,bnih->bnihp", Cc, h_prev,
+                         jnp.exp(s))
+    y = (y_intra + y_inter).reshape(b, nc * Q, H, P)[:, :S + 0]
+    if pad:
+        y = y[:, :S]
+    return y, h_last
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads
+    P = di // H
+    N = cfg.ssm_state
+    return di, H, P, N
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, H, P, N = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * N
+    return {
+        "w_inproj": trunc_normal(ks[0], (d, 2 * di + 2 * N + H), dt),
+        "conv_w": trunc_normal(ks[1], (cfg.conv_width, conv_ch), dt,
+                               scale=0.2),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": init_rmsnorm(di, dt),
+        "w_outproj": trunc_normal(ks[2], (di, d), dt, scale=0.02 / 2),
+    }
+
+
+def _split_proj(p, x, cfg):
+    di, H, P, N = _dims(cfg)
+    zxbcdt = x @ p["w_inproj"]
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    return z, xin, Bc, Cc, dt
+
+
+def _causal_conv(p, u, cfg):
+    """u: (b, S, ch) depthwise causal conv, width cw."""
+    cw = cfg.conv_width
+    upad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(upad[:, i:i + u.shape[1]] * p["conv_w"][i]
+              for i in range(cw))
+    return jax.nn.silu(out)
+
+
+def mamba2_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). Training/prefill (full sequence)."""
+    b, S, d = x.shape
+    di, H, P, N = _dims(cfg)
+    z, xin, Bc, Cc, dtp = _split_proj(p, x, cfg)
+    conv_in = jnp.concatenate([xin, Bc, Cc], -1)
+    conv_out = _causal_conv(p, conv_in, cfg)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dtp.astype(jnp.float32)
+                         + p["dt_bias"])               # (b,S,H)
+    A = -jnp.exp(p["A_log"])                           # (H,)
+    loga = dt * A                                      # (b,S,H)
+    xh = xin.reshape(b, S, H, P)
+    Bh = jnp.broadcast_to(Bc[:, :, None], (b, S, H, N))
+    Ch = jnp.broadcast_to(Cc[:, :, None], (b, S, H, N))
+    y, _ = chunked_ssd(xh.astype(jnp.float32), Bh.astype(jnp.float32),
+                       Ch.astype(jnp.float32), loga, dt)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, S, di).astype(x.dtype) * jax.nn.silu(z)
+    out = rmsnorm(p["norm"], y) @ p["w_outproj"]
+    return shard(out, "batch", None, None)
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di, H, P, N = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * N), dtype),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba2_prefill_state(p: dict, x: jax.Array, cfg: ModelConfig) -> dict:
+    """Run the forward and return the final recurrent state for decode."""
+    b, S, d = x.shape
+    di, H, P, N = _dims(cfg)
+    z, xin, Bc, Cc, dtp = _split_proj(p, x, cfg)
+    conv_in = jnp.concatenate([xin, Bc, Cc], -1)
+    conv_state = conv_in[:, -(cfg.conv_width - 1):]
+    conv_out = _causal_conv(p, conv_in, cfg)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(b, S, H, P)
+    Bh = jnp.broadcast_to(Bc[:, :, None], (b, S, H, N))
+    Ch = jnp.broadcast_to(Cc[:, :, None], (b, S, H, N))
+    _, h_last = chunked_ssd(xh.astype(jnp.float32), Bh.astype(jnp.float32),
+                            Ch.astype(jnp.float32), dt * A, dt)
+    return {"conv": conv_state.astype(x.dtype), "ssm": h_last}
+
+
+def mamba2_decode(p: dict, x: jax.Array, state: dict,
+                  cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, d). O(1) recurrent step."""
+    b = x.shape[0]
+    di, H, P, N = _dims(cfg)
+    z, xin, Bc, Cc, dtp = _split_proj(p, x, cfg)        # (b,1,·)
+    u = jnp.concatenate([xin, Bc, Cc], -1)              # (b,1,ch)
+    conv_hist = jnp.concatenate([state["conv"], u], 1)  # (b,cw,ch)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", conv_hist, p["conv_w"]))[:, None]
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                  # (b,H)
+    xh = xin[:, 0].reshape(b, H, P).astype(jnp.float32)
+    Bh = Bc[:, 0].astype(jnp.float32)                    # (b,N)
+    Ch = Cc[:, 0].astype(jnp.float32)
+    h = state["ssm"] * a[..., None, None] + \
+        dt[..., None, None] * jnp.einsum("bhp,bn->bhpn", xh, Bh)
+    y = jnp.einsum("bhpn,bn->bhp", h, Ch) + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype) * jax.nn.silu(z)
+    out = rmsnorm(p["norm"], y) @ p["w_outproj"]
+    new_state = {"conv": conv_hist[:, 1:], "ssm": h}
+    return shard(out, "batch", None, None), new_state

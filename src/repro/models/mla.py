@@ -1,0 +1,190 @@
+"""DeepSeek-V3 Multi-head Latent Attention [arXiv:2412.19437 §2.1].
+
+Low-rank joint KV compression (kv_lora=512) + decoupled RoPE keys (64).
+The decode path uses the *absorbed* formulation: W_uk is folded into the
+query (q̃ = W_ukᵀ q_nope) and W_uv into the output projection, so attention
+runs directly over the cached 576-dim latents — the cache is never
+decompressed. LycheeCluster indexes that latent cache as a single logical
+kv head (the UB bound in latent space equals the bound on true logits,
+because q_effᵀ·latent == the exact attention logit).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import build_index, full_decode_attention, maybe_lazy_update
+from repro.core.attention import (assemble_spans,
+                                  full_decode_attention_ctxsharded,
+                                  sparse_span_attention,
+                                  sparse_span_attention_ctxsharded)
+from repro.core.retrieval import retrieve_spans
+from repro.core.types import ChunkLayout
+from repro.kernels import ops as kops
+from repro.models.attention import flash_attention
+from repro.models.layers import (apply_rope, init_rmsnorm, rmsnorm,
+                                 trunc_normal)
+from repro.sharding.ctx import kv_axes, shard
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    qh = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "w_dq": trunc_normal(ks[0], (d, cfg.q_lora_rank), dt),
+        "q_norm": init_rmsnorm(cfg.q_lora_rank, dt),
+        "w_uq": trunc_normal(ks[1], (cfg.q_lora_rank, H * qh), dt),
+        "w_dkv": trunc_normal(ks[2], (d, cfg.kv_lora_rank), dt),
+        "kv_norm": init_rmsnorm(cfg.kv_lora_rank, dt),
+        "w_kr": trunc_normal(ks[3], (d, cfg.qk_rope_dim), dt),
+        "w_uk": trunc_normal(ks[4], (cfg.kv_lora_rank,
+                                     H * cfg.qk_nope_dim), dt),
+        "w_uv": trunc_normal(ks[5], (cfg.kv_lora_rank,
+                                     H * cfg.v_head_dim), dt),
+        "wo": trunc_normal(ks[6], (H * cfg.v_head_dim, d), dt,
+                           scale=0.02 / 2),
+    }
+
+
+def _queries(p, x, positions, cfg):
+    """Returns q_nope (B,S,H,nd), q_rope (B,S,H,rd)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nd, rd = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rmsnorm(p["q_norm"], x @ p["w_dq"])
+    q = (cq @ p["w_uq"]).reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, x, positions, cfg):
+    """Returns c_kv (B,S,kvl) normed, k_rope (B,S,rd) roped (shared heads)."""
+    c_kv = rmsnorm(p["kv_norm"], x @ p["w_dkv"])
+    k_rope = apply_rope(x @ p["w_kr"], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_forward(p: dict, x: jax.Array, positions: jax.Array,
+                cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (train/prefill). Returns (out, latent (B,S,576))
+    where latent = concat(c_kv, k_rope) — the decode cache row."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(p, x, positions, cfg)
+    c_kv, k_rope = _latents(p, x, positions, cfg)
+
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, nd)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, vd)
+    q = jnp.concatenate([q_nope, q_rope], -1).transpose(0, 2, 1, 3)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, rd))],
+        -1).transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    q = shard(q, "batch", "model", None, None)
+    k = shard(k, "batch", "model", None, None)
+    out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
+                          causal=True, scale=1.0 / (nd + rd) ** 0.5)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * vd) @ p["wo"]
+    latent = jnp.concatenate([c_kv, k_rope], -1)
+    return shard(out, "batch", None, None), latent
+
+
+def _absorbed_queries(p, x, t, cfg):
+    """Decode queries in latent space: (B, H, kvl + rd)."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    nd, rd = cfg.qk_nope_dim, cfg.qk_rope_dim
+    pos = jnp.full((1,), t, jnp.int32)
+    q_nope, q_rope = _queries(p, x, pos, cfg)               # (B,1,H,·)
+    w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, H, nd)
+    q_lat = jnp.einsum("bhn,khn->bhk", q_nope[:, 0], w_uk)  # (B,H,kvl)
+    return jnp.concatenate([q_lat, q_rope[:, 0]], -1)
+
+
+def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
+               use_lychee: bool) -> Tuple[jax.Array, dict]:
+    """x: (B,1,d); cache: {"latent": (B, N, kvl+rd)[, "index"]}."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    tt = jnp.asarray(t, jnp.int32)
+    pos = jnp.full((1,), t, jnp.int32)
+
+    c_kv, k_rope = _latents(p, x, pos, cfg)
+    lat_t = jnp.concatenate([c_kv, k_rope], -1)             # (B,1,576)
+    latent = jax.lax.dynamic_update_slice_in_dim(
+        cache["latent"], lat_t, tt, 1)
+    _, _, lat_ctx, _ = kv_axes()
+    latent = shard(latent, kv_axes()[0], lat_ctx, None)
+    cache = dict(cache, latent=latent)
+
+    q_eff = _absorbed_queries(p, x, t, cfg)                 # (B,H,576)
+    scale = 1.0 / (nd + rd) ** 0.5
+    k_c = latent[:, None]                                   # (B,1,N,576)
+    v_c = latent[:, None, :, :kvl]                          # values = c_kv
+
+    ly = cfg.lychee
+    if use_lychee and ly.enabled and "index" in cache:
+        probe = q_eff.mean(axis=1, keepdims=True)           # (B,1,576)
+
+        def per_b(idx_b, probe_b):
+            s, ln, _ = retrieve_spans(idx_b, probe_b, ly)
+            return assemble_spans(s, ln, tt, ly)
+
+        starts, lens = jax.vmap(per_b)(cache["index"], probe)
+        qg = q_eff[:, None]                                 # (B,1,H,576)
+        ctx_ax = kv_axes()[2]
+        if ly.use_kernel:
+            ctx = kops.chunk_attention(qg, k_c, v_c, starts, lens,
+                                       max_chunk=ly.max_chunk, scale=scale)
+        elif ctx_ax is not None:
+            ctx = sparse_span_attention_ctxsharded(
+                qg, k_c, v_c, starts, lens, ctx_ax,
+                max_chunk=ly.max_chunk, scale=scale)
+        else:
+            ctx = sparse_span_attention(qg, k_c, v_c, starts, lens,
+                                        max_chunk=ly.max_chunk, scale=scale)
+        ctx = ctx[:, 0]                                     # (B,H,kvl)
+        index = jax.vmap(lambda i, kc: maybe_lazy_update(
+            i, kc[None] if kc.ndim == 2 else kc, tt + 1, ly))(
+            cache["index"], latent)
+        cache = dict(cache, index=index)
+    elif kv_axes()[2] is not None:
+        ctx = full_decode_attention_ctxsharded(
+            q_eff, k_c, v_c, tt + 1, kv_axes()[2], scale=scale)
+    else:
+        ctx = jax.vmap(lambda qq, kk, vv: full_decode_attention(
+            qq, kk, vv, tt + 1, scale))(q_eff, k_c[:, 0][:, None],
+                                        v_c[:, 0][:, None])
+
+    # un-absorb values: per-head v = ctx_latent @ w_uv_h
+    w_uv = p["w_uv"].reshape(kvl, H, vd)
+    out = jnp.einsum("bhk,khv->bhv", ctx, w_uv).reshape(B, 1, H * vd)
+    out = out @ p["wo"]
+    return shard(out, "batch", None, None), cache
+
+
+def mla_prefill_cache(latent: jax.Array, cfg: ModelConfig,
+                      layout: Optional[ChunkLayout], n_cache: int,
+                      use_lychee: bool) -> dict:
+    """latent: (B, S, kvl+rd). The Lychee index treats the latent cache as a
+    single logical kv head of width 576."""
+    B, S, D = latent.shape
+    pad = n_cache - S
+    lat = jnp.pad(latent, ((0, 0), (0, pad), (0, 0)))
+    lat = shard(lat, kv_axes()[0], kv_axes()[2], None)
+    cache = {"latent": lat}
+    if use_lychee and cfg.lychee.enabled and layout is not None:
+        # layout is batched (leading B dim); latent cache = 1 logical kv head
+        cache["index"] = jax.vmap(
+            lambda lb, lay: build_index(lb[None], lay, cfg.lychee))(
+            latent, layout)
+    return cache

@@ -1,0 +1,141 @@
+"""Mixture-of-Experts FFN with per-row sorted dispatch (GShard grouping).
+
+Dispatch is computed INDEPENDENTLY per batch row (vmapped sorted ranking,
+capacity C = S·k/E·capacity_factor per row): since rows are data-sharded,
+the token gather ``x[b][table[b]]`` never crosses the data axis — the only
+communication in the MoE layer is the expert-dim math itself. Two weight
+layouts (picked by ``rules.py`` + the constraints here):
+
+* expert-parallel (E % model == 0, e.g. DeepSeek 256e on a 16-way model
+  axis): expert dim on 'model'. Dispatched activations are laid out
+  (batch=data, expert=model, cap, d) — token routing to expert shards is
+  GSPMD resharding of that tensor (an all-to-all over 'model'), exactly the
+  paper-standard EP schedule.
+* TP-inside-expert (E < model, e.g. Mixtral 8e): expert ff dim on 'model';
+  experts replicated.
+
+Aux loss: Switch-style load balancing (fraction·probability), coefficient
+``router_aux_coef``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_mlp, mlp_apply, trunc_normal
+from repro.sharding.ctx import current_mesh, is_serving, shard
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": trunc_normal(ks[0], (d, E), jnp.float32),
+        "we_gate": trunc_normal(ks[1], (E, d, f), dt),
+        "we_in": trunc_normal(ks[2], (E, d, f), dt),
+        "we_out": trunc_normal(ks[3], (E, f, d), dt, scale=0.02 / 2),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * cfg.n_shared_experts, dt)
+    return p
+
+
+def _expert_sharding(cfg: ModelConfig):
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    if is_serving() and "data" in mesh.axis_names and \
+            cfg.n_experts % (mesh.shape["model"] * mesh.shape["data"]) == 0:
+        return "ep2"          # serving: experts over model x data jointly
+    return "ep" if cfg.n_experts % mesh.shape["model"] == 0 else "tp"
+
+
+def _dispatch_row(top_e: jax.Array, top_p: jax.Array, E: int, C: int, S: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """One row's (S, k) routing -> (E, C) token table + combine weights.
+
+    Sentinel S marks empty capacity slots (points at a zero pad row)."""
+    k = top_e.shape[-1]
+    flat_e = top_e.reshape(-1)                              # (S*k,)
+    flat_t = jnp.repeat(jnp.arange(S, dtype=jnp.int32), k)
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(flat_e), flat_e,
+                                 num_segments=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(S * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = rank < C
+    table_t = jnp.full((E, C), S, jnp.int32)
+    table_t = table_t.at[jnp.where(keep, se, 0),
+                         jnp.where(keep, rank, 0)].set(
+        jnp.where(keep, st, S), mode="drop")
+    table_p = jnp.zeros((E, C), jnp.float32)
+    table_p = table_p.at[jnp.where(keep, se, 0),
+                         jnp.where(keep, rank, 0)].set(
+        jnp.where(keep, sp, 0.0), mode="drop")
+    return table_t, table_p
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). Returns (out, aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+
+    # ---- routing (f32) ----------------------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, k)                   # (B, S, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * Σ_e fraction_e · mean_prob_e
+    frac = jnp.mean(jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32),
+                    axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.router_aux_coef * E * jnp.sum(frac * mean_prob)
+
+    # ---- per-row sorted dispatch (data-local) ------------------------------
+    C = max(1, int(S * k / E * cfg.capacity_factor))
+    table_t, table_p = jax.vmap(
+        lambda te, tp: _dispatch_row(te, tp, E, C, S))(top_e, top_p)
+
+    ep = _expert_sharding(cfg)
+    e_ax = ("model", "data") if ep == "ep2" else (
+        "model" if ep == "ep" else None)
+    table_t = shard(table_t, None if ep == "ep2" else "batch", e_ax, None)
+
+    # gather: row-local (sentinel row S is the zero pad)
+    xp = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        xp[:, :, None, :],                                   # (B, S+1, 1, d)
+        table_t.reshape(B, E * C)[:, :, None, None], axis=1
+    ).reshape(B, E, C, d)
+
+    # ---- expert compute -----------------------------------------------------
+    if ep == "ep2":
+        xe = shard(xe, None, ("model", "data"), None, None)
+    elif ep == "ep":
+        xe = shard(xe, "batch", "model", None, None)
+    g = jnp.einsum("becd,edf->becf", xe, p["we_gate"])
+    h = jnp.einsum("becd,edf->becf", xe, p["we_in"])
+    if ep == "tp":
+        g = shard(g, "batch", None, None, "model")
+        h = shard(h, "batch", None, None, "model")
+    act = jax.nn.silu(g) * h
+    out_e = jnp.einsum("becf,efd->becd", act, p["we_out"])   # (B, E, C, d)
+
+    # ---- combine (row-local segment sum) ------------------------------------
+    weighted = out_e * table_p[..., None].astype(out_e.dtype)
+    out = jax.vmap(lambda w, t: jax.ops.segment_sum(
+        w.reshape(E * C, d), t.reshape(E * C), num_segments=S + 1)[:S])(
+        weighted, table_t)
+    out = shard(out, "batch", None, None)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(p["shared"], x)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,189 @@
+"""xLSTM blocks (mLSTM + sLSTM) [arXiv:2405.04517] — xLSTM[1:1] layout.
+
+mLSTM: matrix memory  C_t = f_t·C_{t-1} + i_t·(v_t k_tᵀ),  read h = C_t q_t
+with a dot-product normaliser. Training uses the same chunked-SSD algebra as
+Mamba2 (k→B, v→x, q→C, log f→loga, i→gate); the normaliser n_t runs through
+the identical recurrence with v ≡ 1. Exponential gating is tamed with a
+per-chunk stabilised form (global running-max stabilisation is decode-only,
+where it is exact) — documented deviation, DESIGN.md §2.
+
+sLSTM: scalar memory with TRUE hidden-state recurrence (recurrent weights R
+act on h_{t-1}), so training scans over time — inherently sequential, kept
+faithful to the paper.
+
+Both are attention-free: LycheeCluster does not apply (no KV cache).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_rmsnorm, rmsnorm, trunc_normal
+from repro.models.mamba2 import chunked_ssd
+from repro.sharding.ctx import shard
+
+
+def _hdims(cfg: ModelConfig):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return H, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, dh = _hdims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": trunc_normal(ks[0], (d, d), dt),
+        "wk": trunc_normal(ks[1], (d, d), dt),
+        "wv": trunc_normal(ks[2], (d, d), dt),
+        "w_gates": trunc_normal(ks[3], (d, 2 * H), dt),   # i, f pre-acts
+        "w_ogate": trunc_normal(ks[4], (d, d), dt),
+        "norm": init_rmsnorm(dh, dt),
+        "w_out": trunc_normal(ks[5], (d, d), dt, scale=0.02 / 2),
+    }
+
+
+def _mlstm_qkvg(p, x, cfg):
+    b, S, d = x.shape
+    H, dh = _hdims(cfg)
+    q = (x @ p["wq"]).reshape(b, S, H, dh)
+    k = (x @ p["wk"]).reshape(b, S, H, dh) / dh ** 0.5
+    v = (x @ p["wv"]).reshape(b, S, H, dh)
+    gates = (x @ p["w_gates"]).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gates, 2, -1)              # (b,S,H)
+    logf = -jax.nn.softplus(-f_pre)                     # log sigmoid(f)
+    i_g = jnp.exp(i_pre - 4.0)                          # tamed exp input gate
+    o = jax.nn.sigmoid(x @ p["w_ogate"])
+    return q, k, v, logf, i_g, o
+
+
+def mlstm_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, S, d = x.shape
+    H, dh = _hdims(cfg)
+    q, k, v, logf, i_g, o = _mlstm_qkvg(p, x, cfg)
+    y, _ = chunked_ssd(v.astype(jnp.float32), k.astype(jnp.float32),
+                       q.astype(jnp.float32), logf, i_g)
+    ones = jnp.ones_like(v[..., :1])
+    n, _ = chunked_ssd(ones.astype(jnp.float32), k.astype(jnp.float32),
+                       q.astype(jnp.float32), logf, i_g)
+    h = y / jnp.maximum(jnp.abs(n), 1.0)                # (b,S,H,dh)
+    h = rmsnorm(p["norm"], h.astype(x.dtype)).reshape(b, S, d)
+    out = (h * o) @ p["w_out"]
+    return shard(out, "batch", None, None)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    H, dh = _hdims(cfg)
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh, 1), jnp.float32)}
+
+
+def mlstm_prefill_state(p: dict, x: jax.Array, cfg: ModelConfig) -> dict:
+    b, S, d = x.shape
+    q, k, v, logf, i_g, o = _mlstm_qkvg(p, x, cfg)
+    _, C = chunked_ssd(v.astype(jnp.float32), k.astype(jnp.float32),
+                       q.astype(jnp.float32), logf, i_g)
+    ones = jnp.ones_like(v[..., :1])
+    _, n = chunked_ssd(ones.astype(jnp.float32), k.astype(jnp.float32),
+                       q.astype(jnp.float32), logf, i_g)
+    return {"C": C, "n": n}
+
+
+def mlstm_decode(p: dict, x: jax.Array, state: dict,
+                 cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    b = x.shape[0]
+    H, dh = _hdims(cfg)
+    q, k, v, logf, i_g, o = _mlstm_qkvg(p, x, cfg)      # S=1
+    f = jnp.exp(logf[:, 0])                             # (b,H)
+    C = state["C"] * f[..., None, None] + i_g[:, 0][..., None, None] * \
+        jnp.einsum("bhp,bhd->bhpd", v[:, 0].astype(jnp.float32),
+                   k[:, 0].astype(jnp.float32))
+    n = state["n"] * f[..., None, None] + i_g[:, 0][..., None, None] * \
+        k[:, 0].astype(jnp.float32)[..., None]
+    qf = q[:, 0].astype(jnp.float32)
+    y = jnp.einsum("bhpd,bhd->bhp", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhdo,bhd->bho", n, qf))[..., 0],
+                      1.0)
+    h = y / den[..., None]
+    h = rmsnorm(p["norm"], h.astype(x.dtype)).reshape(b, 1, -1)
+    out = (h * o) @ p["w_out"]
+    return shard(out, "batch", None, None), {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, dh = _hdims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        # input weights for (z, i, f, o) gates
+        "w_in": trunc_normal(ks[0], (d, 4 * d), dt),
+        # block-diagonal recurrent weights per head
+        "r_w": trunc_normal(ks[1], (H, dh, 4 * dh), dt),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "norm": init_rmsnorm(d, dt),
+        "w_out": trunc_normal(ks[2], (d, d), dt, scale=0.02 / 2),
+    }
+
+
+def _slstm_step(p, cfg, carry, wx_t):
+    """carry: (c, n, h, m) each (b, H, dh)."""
+    H, dh = _hdims(cfg)
+    c, n, h, m = carry
+    b = h.shape[0]
+    rh = jnp.einsum("bhd,hde->bhe", h, p["r_w"].astype(jnp.float32))
+    pre = wx_t + rh.reshape(b, -1) + p["bias"]
+    z, i_pre, f_pre, o_pre = jnp.split(pre.reshape(b, H, 4 * dh), 4, -1)
+    # stabilised exponential gating (per-head scalar gates from mean pre-act)
+    i_s = jnp.mean(i_pre, -1)
+    f_s = jnp.mean(f_pre, -1)
+    logf = -jax.nn.softplus(-f_s)
+    m_new = jnp.maximum(logf + m, i_s)
+    i_g = jnp.exp(i_s - m_new)[..., None]
+    f_g = jnp.exp(logf + m - m_new)[..., None]
+    c_new = f_g * c + i_g * jnp.tanh(z)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> Tuple:
+    H, dh = _hdims(cfg)
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    m = jnp.full((batch, H), -1e9, jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": m}
+
+
+def slstm_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                  state: dict | None = None,
+                  return_state: bool = False):
+    b, S, d = x.shape
+    wx = (x @ p["w_in"]).astype(jnp.float32)            # (b,S,4d)
+    st = state or slstm_init_state(cfg, b)
+    carry = (st["c"], st["n"], st["h"], st["m"])
+    (c, n, h, m), hs = jax.lax.scan(
+        lambda cr, w: _slstm_step(p, cfg, cr, w), carry,
+        wx.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, S, d).astype(x.dtype)
+    out = rmsnorm(p["norm"], hs) @ p["w_out"]
+    out = shard(out, "batch", None, None)
+    if return_state:
+        return out, {"c": c, "n": n, "h": h, "m": m}
+    return out
+
+
+def slstm_decode(p: dict, x: jax.Array, state: dict,
+                 cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    out, st = slstm_forward(p, x, cfg, state, return_state=True)
+    return out, st

@@ -1,0 +1,4 @@
+from repro.serving.engine import Engine, serve_step
+from repro.serving.sampler import SamplerConfig, sample
+
+__all__ = ["Engine", "SamplerConfig", "sample", "serve_step"]

@@ -1,0 +1,35 @@
+"""Token sampling: greedy / temperature / top-k / nucleus."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0      # 0 -> greedy
+    top_k: int = 0                # 0 -> disabled
+    top_p: float = 1.0            # 1 -> disabled
+
+
+def sample(key, logits: jax.Array, sc: SamplerConfig) -> jax.Array:
+    """logits: (B, V) -> (B,) int32."""
+    if sc.temperature <= 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    logits = logits / sc.temperature
+    if sc.top_k:
+        kth = jax.lax.top_k(logits, sc.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, _NEG, logits)
+    if sc.top_p < 1.0:
+        sorted_l = jnp.sort(logits, -1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_l, -1)
+        csum = jnp.cumsum(probs, -1)
+        # smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.sum(csum < sc.top_p, -1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx, -1)
+        logits = jnp.where(logits < cutoff, _NEG, logits)
+    return jax.random.categorical(key, logits, -1).astype(jnp.int32)

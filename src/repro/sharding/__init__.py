@@ -1,0 +1,8 @@
+from repro.sharding.ctx import (axis_in_mesh, batch_axes, context_parallel,
+                                current_mesh, is_context_parallel,
+                                mesh_context, shard)
+from repro.sharding.rules import decode_state_specs, param_specs
+
+__all__ = ["axis_in_mesh", "batch_axes", "context_parallel", "current_mesh",
+           "decode_state_specs", "is_context_parallel", "mesh_context", "param_specs", "shard",
+           ]

@@ -1,0 +1,212 @@
+"""Path-based parameter partitioning rules.
+
+Params are plain nested dicts; the leaf *name* (last path key) determines the
+PartitionSpec, with the convention that scanned ("stacked") parameters carry
+a leading ``groups`` dimension (detected from the path) that is never
+sharded. ``fsdp`` adds 'data'-axis sharding of the non-model weight dim for
+the very large architectures (intra-pod only — cross-pod param gathers over
+DCN would dominate; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _leaf_spec(name: str, ndim: int, cfg, fsdp: Optional[str],
+               expert_parallel: bool) -> P:
+    # 2D projections -------------------------------------------------------
+    if name in ("wq", "wk", "wv", "wkv", "w_gate", "w_in", "w_uq", "w_uk",
+                "w_uv", "w_inproj", "w_up"):
+        spec = (fsdp, "model")
+    elif name in ("wo", "w_out", "w_outproj", "w_down"):
+        spec = ("model", fsdp)
+    elif name in ("tok_embed",):
+        spec = ("model", fsdp)
+    elif name in ("out_head",):
+        spec = (fsdp, "model")
+    elif name in ("we_gate", "we_in"):      # (E, d, f)
+        if expert_parallel == "ep2":        # serving: E over model×data
+            spec = (("model", "data"), None, None)
+        elif expert_parallel:
+            spec = ("model", fsdp, None)
+        else:
+            spec = (None, fsdp, "model")
+    elif name in ("we_out",):               # (E, f, d)
+        if expert_parallel == "ep2":
+            spec = (("model", "data"), None, None)
+        elif expert_parallel:
+            spec = ("model", None, fsdp)
+        else:
+            spec = (None, "model", fsdp)
+    elif name in ("conv_w",):               # (width, channels)
+        spec = (None, "model")
+    elif name in ("A_log", "D", "dt_bias"):  # (ssm_heads,)
+        spec = ("model",)
+    else:
+        # norms, biases, routers, pos embeddings, small vectors: replicated
+        spec = ()
+    spec = spec[:ndim]
+    pad = ndim - len(spec)
+    return P(*((None,) * pad + tuple(spec)))
+
+
+def param_specs(params, cfg, mesh: Optional[Mesh] = None,
+                serving: bool = False):
+    """PartitionSpec tree matching ``params``. If ``mesh`` is given, leaves
+    whose sharded dim is not divisible by the axis size fall back to
+    replication on that axis (e.g. 8 mixtral experts on a 16-way model axis
+    keep experts replicated and shard ff instead — handled by the EP flag).
+    ``serving=True`` (no optimizer state): experts shard over
+    ('model','data') jointly when divisible, and FSDP is dropped for the
+    dense weights of EP2 archs — no per-decode-step weight gathers."""
+    fsdp = "data" if cfg.fsdp else None
+    model_size = mesh.shape.get("model", 1) if mesh is not None else 1
+    data_size = mesh.shape.get("data", 1) if mesh is not None else 1
+    ep = cfg.n_experts > 0 and model_size > 1 and \
+        cfg.n_experts % model_size == 0
+    if serving and cfg.n_experts and \
+            cfg.n_experts % (model_size * data_size) == 0:
+        ep = "ep2"
+        fsdp = None         # dense weights fit once experts are 256-way
+
+    def fix(path, leaf):
+        name = None
+        for k in reversed(path):
+            if isinstance(k, jax.tree_util.DictKey):
+                name = k.key
+                break
+        spec = _leaf_spec(name or "", leaf.ndim, cfg, fsdp, ep)
+        if mesh is not None:
+            parts = []
+            for dim, ax in zip(leaf.shape, spec):
+                ok = ax is not None and all(
+                    a in mesh.axis_names for a in
+                    (ax if isinstance(ax, tuple) else (ax,)))
+                if ok:
+                    size = 1
+                    for a in (ax if isinstance(ax, tuple) else (ax,)):
+                        size *= mesh.shape[a]
+                    parts.append(ax if dim % size == 0 else None)
+                else:
+                    parts.append(None)
+            spec = P(*parts)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+def named(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Decode-state sharding
+# ---------------------------------------------------------------------------
+# Per-leaf layout AFTER the (groups?, batch) prefix. Tokens: "H" = kv-head
+# dim (model axis when divisible), "ctx" = context/chunk/cluster dim (the
+# long axis — sharded over ctx_axes), None = replicated.
+_STATE_LAYOUTS = {
+    "k": ("H", "ctx", None), "v": ("H", "ctx", None),
+    "latent": ("ctx", None),
+    "enc_k": ("H", None, None), "enc_v": ("H", None, None),
+    "ssm": ("H", None, None),
+    "conv": (None, "H"),
+    "C": ("H", None, None),
+    "c": ("H", None), "h": ("H", None), "m": ("H",),
+    # LycheeIndex fields
+    "chunk_key": (None, "ctx", None),
+    "chunk_start": ("ctx",), "chunk_len": ("ctx",), "chunk_valid": ("ctx",),
+    "chunk_count": (),
+    "fine_centroid": (None, "ctx", None),
+    "fine_radius": (None, "ctx"), "fine_size": (None, "ctx"),
+    "fine_valid": (None, "ctx"), "fine_nchunks": (None, "ctx"),
+    "fine2coarse": (None, "ctx"),
+    "fine_chunks": (None, "ctx", None),
+    "coarse_centroid": (None, None, None), "coarse_radius": (None, None),
+    "coarse_size": (None, None), "coarse_valid": (None, None),
+    "coarse_children": (None, None, None), "coarse_nchild": (None, None),
+    "t": (),
+}
+
+
+def _path_name(path) -> str:
+    for k in reversed(path):
+        if isinstance(k, jax.tree_util.DictKey):
+            return k.key
+        if isinstance(k, jax.tree_util.GetAttrKey):
+            return k.name
+    return ""
+
+
+def decode_state_specs(state_shapes, mesh: Mesh, batch_axes, ctx_axes):
+    """PartitionSpec tree for a decode/prefill state pytree (of
+    ShapeDtypeStructs or arrays).
+
+    batch_axes: axes for the batch dim (e.g. ("pod","data")) or None.
+    ctx_axes: axes for the long context/chunk/cluster dims (e.g. ("model",)
+    for decode_32k — batch occupies data — or ("data","model") for the
+    batch-1 long_500k context-parallel decode).
+    """
+    def ax_size(ax):
+        if ax is None:
+            return 1
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        s = 1
+        for a in axs:
+            if a not in mesh.axis_names:
+                return 0          # axis missing -> unusable
+            s *= mesh.shape[a]
+        return s
+
+    def fix(path, leaf):
+        if not hasattr(leaf, "ndim"):
+            return P()
+        name = _path_name(path)
+        # the "n" field is ambiguous: mlstm normaliser (…, H, d, 1) ends in
+        # a singleton; slstm's is (…, H, dh)
+        layout = _STATE_LAYOUTS.get(name)
+        if name == "n":
+            layout = ("H", None, None) if leaf.shape[-1] == 1 else ("H", None)
+        if layout is None:
+            return P(*([None] * leaf.ndim))
+        nd = leaf.ndim
+        ntrail = len(layout)
+        if ntrail > nd:
+            return P(*([None] * nd))
+        # prefix = (groups?, batch) — batch sits right before the layout dims
+        nprefix = nd - ntrail
+        parts = [None] * nd
+        used = set()
+        if nprefix >= 1 and batch_axes is not None:
+            bsz = ax_size(batch_axes)
+            if bsz and leaf.shape[nprefix - 1] % bsz == 0 and \
+                    leaf.shape[nprefix - 1] > 0:
+                parts[nprefix - 1] = batch_axes
+                used |= set(batch_axes if isinstance(batch_axes, tuple)
+                            else (batch_axes,))
+        # ctx first (the big dim), then H if its axis is still free
+        for i, tok in enumerate(layout):
+            if tok != "ctx":
+                continue
+            dim = leaf.shape[nprefix + i]
+            csz = ax_size(ctx_axes) if ctx_axes else 0
+            caxs = set(ctx_axes if isinstance(ctx_axes, tuple)
+                       else (ctx_axes,)) if ctx_axes else set()
+            if csz and dim % csz == 0 and not (caxs & used):
+                parts[nprefix + i] = ctx_axes
+                used |= caxs
+        for i, tok in enumerate(layout):
+            if tok != "H":
+                continue
+            dim = leaf.shape[nprefix + i]
+            if "model" in mesh.axis_names and "model" not in used and \
+                    dim % mesh.shape["model"] == 0:
+                parts[nprefix + i] = "model"
+                used.add("model")
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(fix, state_shapes)

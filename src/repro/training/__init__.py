@@ -1,0 +1,6 @@
+from repro.training.data import synthetic_lm_batches
+from repro.training.optimizer import (adamw_init, adamw_update, lr_schedule)
+from repro.training.train_step import make_train_step
+
+__all__ = ["adamw_init", "adamw_update", "lr_schedule",
+           "make_train_step", "synthetic_lm_batches"]

@@ -1,0 +1,82 @@
+"""AdamW with cosine or WSD (warmup-stable-decay, MiniCPM) schedules.
+
+Plain pytree implementation (no optax dependency). Optimizer state dtype is
+configurable per-arch (``opt_state_dtype``): the 671B-class archs store
+moments in bf16 so the optimizer fits the 512x16GB production mesh —
+documented in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array     # () int32
+    mu: object          # pytree like params
+    nu: object          # pytree like params
+
+
+def adamw_init(params, dtype: str = "float32") -> AdamWState:
+    dt = jnp.dtype(dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(z, params),
+                      nu=jax.tree.map(z, params))
+
+
+def lr_schedule(step, *, base_lr: float, total_steps: int,
+                warmup: int = 100, kind: str = "cosine",
+                stable_frac: float = 0.8) -> jax.Array:
+    """kind: "cosine" | "wsd" (warmup -> stable plateau -> 1/sqrt decay,
+    MiniCPM [arXiv:2404.06395 §4])."""
+    s = jnp.asarray(step, jnp.float32)
+    w = jnp.minimum(s / max(warmup, 1), 1.0)
+    if kind == "wsd":
+        stable_end = total_steps * stable_frac
+        decay = jnp.where(
+            s <= stable_end, 1.0,
+            jnp.maximum(1.0 - (s - stable_end) /
+                        max(total_steps - stable_end, 1), 0.1) ** 0.5)
+        return base_lr * w * decay
+    prog = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+    return base_lr * w * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def adamw_update(params, grads, state: AdamWState, lr,
+                 *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """Returns (new_params, new_state, grad_norm)."""
+    gflat = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in gflat))
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    # three passes (XLA CSEs the shared moment math inside the jit)
+    def moments(g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        return m_new, v_new
+
+    def upd_p(p, g, m, v):
+        m_new, v_new = moments(g, m, v)
+        delta = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        decay = weight_decay if p.ndim >= 2 else 0.0
+        p_new = p.astype(jnp.float32) - lr * (delta + decay *
+                                              p.astype(jnp.float32))
+        return p_new.astype(p.dtype)
+
+    new_params = jax.tree.map(upd_p, params, grads, state.mu, state.nu)
+    new_mu = jax.tree.map(
+        lambda g, m, v: moments(g, m, v)[0].astype(m.dtype),
+        grads, state.mu, state.nu)
+    new_nu = jax.tree.map(
+        lambda g, m, v: moments(g, m, v)[1].astype(v.dtype),
+        grads, state.mu, state.nu)
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), gnorm

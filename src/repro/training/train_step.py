@@ -1,0 +1,105 @@
+"""Jitted, mesh-aware training step.
+
+``make_train_step`` builds the pjit'd update function: grads of
+``model.train_forward`` + AdamW, with in/out shardings derived from
+``sharding.rules.param_specs`` when a mesh is supplied. This is the function
+the multi-pod dry-run lowers for the ``train_4k`` input shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model as MD
+from repro.sharding.ctx import batch_axes, mesh_context
+from repro.sharding.rules import param_specs
+from repro.training.optimizer import (AdamWState, adamw_init, adamw_update,
+                                      lr_schedule)
+
+
+def make_train_step(cfg: ModelConfig, *, base_lr: float = 3e-4,
+                    total_steps: int = 1000, mesh: Optional[Mesh] = None,
+                    microbatch: int = 0):
+    """Returns (train_step, init_state).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatch`` > 1 enables gradient accumulation (§Perf iteration 2b):
+    the global batch is split into ``microbatch`` slices processed by a
+    lax.scan that accumulates mean gradients — live activation memory
+    shrinks ~microbatch× for one extra params-sized buffer. Numerics are
+    identical (mean of per-slice mean grads at equal slice sizes).
+    """
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = MD.train_forward(p, batch, cfg)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def step_fn(params, opt_state: AdamWState, batch):
+        if microbatch > 1:
+            def split(x):
+                return x.reshape((microbatch, x.shape[0] // microbatch)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(carry, b):
+                loss_acc, mets_acc, grads_acc = carry
+                (loss, mets), g = grads_of(params, b)
+                grads_acc = jax.tree.map(
+                    lambda a, gi: a + gi / microbatch, grads_acc, g)
+                mets_acc = jax.tree.map(
+                    lambda a, m: a + m / microbatch, mets_acc, mets)
+                return (loss_acc + loss / microbatch, mets_acc,
+                        grads_acc), None
+
+            out_shapes = jax.eval_shape(
+                grads_of, params, jax.tree.map(lambda x: x[0], mb))
+            (_, mets_s), grads_s = out_shapes
+            init = (jnp.zeros(()),
+                    jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                 mets_s),
+                    jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                 grads_s))
+            (loss, metrics, grads), _ = jax.lax.scan(acc_step, init, mb)
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        lr = lr_schedule(opt_state.step, base_lr=base_lr,
+                         total_steps=total_steps, kind=cfg.lr_schedule)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    def init_state(params) -> AdamWState:
+        return adamw_init(params, cfg.opt_state_dtype)
+
+    if mesh is None:
+        return jax.jit(step_fn), init_state
+
+    with mesh_context(mesh):
+        pspecs = param_specs(jax.eval_shape(
+            lambda: MD.init_model(jax.random.key(0), cfg)), cfg, mesh)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    opt_shard = AdamWState(step=NamedSharding(mesh, P()),
+                           mu=p_shard, nu=p_shard)
+    batch_spec = P(("pod", "data") if "pod" in mesh.axis_names else "data")
+    b_shard = NamedSharding(mesh, batch_spec)
+
+    def batch_shardings(batch):
+        return {k: b_shard for k in batch}
+
+    def jitted(params, opt_state, batch):
+        fn = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, opt_shard, batch_shardings(batch)),
+            out_shardings=(p_shard, opt_shard, None))
+        with mesh_context(mesh):
+            return fn(params, opt_state, batch)
+
+    return jitted, init_state

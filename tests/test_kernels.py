@@ -1,0 +1,97 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracles.
+
+Sweeps shapes and dtypes per the deliverable spec.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _spans(rng, C, N, max_chunk, frac_empty=0.2):
+    starts = rng.integers(0, max(1, N - max_chunk), size=C).astype(np.int32)
+    lens = rng.integers(1, max_chunk + 1, size=C).astype(np.int32)
+    empty = rng.random(C) < frac_empty
+    lens[empty] = 0
+    return jnp.asarray(starts), jnp.asarray(lens)
+
+
+@pytest.mark.parametrize("H,N,d,M", [(1, 64, 32, 8), (2, 256, 64, 24),
+                                     (4, 512, 128, 64), (3, 130, 80, 17)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("pooling", ["mean", "max"])
+def test_chunk_pool(H, N, d, M, dtype, pooling):
+    rng = np.random.default_rng(42 + M)
+    keys = jnp.asarray(rng.standard_normal((H, N, d)), dtype)
+    starts, lens = _spans(rng, M, N, 16)
+    got = ops.pool_chunk_keys(keys, starts, lens, pooling=pooling)
+    want = ref.chunk_pool_ref(keys, starts, lens, pooling=pooling)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("H,L,d", [(1, 16, 32), (2, 128, 64), (4, 300, 128),
+                                   (8, 64, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hier_score(H, L, d, dtype):
+    rng = np.random.default_rng(7)
+    probe = jnp.asarray(rng.standard_normal((H, d)), dtype)
+    cent = jnp.asarray(rng.standard_normal((H, L, d)), dtype)
+    rad = jnp.asarray(rng.random((H, L)), dtype)
+    valid = jnp.asarray(rng.random((H, L)) > 0.3)
+    got = ops.score_upper_bound(probe, cent, rad, valid)
+    want = ref.hier_score_ref(probe, cent, rad, valid)
+    tol = 1e-4 if dtype == jnp.float32 else 0.5
+    v = np.asarray(valid)
+    np.testing.assert_allclose(np.asarray(got)[v], np.asarray(want)[v],
+                               atol=tol, rtol=tol)
+    assert (np.asarray(got)[~v] <= -1e29).all()
+
+
+@pytest.mark.parametrize("B,Hkv,G,dk,dv,N,C",
+                         [(1, 1, 1, 32, 32, 128, 4),
+                          (2, 2, 4, 64, 64, 256, 12),
+                          (1, 4, 2, 128, 128, 512, 33),
+                          (2, 1, 8, 128, 64, 300, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_sparse_attention(B, Hkv, G, dk, dv, N, C, dtype, softcap):
+    rng = np.random.default_rng(C * 7 + B)
+    q = jnp.asarray(rng.standard_normal((B, Hkv, G, dk)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, N, dk)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, N, dv)), dtype)
+    starts = jnp.stack([jnp.stack([_spans(rng, C, N, 16)[0]
+                                   for _ in range(Hkv)])
+                        for _ in range(B)])
+    lens = jnp.stack([jnp.stack([_spans(rng, C, N, 16)[1]
+                                 for _ in range(Hkv)])
+                      for _ in range(B)])
+    scale = 1.0 / np.sqrt(dk)
+    got = ops.chunk_attention(q, k, v, starts, lens, scale=scale,
+                              softcap=softcap)
+    want = ref.sparse_chunk_attention_ref(q, k, v, starts, lens, scale=scale,
+                                          softcap=softcap)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_sparse_attention_all_empty():
+    """All spans masked -> output must be zeros, not NaN."""
+    B, Hkv, G, d, N, C = 1, 1, 2, 32, 64, 4
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, Hkv, G, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, N, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, N, d)), jnp.float32)
+    starts = jnp.zeros((B, Hkv, C), jnp.int32)
+    lens = jnp.zeros((B, Hkv, C), jnp.int32)
+    got = ops.chunk_attention(q, k, v, starts, lens, scale=0.1)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), 0.0, atol=1e-6)

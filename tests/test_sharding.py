@@ -1,0 +1,91 @@
+"""Sharding-rule tests: param specs and decode-state specs obey the
+policies in DESIGN.md §5, on a small host mesh (no 512-device init — these
+run inside the normal test process)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.sharding.rules import decode_state_specs, param_specs
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) != 1, reason="spec construction only; any devices")
+
+
+def _mesh(shape=(2, 2), axes=("data", "model")):
+    # AbstractMesh: enough for spec construction, no devices needed
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+def test_param_specs_tp_and_fsdp():
+    cfg = get_config("granite-3-8b")
+    mesh = _mesh()
+    params = {
+        "wq": jax.ShapeDtypeStruct((4096, 4096), jnp.bfloat16),
+        "wo": jax.ShapeDtypeStruct((4096, 4096), jnp.bfloat16),
+        "norm": {"scale": jax.ShapeDtypeStruct((4096,), jnp.bfloat16)},
+    }
+    specs = param_specs(params, cfg, mesh)
+    assert specs["wq"] == P(None, "model")
+    assert specs["wo"] == P("model", None)
+    assert all(a is None for a in specs["norm"]["scale"])
+
+    cfg_f = cfg.replace(fsdp=True)
+    specs = param_specs(params, cfg_f, cfg and mesh)
+    assert specs["wq"] == P("data", "model")
+
+
+def test_param_specs_expert_parallel_divisibility():
+    cfg = get_config("deepseek-v3-671b")      # 256 experts
+    mesh = _mesh((2, 2))
+    params = {"we_gate": jax.ShapeDtypeStruct((256, 64, 128), jnp.bfloat16)}
+    specs = param_specs(params, cfg, mesh)
+    assert specs["we_gate"][0] == "model"     # 256 % 2 == 0 -> EP
+
+    cfg8 = get_config("mixtral-8x22b")        # 8 experts on 16-way model
+    mesh16 = _mesh((2, 16))
+    params8 = {"we_gate": jax.ShapeDtypeStruct((8, 64, 128), jnp.bfloat16)}
+    specs = param_specs(params8, cfg8, mesh16)
+    assert specs["we_gate"][0] is None        # TP-inside-expert instead
+
+
+def test_decode_state_specs_batched_decode():
+    mesh = _mesh((4, 2))
+    state = {
+        "groups": ({"k": jax.ShapeDtypeStruct((3, 8, 4, 64, 16),
+                                              jnp.bfloat16),
+                    "index": {"chunk_key": jax.ShapeDtypeStruct(
+                        (3, 8, 4, 32, 16), jnp.float32)}},),
+        "t": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    specs = decode_state_specs(state, mesh, ("data",), ("model",))
+    kspec = specs["groups"][0]["k"]
+
+    def _ax(a):
+        return a if isinstance(a, tuple) else (a,) if a else ()
+    # (G, B, H, N, d): batch on data, ctx on model
+    assert _ax(kspec[1]) == ("data",)
+    assert _ax(kspec[3]) == ("model",)
+    ck = specs["groups"][0]["index"]["chunk_key"]
+    assert _ax(ck[3]) == ("model",)           # M dim on ctx axes
+    assert specs["t"] == P()
+
+
+def test_decode_state_specs_context_parallel():
+    mesh = _mesh((4, 2))
+    state = {"prelude": [{"k": jax.ShapeDtypeStruct((1, 4, 64, 16),
+                                                    jnp.bfloat16)}]}
+    specs = decode_state_specs(state, mesh, None, ("data", "model"))
+    kspec = specs["prelude"][0]["k"]
+    assert kspec[2] == ("data", "model")      # ctx over everything
+    assert kspec[0] is None                   # batch=1 unsharded
+
+
+def test_decode_state_specs_nondivisible_falls_back():
+    mesh = _mesh((4, 2))
+    state = {"prelude": [{"k": jax.ShapeDtypeStruct((1, 4, 63, 16),
+                                                    jnp.bfloat16)}]}
+    specs = decode_state_specs(state, mesh, None, ("data", "model"))
+    assert specs["prelude"][0]["k"][2] is None    # 63 % 8 != 0 -> replicate

@@ -1,0 +1,356 @@
+"""End-to-end behaviour tests for the paper's system (deliverable c).
+
+Key invariants validated here:
+
+* Budget-sufficiency degeneration (paper App. F.1): when the retrieval
+  budget covers the whole context, LycheeCluster's decode output matches
+  full attention (retrieval returns everything; exact attention).
+* Triangle-inequality upper bound (Eqn. 2): UB(q, u) >= q·v for every
+  member v of u, at every index level, including after lazy updates.
+* Structure-aware chunking: boundary alignment, min/max constraints,
+  fixed-size degradation on delimiter-free input.
+* Lazy update (Algorithm 1 step 4): monotonic radius, coverage of the
+  grafted chunk, buffer cadence.
+* Retrieval recall ordering: Lychee recall >= random selection at equal
+  budget on clustered data (the mechanism behind Table 3).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LycheeConfig
+from repro.core import (build_index, chunk_sequence, fixed_chunking,
+                        full_decode_attention, retrieve, retrieve_dense,
+                        sparse_decode_attention, synthetic_delimiter_table,
+                        ub_scores)
+from repro.core.attention import assemble_spans
+from repro.core.retrieval import retrieve_spans
+from repro.core.update import lazy_update, maybe_lazy_update
+from repro.kernels.ref import sparse_chunk_attention_ref
+
+
+def _mk_index(rng, N=256, H=2, d=32, cfg=None, clustered=False):
+    cfg = cfg or LycheeConfig(min_chunk=8, max_chunk=16, max_coarse=8,
+                              sink=4, buffer_size=16, budget=96)
+    if clustered:
+        # well-separated directions in contiguous runs — the paper's "strong
+        # local coherence" premise (§4.1): nearby tokens share semantics
+        n_modes = 8
+        modes = rng.standard_normal((n_modes, d)) * 4.0
+        ids = np.repeat(rng.integers(0, n_modes, size=N // 24 + 1), 24)[:N]
+        keys = modes[ids] + rng.standard_normal((N, d)) * 0.3
+        keys = np.broadcast_to(keys, (H, N, d)).copy()
+    else:
+        keys = rng.standard_normal((H, N, d))
+    keys = jnp.asarray(keys, jnp.float32)
+    table = jnp.asarray(synthetic_delimiter_table(97))
+    tokens = jnp.asarray(rng.integers(0, 97, size=(N,)), jnp.int32)
+    layout = chunk_sequence(tokens, table, cfg)
+    index = build_index(keys, layout, cfg)
+    return keys, layout, index, cfg
+
+
+# ---------------------------------------------------------------------------
+# Eqn. 2 upper bound
+# ---------------------------------------------------------------------------
+def test_ub_bounds_members_fine_level():
+    rng = np.random.default_rng(0)
+    keys, layout, index, cfg = _mk_index(rng)
+    q = jnp.asarray(rng.standard_normal((2, 32)), jnp.float32)
+    for h in range(2):
+        ub = ub_scores(q[h], index.fine_centroid[h], index.fine_radius[h],
+                       index.fine_valid[h])
+        # every chunk's true score must be <= its cluster's UB
+        L = index.fine_centroid.shape[1]
+        ck = np.asarray(index.chunk_key[h])
+        for l in range(L):
+            if not bool(index.fine_valid[h, l]):
+                continue
+            members = np.asarray(index.fine_chunks[h, l])
+            members = members[members >= 0]
+            for m in members:
+                true = float(np.dot(np.asarray(q[h]), ck[m]))
+                assert true <= float(ub[l]) + 1e-4
+
+
+def test_ub_bounds_members_coarse_level():
+    rng = np.random.default_rng(1)
+    keys, layout, index, cfg = _mk_index(rng)
+    q = jnp.asarray(rng.standard_normal((32,)), jnp.float32)
+    h = 0
+    ub_g = ub_scores(q, index.coarse_centroid[h], index.coarse_radius[h],
+                     index.coarse_valid[h])
+    P = index.coarse_centroid.shape[1]
+    for p in range(P):
+        if not bool(index.coarse_valid[h, p]):
+            continue
+        kids = np.asarray(index.coarse_children[h, p])
+        kids = kids[kids >= 0]
+        for l in kids:
+            mu_l = np.asarray(index.fine_centroid[h, l])
+            true = float(np.dot(np.asarray(q), mu_l))
+            assert true <= float(ub_g[p]) + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Chunking
+# ---------------------------------------------------------------------------
+def test_chunking_partitions_sequence():
+    rng = np.random.default_rng(2)
+    cfg = LycheeConfig()
+    table = jnp.asarray(synthetic_delimiter_table(1000))
+    tokens = jnp.asarray(rng.integers(0, 1000, size=(512,)), jnp.int32)
+    lay = chunk_sequence(tokens, table, cfg)
+    starts = np.asarray(lay.start)
+    lens = np.asarray(lay.length)
+    valid = np.asarray(lay.valid)
+    # contiguous, ordered, complete cover of [0, 512)
+    pos = 0
+    for s, ln, v in zip(starts, lens, valid):
+        if not v:
+            continue
+        assert s == pos
+        assert 1 <= ln <= cfg.max_chunk
+        pos += ln
+    assert pos == 512
+    # all but the last valid chunk respect min_chunk
+    nz = np.where(valid)[0]
+    assert (lens[nz[:-1]] >= cfg.min_chunk).all()
+
+
+def test_chunking_splits_at_strongest_delimiter():
+    cfg = LycheeConfig(min_chunk=4, max_chunk=8)
+    # token 5 = strength-4 delimiter; all else 0
+    table = np.zeros(10, np.int32)
+    table[5] = 4
+    tokens = np.zeros(32, np.int64)
+    tokens[6] = 5          # inside the look-ahead window of chunk 0
+    lay = chunk_sequence(jnp.asarray(tokens, jnp.int32),
+                         jnp.asarray(table), cfg)
+    # chunk 0 must end right AFTER position 6 (length 7)
+    assert int(lay.length[0]) == 7
+
+
+def test_chunking_degrades_to_fixed_without_delimiters():
+    cfg = LycheeConfig(min_chunk=8, max_chunk=16)
+    table = jnp.zeros(100, jnp.int32)
+    tokens = jnp.asarray(np.arange(160) % 100, jnp.int32)
+    lay = chunk_sequence(tokens, table, cfg)
+    lens = np.asarray(lay.length)[np.asarray(lay.valid)]
+    assert (lens == 16).all()
+
+
+def test_fixed_chunking_matches_page_layout():
+    cfg = LycheeConfig()
+    lay = fixed_chunking(128, 16, cfg)
+    assert int(lay.count) == 8
+    assert (np.asarray(lay.length)[:8] == 16).all()
+
+
+# ---------------------------------------------------------------------------
+# Budget-sufficient degeneration to full attention (App. F.1)
+# ---------------------------------------------------------------------------
+def test_budget_sufficient_equals_full_attention():
+    rng = np.random.default_rng(3)
+    N, H, G, d = 192, 2, 2, 32
+    cfg = LycheeConfig(min_chunk=8, max_chunk=16, max_coarse=64,
+                       top_kg=64, sink=16, buffer_size=32, budget=100000)
+    keys, layout, index, _ = _mk_index(rng, N=N, H=H, d=d, cfg=cfg)
+    v_cache = jnp.asarray(rng.standard_normal((H, N, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((H * G, d)), jnp.float32)
+    t = N
+
+    probe = q.reshape(H, G, d).mean(1)
+    ret = retrieve(index, probe, cfg)
+    out = sparse_decode_attention(q, keys, v_cache, ret.token_idx,
+                                  ret.token_mask, t, cfg, scale=d ** -0.5)
+    want = full_decode_attention(q, keys, v_cache, t, scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_span_path_budget_sufficient_equals_full_attention():
+    """The TPU-native span pipeline (retrieve_spans -> assemble_spans ->
+    chunk attention) must also degenerate to full attention."""
+    rng = np.random.default_rng(4)
+    N, H, G, d = 192, 2, 2, 32
+    cfg = LycheeConfig(min_chunk=8, max_chunk=16, max_coarse=64,
+                       top_kg=64, sink=16, buffer_size=32, budget=100000)
+    keys, layout, index, _ = _mk_index(rng, N=N, H=H, d=d, cfg=cfg)
+    v_cache = jnp.asarray(rng.standard_normal((H, N, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((H * G, d)), jnp.float32)
+    t = N
+    probe = q.reshape(H, G, d).mean(1)
+    s, ln, _ = retrieve_spans(index, probe, cfg)
+    starts, lens = assemble_spans(s, ln, t, cfg)
+    out = sparse_chunk_attention_ref(
+        q.reshape(1, H, G, d), keys[None], v_cache[None],
+        starts[None], lens[None], max_chunk=cfg.max_chunk, scale=d ** -0.5)
+    want = full_decode_attention(q, keys, v_cache, t, scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(out).reshape(H * G, d),
+                               np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Lazy update (Algorithm 1 step 4)
+# ---------------------------------------------------------------------------
+def test_lazy_update_monotonic_radius_and_coverage():
+    rng = np.random.default_rng(5)
+    keys, layout, index, cfg = _mk_index(rng)
+    H, M, d = index.chunk_key.shape
+    new_key = jnp.asarray(rng.standard_normal((H, d)), jnp.float32)
+    new_key = new_key / jnp.linalg.norm(new_key, axis=-1, keepdims=True)
+    upd = lazy_update(index, new_key, 256, 16, cfg)
+    # radii never shrink
+    assert (np.asarray(upd.fine_radius) >=
+            np.asarray(index.fine_radius) - 1e-6).all()
+    assert (np.asarray(upd.coarse_radius) >=
+            np.asarray(index.coarse_radius) - 1e-6).all()
+    # the grafted chunk is covered: ||new - mu|| <= r for its cluster
+    sim = jnp.einsum("hld,hd->hl", index.fine_centroid, new_key)
+    sim = jnp.where(index.fine_valid, sim, -1e30)
+    fid = np.asarray(jnp.argmax(sim, -1))
+    for h in range(H):
+        mu = np.asarray(upd.fine_centroid[h, fid[h]])
+        r = float(upd.fine_radius[h, fid[h]])
+        assert np.linalg.norm(np.asarray(new_key[h]) - mu) <= r + 1e-5
+    # chunk appended
+    assert int(upd.chunk_count) == int(index.chunk_count) + 1
+    assert bool(upd.chunk_valid[int(index.chunk_count)])
+
+
+def test_maybe_lazy_update_cadence():
+    rng = np.random.default_rng(6)
+    keys, layout, index, cfg = _mk_index(rng)
+    keys_big = jnp.asarray(rng.standard_normal((2, 512, 32)), jnp.float32)
+    # not due: t not a multiple of max_chunk
+    upd = maybe_lazy_update(index, keys_big, 257, cfg)
+    assert int(upd.chunk_count) == int(index.chunk_count)
+    # due
+    upd = maybe_lazy_update(index, keys_big, 272, cfg)
+    assert int(upd.chunk_count) == int(index.chunk_count) + 1
+
+
+# ---------------------------------------------------------------------------
+# Retrieval quality ordering (mechanism behind Tab. 3 / Fig. 2)
+# ---------------------------------------------------------------------------
+def _recall(token_idx, token_mask, truth_idx):
+    got = set(np.asarray(token_idx)[np.asarray(token_mask)].tolist())
+    return len(got & set(truth_idx.tolist())) / len(truth_idx)
+
+
+def test_retrieval_recall_beats_random_on_clustered_keys():
+    rng = np.random.default_rng(7)
+    N, H, d = 512, 1, 32
+    cfg = LycheeConfig(min_chunk=8, max_chunk=16, max_coarse=16,
+                       top_kg=4, sink=0, buffer_size=0, budget=128)
+    keys, layout, index, _ = _mk_index(rng, N=N, H=H, d=d, cfg=cfg,
+                                       clustered=True)
+    # query aligned with one random key -> ground truth = top-k by dot
+    q = keys[0, rng.integers(0, N)] + 0.1 * rng.standard_normal(32)
+    q = jnp.asarray(q, jnp.float32)[None]
+    scores = np.asarray(keys[0] @ q[0])
+    truth = np.argsort(-scores)[:64]
+
+    ret = retrieve(index, q, cfg)
+    r_lychee = _recall(ret.token_idx[0], ret.token_mask[0], truth)
+    # random baseline at the SAME actual token count
+    n_got = len(set(np.asarray(ret.token_idx[0])[
+        np.asarray(ret.token_mask[0])].tolist()))
+    rand_idx = rng.choice(N, size=min(n_got, N), replace=False)
+    r_rand = len(set(rand_idx.tolist()) & set(truth.tolist())) / 64
+    assert r_lychee > r_rand, (r_lychee, r_rand)
+    assert r_lychee > 0.5
+
+
+def test_hierarchical_close_to_dense_retrieval():
+    """Coarse pruning (top-kg) should rarely lose what dense fine-scoring
+    finds — on clustered data the sets overlap heavily."""
+    rng = np.random.default_rng(8)
+    N, H, d = 512, 1, 32
+    cfg = LycheeConfig(min_chunk=8, max_chunk=16, max_coarse=16,
+                       top_kg=6, sink=0, buffer_size=0, budget=128)
+    keys, layout, index, _ = _mk_index(rng, N=N, H=H, d=d, cfg=cfg,
+                                       clustered=True)
+    q = jnp.asarray(rng.standard_normal((1, d)), jnp.float32)
+    hier = retrieve(index, q, cfg)
+    dense = retrieve_dense(index, q, cfg)
+    h_set = set(np.asarray(hier.fine_ids[0])[
+        np.asarray(hier.fine_mask[0])].tolist())
+    d_set = set(np.asarray(dense.fine_ids[0])[
+        np.asarray(dense.fine_mask[0])].tolist())
+    if d_set:
+        overlap = len(h_set & d_set) / len(d_set)
+        assert overlap >= 0.75, (h_set, d_set)
+
+
+# ---------------------------------------------------------------------------
+# Context-sharded flash combine == oracle (the shard_map decode path)
+# ---------------------------------------------------------------------------
+def test_partial_attention_shard_combine_matches_oracle():
+    """Emulate the §Perf-iteration-1d shard_map: run _span_attend_partial
+    per context shard and flash-combine; must equal the single-pass
+    oracle exactly."""
+    from repro.core.attention import _span_attend_partial
+    rng = np.random.default_rng(11)
+    B, H, G, d, N, C, mc = 2, 2, 2, 32, 256, 9, 16
+    n_shards = 4
+    q = jnp.asarray(rng.standard_normal((B, H, G, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, N, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, N, d)), jnp.float32)
+    starts = jnp.asarray(rng.integers(0, N - mc, size=(B, H, C)), jnp.int32)
+    lens = jnp.asarray(rng.integers(0, mc + 1, size=(B, H, C)), jnp.int32)
+
+    sn = N // n_shards
+    ms, ls, accs = [], [], []
+    for s_i in range(n_shards):
+        lo = s_i * sn
+        m, l, acc = _span_attend_partial(
+            q, k[:, :, lo:lo + sn], v[:, :, lo:lo + sn], starts, lens,
+            lo, lo + sn, max_chunk=mc, scale=d ** -0.5, softcap=0.0)
+        ms.append(m), ls.append(l), accs.append(acc)
+    m_g = jnp.max(jnp.stack(ms), 0)
+    l_g = sum(l * jnp.exp(m - m_g) for m, l in zip(ms, ls))
+    acc_g = sum(a * jnp.exp(m - m_g) for m, a in zip(ms, accs))
+    got = acc_g / jnp.maximum(l_g, 1e-30)
+
+    want = sparse_chunk_attention_ref(q, k, v, starts, lens, max_chunk=mc,
+                                      scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_full_decode_ctxsharded_combine_matches_oracle():
+    """§Perf iteration 4: dense decode flash-combine — emulate the shard
+    partials and verify the combine equals single-pass full attention."""
+    rng = np.random.default_rng(12)
+    B, Hkv, G, d, N = 2, 3, 2, 16, 96
+    t = 77
+    q = jnp.asarray(rng.standard_normal((B, Hkv * G, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, N, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, N, d)), jnp.float32)
+    n_shards, sn = 4, N // 4
+    _NEG = -1e30
+    ms, ls, accs = [], [], []
+    qg = q.reshape(B, Hkv, G, d)
+    for s_i in range(n_shards):
+        lo = s_i * sn
+        pos = lo + np.arange(sn)
+        mask = jnp.asarray(pos < t)
+        logits = jnp.einsum("bhgd,bhnd->bhgn", qg, k[:, :, lo:lo + sn]
+                            ) * (d ** -0.5)
+        logits = jnp.where(mask[None, None, None], logits, _NEG)
+        m = jnp.max(logits, -1, keepdims=True)
+        p = jnp.where(mask[None, None, None], jnp.exp(logits - m), 0.0)
+        ms.append(m), ls.append(jnp.sum(p, -1, keepdims=True))
+        accs.append(jnp.einsum("bhgn,bhnd->bhgd", p, v[:, :, lo:lo + sn]))
+    m_g = jnp.max(jnp.stack(ms), 0)
+    l_g = sum(l * jnp.exp(m - m_g) for m, l in zip(ms, ls))
+    acc_g = sum(a * jnp.exp(m - m_g) for m, a in zip(ms, accs))
+    got = (acc_g / jnp.maximum(l_g, 1e-30)).reshape(B, Hkv * G, d)
+
+    want = jax.vmap(lambda qq, kk, vv: full_decode_attention(
+        qq, kk, vv, t, d ** -0.5))(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
