@@ -8,6 +8,13 @@ per-token decode latency for both plus the retrieval statistics.
 
 Run:  PYTHONPATH=src python examples/serve_longcontext.py \
           [--arch granite-3-8b] [--ctx 2048] [--gen 64] [--batch 2]
+
+With --stream the same engine instead replays a mixed-length request trace
+through the continuous-batching scheduler (admission into freed slots via
+the per-slot prefill splice), printing throughput and latency percentiles:
+
+      PYTHONPATH=src python examples/serve_longcontext.py --stream \
+          [--requests 8] [--rate 1.0]
 """
 import argparse
 
@@ -16,7 +23,7 @@ import numpy as np
 
 from repro.configs.base import LycheeConfig, get_config
 from repro.models import model as MD
-from repro.serving import Engine, SamplerConfig
+from repro.serving import Engine, SamplerConfig, make_trace
 
 
 def main():
@@ -25,6 +32,10 @@ def main():
     ap.add_argument("--ctx", type=int, default=2048)
     ap.add_argument("--gen", type=int, default=64)
     ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--stream", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s); 0 = offline")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -33,9 +44,23 @@ def main():
     cfg = get_config(args.arch, reduced=True).replace(
         dtype="float32", lychee=lychee)
     params = MD.init_model(jax.random.key(0), cfg)
+    n_cache = args.ctx + (cfg.n_patches or 0) + args.gen + 32
+
+    if args.stream:
+        trace = make_trace(rng, args.requests, cfg.vocab,
+                           prompt_lens=(args.ctx // 4, args.ctx),
+                           gen_lens=(args.gen // 2, args.gen),
+                           rate_rps=args.rate)
+        engine = Engine(cfg, params, n_cache=n_cache)
+        res = engine.serve(trace, n_slots=args.batch, mode="continuous",
+                           verbose=True)
+        print(f"[stream] {res.total_new_tokens} tokens in {res.wall_s:.2f}s"
+              f" = {res.tokens_per_s:.1f} tok/s   "
+              f"p50 {res.p50_latency_s:.2f}s  p99 {res.p99_latency_s:.2f}s")
+        return
+
     prompts = rng.integers(0, cfg.vocab,
                            size=(args.batch, args.ctx)).astype(np.int32)
-    n_cache = args.ctx + (cfg.n_patches or 0) + args.gen + 32
 
     extras = {}
     if cfg.n_patches:

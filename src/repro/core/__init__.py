@@ -7,14 +7,16 @@ from repro.core.index import build_index
 from repro.core.kmeans import spherical_kmeans
 from repro.core.pooling import l2_normalize, pool_chunks
 from repro.core.retrieval import Retrieval, retrieve, retrieve_dense, ub_scores
-from repro.core.types import ChunkLayout, LycheeIndex, empty_index, index_dims
-from repro.core.update import lazy_update, maybe_lazy_update
+from repro.core.types import (ChunkLayout, LycheeIndex, empty_index,
+                              empty_index_like, index_dims, pad_index)
+from repro.core.update import lazy_update, maybe_lazy_update, reset_index
 
 __all__ = [
     "ChunkLayout", "LycheeIndex", "Retrieval", "build_index",
     "byte_delimiter_table", "chunk_sequence", "empty_index",
-    "fixed_chunking", "full_decode_attention", "index_dims", "l2_normalize",
-    "lazy_update", "maybe_lazy_update", "pool_chunks", "retrieve",
+    "empty_index_like", "fixed_chunking", "full_decode_attention",
+    "index_dims", "l2_normalize", "lazy_update", "maybe_lazy_update",
+    "pad_index", "pool_chunks", "reset_index", "retrieve",
     "retrieve_dense", "sparse_decode_attention", "spherical_kmeans",
     "synthetic_delimiter_table", "ub_scores",
 ]

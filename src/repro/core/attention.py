@@ -21,6 +21,15 @@ from repro.configs.base import LycheeConfig
 _NEG = -1e30
 
 
+def _shard_map():
+    """jax.shard_map landed after the experimental module; take either."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map as fn
+    return fn
+
+
 def assemble_active_set(token_idx: jax.Array, token_mask: jax.Array,
                         t, sink: int, buffer: int, n_ctx: int):
     """Build the final gather list for one kv head.
@@ -172,7 +181,7 @@ def sparse_span_attention_ctxsharded(q, k_cache, v_cache, starts, lens,
     """
     from repro.sharding.ctx import batch_axes, current_mesh, \
         is_context_parallel
-    shard_map = jax.shard_map
+    shard_map = _shard_map()
     mesh = current_mesh()
     P = jax.sharding.PartitionSpec
     baxes = None if is_context_parallel() else batch_axes()
@@ -217,7 +226,8 @@ def full_decode_attention_ctxsharded(q, k_cache, v_cache, t, ctx_axes, *,
     WHOLE cache per step (minicpm decode_32k: 15 GiB/device at B=128,
     36 heads); here each shard computes logits over its local slab and
     only (m, l, acc) stats cross shards. q: (B, Hq, dk); caches
-    (B, Hkv, N, d*) sharded over ``ctx_axes`` on dim 2. Returns (B, Hq, dv).
+    (B, Hkv, N, d*) sharded over ``ctx_axes`` on dim 2; t: scalar or (B,)
+    valid lengths (per-slot under continuous batching). Returns (B, Hq, dv).
     """
     from repro.sharding.ctx import batch_axes, current_mesh, \
         is_context_parallel
@@ -230,26 +240,27 @@ def full_decode_attention_ctxsharded(q, k_cache, v_cache, t, ctx_axes, *,
     bspec = baxes if (baxes and B % _axes_size(mesh, baxes) == 0) else None
     qs = P(bspec, None, None)
     kvs = P(bspec, None, ctx_axes, None)
+    ts = P(bspec)
     n_shards = _axes_size(mesh, ctx_axes)
     shard_n = N // n_shards
-    tt = jnp.asarray(t, jnp.int32)
+    tt = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
 
-    def body(q_l, k_l, v_l):
+    def body(q_l, k_l, v_l, t_l):
         idx = jnp.zeros((), jnp.int32)
         for ax in (ctx_axes if isinstance(ctx_axes, tuple) else (ctx_axes,)):
             idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
         lo = idx * shard_n
         pos = lo + jnp.arange(shard_n, dtype=jnp.int32)
-        mask = pos < tt                                    # (n_loc,)
+        mask = pos[None, :] < t_l[:, None]                 # (B_l, n_loc)
         B_l = q_l.shape[0]                                 # batch LOCAL shape
         qg = q_l.reshape(B_l, Hkv, G, dk)
         logits = jnp.einsum("bhgd,bhnd->bhgn", qg.astype(k_l.dtype), k_l,
                             preferred_element_type=jnp.float32) * scale
         if softcap:
             logits = softcap * jnp.tanh(logits / softcap)
-        logits = jnp.where(mask[None, None, None, :], logits, _NEG)
+        logits = jnp.where(mask[:, None, None, :], logits, _NEG)
         m = jnp.max(logits, -1, keepdims=True)
-        p = jnp.where(mask[None, None, None, :],
+        p = jnp.where(mask[:, None, None, :],
                       jnp.exp(logits - m), 0.0)
         l = jnp.sum(p, -1, keepdims=True)
         acc = jnp.einsum("bhgn,bhnd->bhgd", p.astype(v_l.dtype), v_l,
@@ -261,9 +272,9 @@ def full_decode_attention_ctxsharded(q, k_cache, v_cache, t, ctx_axes, *,
         out = acc_g / jnp.maximum(l_g, 1e-30)
         return out.reshape(B_l, Hq, -1).astype(q_l.dtype)
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(qs, kvs, kvs),
-                       out_specs=qs)
-    return fn(q, k_cache, v_cache)
+    fn = _shard_map()(body, mesh=mesh, in_specs=(qs, kvs, kvs, ts),
+                      out_specs=qs)
+    return fn(q, k_cache, v_cache, tt)
 
 
 def _axes_size(mesh, axes) -> int:

@@ -71,6 +71,68 @@ def index_dims(N: int, cfg: LycheeConfig, chunk_cap: int = 6):
     return M, L, P, chunk_cap, FC
 
 
+def empty_index_like(index: LycheeIndex) -> LycheeIndex:
+    """A fresh (all-invalid, cursor-0) index with the same static shapes.
+
+    Zero leaves ARE the empty index: every validity mask is False and both
+    count cursors are 0, so retrieval masks everything and ``lazy_update``
+    appends from slot 0 — the contract a recycled serving slot relies on.
+    """
+    return jax.tree.map(jnp.zeros_like, index)
+
+
+def pad_index(index: LycheeIndex, N_cap: int, cfg: LycheeConfig,
+              chunk_cap: int = 6) -> LycheeIndex:
+    """Grow an index built over a short prompt to the STATIC capacities of an
+    ``N_cap``-token cache (continuous batching: every serving slot must carry
+    identical leaf shapes regardless of the admitted prompt's length, so a
+    freed slot can be overwritten by any request's state).
+
+    Padded chunk/fine/coarse slots are invalid (``valid=False``); member
+    lists pad with -1 (the "no member" sentinel the retrieval masks honour).
+    The ``chunk_count`` cursor is untouched, so decode-time ``lazy_update``
+    grafts dynamic chunks into the new headroom.
+    """
+    H, M, d = index.chunk_key.shape
+    L = index.fine_centroid.shape[1]
+    P = index.coarse_centroid.shape[1]
+    CC = index.fine_chunks.shape[-1]
+    FC = index.coarse_children.shape[-1]
+    M2, L2, P2, CC2, FC2 = index_dims(N_cap, cfg, chunk_cap)
+    M2, L2, P2, FC2 = (max(M2, M), max(L2, L), max(P2, P), max(FC2, FC))
+    if (M2, L2, P2, FC2) == (M, L, P, FC):
+        return index
+
+    def pad(x, axis, n, fill=0):
+        if n == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, n)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    return index._replace(
+        chunk_key=pad(index.chunk_key, 1, M2 - M),
+        chunk_start=pad(index.chunk_start, 0, M2 - M),
+        chunk_len=pad(index.chunk_len, 0, M2 - M),
+        chunk_valid=pad(index.chunk_valid, 0, M2 - M),
+        fine_centroid=pad(index.fine_centroid, 1, L2 - L),
+        fine_radius=pad(index.fine_radius, 1, L2 - L),
+        fine_size=pad(index.fine_size, 1, L2 - L),
+        fine_valid=pad(index.fine_valid, 1, L2 - L),
+        fine_chunks=pad(pad(index.fine_chunks, 1, L2 - L, fill=-1),
+                        2, CC2 - CC, fill=-1),
+        fine_nchunks=pad(index.fine_nchunks, 1, L2 - L),
+        coarse_centroid=pad(index.coarse_centroid, 1, P2 - P),
+        coarse_radius=pad(index.coarse_radius, 1, P2 - P),
+        coarse_size=pad(index.coarse_size, 1, P2 - P),
+        coarse_valid=pad(index.coarse_valid, 1, P2 - P),
+        coarse_children=pad(pad(index.coarse_children, 1, P2 - P, fill=-1),
+                            2, FC2 - FC, fill=-1),
+        coarse_nchild=pad(index.coarse_nchild, 1, P2 - P),
+        fine2coarse=pad(index.fine2coarse, 1, L2 - L),
+    )
+
+
 def empty_index(N: int, H: int, d: int, cfg: LycheeConfig,
                 dtype=jnp.float32, chunk_cap: int = 6) -> LycheeIndex:
     M, L, P, CC, FC = index_dims(N, cfg, chunk_cap)

@@ -14,7 +14,19 @@ import jax.numpy as jnp
 
 from repro.configs.base import LycheeConfig
 from repro.core.pooling import l2_normalize
-from repro.core.types import LycheeIndex
+from repro.core.types import LycheeIndex, empty_index_like
+
+
+def reset_index(index: LycheeIndex) -> LycheeIndex:
+    """Restart the index of ONE (layer, batch element): every tier emptied,
+    chunk cursor back to 0, all validity masks False.
+
+    This is the per-slot lifecycle hook for continuous batching — when a
+    serving slot drains, its index must not leak stale chunks into the next
+    admitted request's retrieval. Shapes are preserved so the reset composes
+    with batched/stacked state surgery (``models.model.reset_slot``).
+    """
+    return empty_index_like(index)
 
 
 def pack_dynamic_chunk(keys: jax.Array, start, length: int) -> jax.Array:
@@ -116,7 +128,10 @@ def maybe_lazy_update(index: LycheeIndex, keys: jax.Array, t,
                       cfg: LycheeConfig) -> LycheeIndex:
     """Conditionally graft a dynamic chunk once ``max_chunk`` new tokens have
     accumulated past the last indexed position. ``t`` = length AFTER the
-    current token was appended. Jit-safe (lax.cond)."""
+    current token was appended. Jit-safe (lax.cond). Under the continuous-
+    batching engine ``t`` is per-slot and this runs vmapped over the batch,
+    where the cond lowers to a select — every slot computes the graft and
+    keeps it only when its own cadence hits."""
     t = jnp.asarray(t, jnp.int32)
     size = jnp.int32(cfg.max_chunk)
     due = (t % size) == 0

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import HBM as _HBM
+
 _EPS = 1e-6
 
 
@@ -72,7 +74,7 @@ def chunk_pool(keys: jax.Array, starts: jax.Array, lens: jax.Array, *,
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(Mp // TM,),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.MemorySpace.HBM)],
+        in_specs=[pl.BlockSpec(memory_space=_HBM)],
         out_specs=pl.BlockSpec((TM, d), lambda i, *_: (i, 0)),
         scratch_shapes=[pltpu.VMEM((max_chunk, d), keys.dtype),
                         pltpu.SemaphoreType.DMA],

@@ -1,0 +1,12 @@
+"""Pallas TPU API compatibility across jax versions.
+
+jax renamed ``TPUMemorySpace`` -> ``MemorySpace`` (and grew an ``HBM``
+member; older versions spell it ``ANY``). The kernels import the resolved
+``HBM`` token from here so the rename is absorbed in exactly one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+MEM = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+HBM = getattr(MEM, "HBM", MEM.ANY)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import HBM as _HBM
+
 _NEG = -1e30
 
 
@@ -115,8 +117,8 @@ def sparse_chunk_attention(q: jax.Array, k_cache: jax.Array,
         grid=(Cp // TC,),
         in_specs=[
             pl.BlockSpec((G, dk), lambda i, *_: (0, 0)),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.HBM),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.HBM),
+            pl.BlockSpec(memory_space=_HBM),
+            pl.BlockSpec(memory_space=_HBM),
         ],
         out_specs=pl.BlockSpec((G, dv), lambda i, *_: (0, 0)),
         scratch_shapes=[

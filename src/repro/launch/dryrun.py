@@ -188,6 +188,8 @@ def run_one(arch: str, shape: str, multi_pod: bool, outdir: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):      # older jax: one dict per device
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     rec = {
         "arch": arch, "shape": shape,

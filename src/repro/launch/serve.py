@@ -1,8 +1,18 @@
 """Serving launcher: batched requests against any --arch (reduced scale on
 CPU; the production-mesh decode lowering is exercised by dryrun.py).
 
+Fixed-batch mode (default):
+
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
       --reduced --ctx 1024 --gen 32 --batch 2 [--no-lychee]
+
+Streaming mode (--stream): feeds a mixed-length request trace through the
+continuous-batching scheduler — Poisson arrivals at --rate req/s (0 =
+offline, everything queued at t=0), admission into freed slots via the
+per-slot prefill splice:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
+      --reduced --stream --requests 12 --slots 4 --rate 2.0
 """
 from __future__ import annotations
 
@@ -14,7 +24,7 @@ import numpy as np
 
 from repro.configs.base import ARCH_IDS, LycheeConfig, get_config
 from repro.models import model as MD
-from repro.serving import Engine, SamplerConfig
+from repro.serving import Engine, SamplerConfig, make_trace
 
 
 def main():
@@ -27,6 +37,16 @@ def main():
     ap.add_argument("--budget", type=int, default=256)
     ap.add_argument("--no-lychee", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.8)
+    # --- streaming admission ------------------------------------------
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous batching over a request trace")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s); 0 = offline")
+    ap.add_argument("--prompt-lens", type=int, nargs="+",
+                    default=[64, 256, 1024])
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     lychee = (LycheeConfig(enabled=False) if args.no_lychee else
@@ -34,8 +54,33 @@ def main():
                            max_coarse=32, top_kg=8, full_attn_layers=0))
     cfg = get_config(args.arch, reduced=args.reduced).replace(
         dtype="float32", lychee=lychee)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     params = MD.init_model(jax.random.key(0), cfg)
+    mode = "full" if args.no_lychee else f"lychee(budget={args.budget})"
+
+    if args.stream:
+        trace = make_trace(rng, args.requests, cfg.vocab,
+                           prompt_lens=args.prompt_lens,
+                           gen_lens=(args.gen // 2, args.gen),
+                           rate_rps=args.rate)
+        n_cache = max(args.prompt_lens) + args.gen + 32
+        engine = Engine(cfg, params, n_cache=n_cache)
+        res = engine.serve(trace, n_slots=args.slots, mode="continuous",
+                           sampler=SamplerConfig(
+                               temperature=args.temperature, top_k=50),
+                           verbose=True)
+        print(f"[{cfg.name} | {mode} | stream] "
+              f"{res.total_new_tokens} tokens / {res.wall_s:.2f}s = "
+              f"{res.tokens_per_s:.1f} tok/s over {res.n_steps} steps")
+        print(f"  latency p50 {res.p50_latency_s:.2f}s  "
+              f"p99 {res.p99_latency_s:.2f}s  "
+              f"mean TTFT {res.mean_ttft_s:.2f}s")
+        for uid in sorted(res.requests)[:4]:
+            r = res.requests[uid]
+            print(f"  req{uid}: S={r.prompt_len} "
+                  f"-> {r.tokens[:8]} ... ({len(r.tokens)} tok)")
+        return
+
     prompts = rng.integers(0, cfg.vocab,
                            size=(args.batch, args.ctx)).astype(np.int32)
     extras = {}
@@ -52,7 +97,6 @@ def main():
     res = engine.generate(prompts, args.gen,
                           SamplerConfig(temperature=args.temperature,
                                         top_k=50), extras=extras)
-    mode = "full" if args.no_lychee else f"lychee(budget={args.budget})"
     print(f"[{cfg.name} | {mode}] prefill {res.prefill_s:.2f}s  "
           f"decode {res.decode_s:.2f}s  TPOT {res.tpot_ms:.1f}ms")
     for b in range(args.batch):

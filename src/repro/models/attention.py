@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import (build_index, chunk_sequence, empty_index,
-                        full_decode_attention, maybe_lazy_update)
+                        full_decode_attention, maybe_lazy_update, pad_index)
 from repro.core.attention import (assemble_spans,
                                   full_decode_attention_ctxsharded,
                                   sparse_span_attention,
@@ -118,6 +118,7 @@ def init_gqa(key, cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
 
 
 def _project_qkv(p, x, positions, cfg, rope: bool = True):
+    """positions: (S,) shared, or (B, S) per-slot (continuous batching)."""
     B, S, _ = x.shape
     dh = cfg.resolved_head_dim
     q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, dh)
@@ -127,8 +128,8 @@ def _project_qkv(p, x, positions, cfg, rope: bool = True):
         q = rmsnorm(p["q_norm"], q)
         k = rmsnorm(p["k_norm"], k)
     if rope:
-        q = apply_rope(q, positions, cfg.rope_theta)
-        k = apply_rope(k, positions, cfg.rope_theta)
+        q = apply_rope(q, positions, cfg.rope_theta, heads=True)
+        k = apply_rope(k, positions, cfg.rope_theta, heads=True)
     # (B, H, S, dh)
     return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
             v.transpose(0, 2, 1, 3))
@@ -154,19 +155,28 @@ def gqa_forward(p: dict, x: jax.Array, positions: jax.Array,
 
 
 # -- decode ------------------------------------------------------------------
+def _slot_t(t, B: int) -> jax.Array:
+    """Per-slot position counters: scalar t broadcasts to (B,).
+
+    Continuous batching serves every slot at its own sequence length, so all
+    decode-time position arithmetic (RoPE, cache append, validity masks,
+    lazy-update cadence) is per-batch-element."""
+    return jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+
+
 def _lychee_attend(q, k_cache, v_cache, index, t, cfg: ModelConfig):
-    """q: (B, Hq, dk). Returns (out (B, Hq, dv), updated index)."""
+    """q: (B, Hq, dk); t: (B,). Returns (out (B, Hq, dv), updated index)."""
     B, Hq, dk = q.shape
     Hkv = k_cache.shape[1]
     G = Hq // Hkv
     ly = cfg.lychee
     probe = q.reshape(B, Hkv, G, dk).mean(axis=2)           # (B, Hkv, dk)
 
-    def per_b(idx_b, probe_b):
+    def per_b(idx_b, probe_b, t_b):
         s, ln, _ = retrieve_spans(idx_b, probe_b, ly)
-        return assemble_spans(s, ln, t, ly)
+        return assemble_spans(s, ln, t_b, ly)
 
-    starts, lens = jax.vmap(per_b)(index, probe)            # (B, Hkv, C)
+    starts, lens = jax.vmap(per_b)(index, probe, t)         # (B, Hkv, C)
     qg = q.reshape(B, Hkv, G, dk)
     scale = 1.0 / dk ** 0.5 if cfg.qk_nope_dim == 0 else \
         1.0 / (cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5
@@ -185,36 +195,48 @@ def _lychee_attend(q, k_cache, v_cache, index, t, cfg: ModelConfig):
         out = sparse_span_attention(qg, k_cache, v_cache, starts, lens,
                                     max_chunk=ly.max_chunk, scale=scale,
                                     softcap=cfg.attn_softcap)
-    # lazy update (Algorithm 1 step 4): graft a dynamic chunk when due
-    index = jax.vmap(lambda i, kc: maybe_lazy_update(i, kc, t + 1, ly))(
-        index, k_cache)
+    # lazy update (Algorithm 1 step 4): graft a dynamic chunk when due.
+    # t is per-slot, so the lax.cond inside becomes a select under vmap —
+    # every slot computes the graft and keeps it only when its cadence hits.
+    index = jax.vmap(lambda i, kc, tb: maybe_lazy_update(i, kc, tb + 1, ly))(
+        index, k_cache, t)
     return out.reshape(B, Hq, -1), index
+
+
+def _append_kv(cache_kv: jax.Array, row: jax.Array, at: jax.Array
+               ) -> jax.Array:
+    """Write each slot's new row at its OWN position: cache (B, H, N, d*),
+    row (B, H, 1, d*), at (B,) int32."""
+    return jax.vmap(
+        lambda c, r, a: jax.lax.dynamic_update_slice_in_dim(c, r, a, 1))(
+        cache_kv, row, at)
 
 
 def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
                kind: str, use_lychee: bool, rope: bool = True) -> Tuple:
-    """x: (B, 1, d); cache: {"k","v"[, "index"]}. Returns (out, cache)."""
+    """x: (B, 1, d); t: scalar or (B,) per-slot positions;
+    cache: {"k","v"[, "index"]}. Returns (out, cache)."""
     B = x.shape[0]
     dh = cfg.resolved_head_dim
-    pos = jnp.full((1,), t, jnp.int32)
+    tt = _slot_t(t, B)
+    pos = tt[:, None]                                       # (B, 1)
     q, k_t, v_t = _project_qkv(p, x, pos, cfg, rope)        # (B,H,1,dh)
     q = q[:, :, 0]                                          # (B, Hq, dh)
 
     local = kind in ("attn_local", "swa_moe") and cfg.window
     if local:
         W = cache["k"].shape[2]
-        slot = jnp.mod(jnp.asarray(t, jnp.int32), W)
-        k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_t, slot, 2)
-        v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_t, slot, 2)
-        n_valid = jnp.minimum(jnp.asarray(t, jnp.int32) + 1, W)
-        out = jax.vmap(lambda qq, kk, vv: full_decode_attention(
-            qq, kk, vv, n_valid, 1.0 / dh ** 0.5, cfg.attn_softcap))(
-            q, k_c, v_c)
+        slot = jnp.mod(tt, W)
+        k_c = _append_kv(cache["k"], k_t, slot)
+        v_c = _append_kv(cache["v"], v_t, slot)
+        n_valid = jnp.minimum(tt + 1, W)
+        out = jax.vmap(lambda qq, kk, vv, nv: full_decode_attention(
+            qq, kk, vv, nv, 1.0 / dh ** 0.5, cfg.attn_softcap))(
+            q, k_c, v_c, n_valid)
         cache = dict(cache, k=k_c, v=v_c)
     else:
-        tt = jnp.asarray(t, jnp.int32)
-        k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_t, tt, 2)
-        v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_t, tt, 2)
+        k_c = _append_kv(cache["k"], k_t, tt)
+        v_c = _append_kv(cache["v"], v_t, tt)
         k_c = shard(k_c, *kv_axes())
         v_c = shard(v_c, *kv_axes())
         cache = dict(cache, k=k_c, v=v_c)
@@ -227,9 +249,9 @@ def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
                 q, k_c, v_c, tt + 1, kv_axes()[2], scale=1.0 / dh ** 0.5,
                 softcap=cfg.attn_softcap)
         else:
-            out = jax.vmap(lambda qq, kk, vv: full_decode_attention(
-                qq, kk, vv, tt + 1, 1.0 / dh ** 0.5, cfg.attn_softcap))(
-                q, k_c, v_c)
+            out = jax.vmap(lambda qq, kk, vv, tb: full_decode_attention(
+                qq, kk, vv, tb + 1, 1.0 / dh ** 0.5, cfg.attn_softcap))(
+                q, k_c, v_c, tt)
 
     out = out.reshape(B, 1, -1) @ p["wo"]
     return shard(out, "batch", None, None), cache
@@ -259,9 +281,13 @@ def gqa_prefill_cache(k: jax.Array, v: jax.Array, cfg: ModelConfig,
     v_c = shard(v_c, *kv_axes())
     cache = {"k": k_c, "v": v_c}
     if use_lychee and cfg.lychee.enabled and layout is not None:
-        # layout is batched (leading B dim) — vmap over (keys, layout) pairs
+        # layout is batched (leading B dim) — vmap over (keys, layout) pairs.
+        # The index is padded to the CACHE capacity (not the prompt length)
+        # so every serving slot carries identical leaf shapes and a freed
+        # slot can be respliced with any request's state.
         cache["index"] = jax.vmap(
-            lambda kb, lay: build_index(kb, lay, cfg.lychee))(k, layout)
+            lambda kb, lay: pad_index(build_index(kb, lay, cfg.lychee),
+                                      n_cache, cfg.lychee))(k, layout)
     return cache
 
 

@@ -50,13 +50,21 @@ def rope_freqs(dim: int, theta: float) -> jax.Array:
     return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
 
 
-def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               heads: bool | None = None) -> jax.Array:
     """x: (..., S, H, dh) or (..., S, dh); positions: (..., S) — broadcasts
-    over any leading batch dims of x not present in positions."""
+    over any leading batch dims of x not present in positions.
+
+    ``heads`` marks whether x carries a head dim between S and dh. The
+    default (None) infers it from the rank difference, which is ambiguous
+    once positions themselves are batched (continuous batching decodes each
+    slot at its own position) — those callers pass it explicitly."""
     dh = x.shape[-1]
     freqs = rope_freqs(dh, theta)                     # (dh/2,)
     ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, dh/2)
-    if x.ndim - positions.ndim == 3:                  # head dim present
+    if heads is None:
+        heads = x.ndim - positions.ndim == 3
+    if heads:                                         # head dim present
         ang = ang[..., None, :]
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)

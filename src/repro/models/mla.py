@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import build_index, full_decode_attention, maybe_lazy_update
+from repro.core import (build_index, full_decode_attention, maybe_lazy_update,
+                        pad_index)
 from repro.core.attention import (assemble_spans,
                                   full_decode_attention_ctxsharded,
                                   sparse_span_attention,
@@ -52,21 +53,23 @@ def init_mla(key, cfg: ModelConfig) -> dict:
 
 
 def _queries(p, x, positions, cfg):
-    """Returns q_nope (B,S,H,nd), q_rope (B,S,H,rd)."""
+    """Returns q_nope (B,S,H,nd), q_rope (B,S,H,rd). positions: (S,) or
+    (B, S) per-slot."""
     B, S, _ = x.shape
     H = cfg.n_heads
     nd, rd = cfg.qk_nope_dim, cfg.qk_rope_dim
     cq = rmsnorm(p["q_norm"], x @ p["w_dq"])
     q = (cq @ p["w_uq"]).reshape(B, S, H, nd + rd)
     q_nope, q_rope = q[..., :nd], q[..., nd:]
-    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta, heads=True)
     return q_nope, q_rope
 
 
 def _latents(p, x, positions, cfg):
     """Returns c_kv (B,S,kvl) normed, k_rope (B,S,rd) roped (shared heads)."""
     c_kv = rmsnorm(p["kv_norm"], x @ p["w_dkv"])
-    k_rope = apply_rope(x @ p["w_kr"], positions, cfg.rope_theta)
+    k_rope = apply_rope(x @ p["w_kr"], positions, cfg.rope_theta,
+                        heads=False)
     return c_kv, k_rope
 
 
@@ -96,12 +99,10 @@ def mla_forward(p: dict, x: jax.Array, positions: jax.Array,
     return shard(out, "batch", None, None), latent
 
 
-def _absorbed_queries(p, x, t, cfg):
-    """Decode queries in latent space: (B, H, kvl + rd)."""
-    B = x.shape[0]
+def _absorbed_queries(p, x, pos, cfg):
+    """Decode queries in latent space: (B, H, kvl + rd). pos: (B, 1)."""
     H = cfg.n_heads
-    nd, rd = cfg.qk_nope_dim, cfg.qk_rope_dim
-    pos = jnp.full((1,), t, jnp.int32)
+    nd = cfg.qk_nope_dim
     q_nope, q_rope = _queries(p, x, pos, cfg)               # (B,1,H,·)
     w_uk = p["w_uk"].reshape(cfg.kv_lora_rank, H, nd)
     q_lat = jnp.einsum("bhn,khn->bhk", q_nope[:, 0], w_uk)  # (B,H,kvl)
@@ -110,23 +111,25 @@ def _absorbed_queries(p, x, t, cfg):
 
 def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
                use_lychee: bool) -> Tuple[jax.Array, dict]:
-    """x: (B,1,d); cache: {"latent": (B, N, kvl+rd)[, "index"]}."""
+    """x: (B,1,d); t: scalar or (B,) per-slot positions;
+    cache: {"latent": (B, N, kvl+rd)[, "index"]}."""
     B = x.shape[0]
     H = cfg.n_heads
     nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     kvl = cfg.kv_lora_rank
-    tt = jnp.asarray(t, jnp.int32)
-    pos = jnp.full((1,), t, jnp.int32)
+    tt = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    pos = tt[:, None]                                       # (B, 1)
 
     c_kv, k_rope = _latents(p, x, pos, cfg)
     lat_t = jnp.concatenate([c_kv, k_rope], -1)             # (B,1,576)
-    latent = jax.lax.dynamic_update_slice_in_dim(
-        cache["latent"], lat_t, tt, 1)
+    latent = jax.vmap(
+        lambda c, r, a: jax.lax.dynamic_update_slice_in_dim(c, r, a, 0))(
+        cache["latent"], lat_t, tt)
     _, _, lat_ctx, _ = kv_axes()
     latent = shard(latent, kv_axes()[0], lat_ctx, None)
     cache = dict(cache, latent=latent)
 
-    q_eff = _absorbed_queries(p, x, t, cfg)                 # (B,H,576)
+    q_eff = _absorbed_queries(p, x, pos, cfg)               # (B,H,576)
     scale = 1.0 / (nd + rd) ** 0.5
     k_c = latent[:, None]                                   # (B,1,N,576)
     v_c = latent[:, None, :, :kvl]                          # values = c_kv
@@ -135,11 +138,11 @@ def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
     if use_lychee and ly.enabled and "index" in cache:
         probe = q_eff.mean(axis=1, keepdims=True)           # (B,1,576)
 
-        def per_b(idx_b, probe_b):
+        def per_b(idx_b, probe_b, t_b):
             s, ln, _ = retrieve_spans(idx_b, probe_b, ly)
-            return assemble_spans(s, ln, tt, ly)
+            return assemble_spans(s, ln, t_b, ly)
 
-        starts, lens = jax.vmap(per_b)(cache["index"], probe)
+        starts, lens = jax.vmap(per_b)(cache["index"], probe, tt)
         qg = q_eff[:, None]                                 # (B,1,H,576)
         ctx_ax = kv_axes()[2]
         if ly.use_kernel:
@@ -153,17 +156,17 @@ def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
             ctx = sparse_span_attention(qg, k_c, v_c, starts, lens,
                                         max_chunk=ly.max_chunk, scale=scale)
         ctx = ctx[:, 0]                                     # (B,H,kvl)
-        index = jax.vmap(lambda i, kc: maybe_lazy_update(
-            i, kc[None] if kc.ndim == 2 else kc, tt + 1, ly))(
-            cache["index"], latent)
+        index = jax.vmap(lambda i, kc, tb: maybe_lazy_update(
+            i, kc[None] if kc.ndim == 2 else kc, tb + 1, ly))(
+            cache["index"], latent, tt)
         cache = dict(cache, index=index)
     elif kv_axes()[2] is not None:
         ctx = full_decode_attention_ctxsharded(
             q_eff, k_c, v_c, tt + 1, kv_axes()[2], scale=scale)
     else:
-        ctx = jax.vmap(lambda qq, kk, vv: full_decode_attention(
-            qq, kk, vv, tt + 1, scale))(q_eff, k_c[:, 0][:, None],
-                                        v_c[:, 0][:, None])
+        ctx = jax.vmap(lambda qq, kk, vv, tb: full_decode_attention(
+            qq, kk, vv, tb + 1, scale))(q_eff, k_c[:, 0][:, None],
+                                        v_c[:, 0][:, None], tt)
 
     # un-absorb values: per-head v = ctx_latent @ w_uv_h
     w_uv = p["w_uv"].reshape(kvl, H, vd)
@@ -183,8 +186,10 @@ def mla_prefill_cache(latent: jax.Array, cfg: ModelConfig,
     lat = shard(lat, kv_axes()[0], kv_axes()[2], None)
     cache = {"latent": lat}
     if use_lychee and cfg.lychee.enabled and layout is not None:
-        # layout is batched (leading B dim); latent cache = 1 logical kv head
+        # layout is batched (leading B dim); latent cache = 1 logical kv
+        # head. Padded to cache capacity for uniform serving-slot shapes.
         cache["index"] = jax.vmap(
-            lambda lb, lay: build_index(lb[None], lay, cfg.lychee))(
+            lambda lb, lay: pad_index(build_index(lb[None], lay, cfg.lychee),
+                                      n_cache, cfg.lychee))(
             latent, layout)
     return cache

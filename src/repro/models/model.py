@@ -460,7 +460,13 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
             ) -> Tuple[jax.Array, dict]:
     """Process the prompt; return (last-position logits (B,V), state).
 
-    state = {"prelude": [cache...], "groups": stacked caches, "t": length}.
+    state = {"prelude": [cache...], "groups": stacked caches, "t": (B,)}.
+
+    Every leaf's shape depends only on ``n_cache`` (KV caches pad to it,
+    Lychee indices pad to its chunk capacities, ``t`` is per-slot), so
+    states from prefills of DIFFERENT prompt lengths are pytree-compatible:
+    the per-slot surgery below (``prefill_into_slot`` / ``write_slot``)
+    splices one request's state into any slot of a live batched state.
     """
     x = embed_inputs(params, tokens, cfg, extras)
     B, S, _ = x.shape
@@ -494,7 +500,7 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
     x = rmsnorm(params["final_norm"], x)
     logits = unembed(params["embed"], x[:, -1:], cfg.final_softcap)[:, 0]
     state = {"prelude": prelude_caches, "groups": group_caches,
-             "t": jnp.asarray(S, jnp.int32)}
+             "t": jnp.full((B,), S, jnp.int32)}
     return logits, state
 
 
@@ -503,8 +509,14 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 def decode_step(params: dict, token: jax.Array, state: dict,
                 cfg: ModelConfig) -> Tuple[jax.Array, dict]:
-    """token: (B,) int32. Returns (logits (B, V), new state)."""
-    t = state["t"]
+    """token: (B,) int32. Returns (logits (B, V), new state).
+
+    ``state["t"]`` is the per-slot position vector (B,) — each serving slot
+    decodes at its own sequence length (a scalar broadcasts for legacy
+    states). All attention/cache ops thread it per-batch-element.
+    """
+    t = jnp.broadcast_to(jnp.asarray(state["t"], jnp.int32),
+                         (token.shape[0],))
     x = embed(params["embed"], token[:, None]).astype(jnp.dtype(cfg.dtype))
     x = shard(x, "batch", None, None)
 
@@ -531,3 +543,84 @@ def decode_step(params: dict, token: jax.Array, state: dict,
     logits = unembed(params["embed"], x, cfg.final_softcap)[:, 0]
     new_state = {"prelude": new_prelude, "groups": new_groups, "t": t + 1}
     return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Per-slot state surgery (continuous batching)
+# ---------------------------------------------------------------------------
+# Where the batch axis sits in each state part. Prelude caches and ``t`` are
+# plain (B, ...) leaves; scanned group caches carry a leading ``groups`` dim,
+# so their batch axis is 1. Every leaf inside a part shares its part's axis —
+# the invariant that makes the whole state uniformly sliceable by slot.
+STATE_BATCH_AXIS = {"prelude": 0, "groups": 1, "t": 0}
+
+
+def _per_part(state: dict, fn) -> dict:
+    return {part: jax.tree.map(fn(axis), state[part])
+            for part, axis in STATE_BATCH_AXIS.items()}
+
+
+def slice_slot(state: dict, slot) -> dict:
+    """Extract ONE slot's decode state (batch dims kept, size 1)."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def sl(axis):
+        return lambda leaf: jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis)
+
+    return _per_part(state, sl)
+
+
+def write_slot(state: dict, sub: dict, slot) -> dict:
+    """Splice a single-request state (every batch dim of size 1 — e.g. from
+    a B=1 ``prefill``) into slot ``slot`` of a live batched state.
+
+    This is the continuous-batching admission primitive: the KV caches,
+    LycheeIndex, recent-buffer bookkeeping, and position counter of the slot
+    are all overwritten in one pass; other slots' leaves are untouched, so
+    their retrieval stays bit-identical.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def upd(axis):
+        def f(dst, src):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis)
+        return f
+
+    return {part: jax.tree.map(upd(axis), state[part], sub[part])
+            for part, axis in STATE_BATCH_AXIS.items()}
+
+
+def reset_slot(state: dict, slot) -> dict:
+    """Clear a drained slot: caches zeroed, position counter 0, and the
+    slot's LycheeIndex emptied (zero leaves ARE the empty index — see
+    ``core.update.reset_index``), so a recycled slot's chunk cursor and
+    validity masks restart cleanly and leak nothing into the next request.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def z(axis):
+        def f(leaf):
+            cur = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis)
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, jnp.zeros_like(cur), slot, axis)
+        return f
+
+    return _per_part(state, z)
+
+
+def prefill_into_slot(params: dict, tokens: jax.Array, cfg: ModelConfig,
+                      n_cache: int, state: dict, slot,
+                      extras: Optional[dict] = None
+                      ) -> Tuple[jax.Array, dict]:
+    """Admit one request into a freed slot of a live batched decode state.
+
+    tokens: (1, S) — a single-sequence prefill at the request's natural
+    length (no cross-request padding, so its logits match the request served
+    alone); the resulting caches/index/position are spliced into ``slot``.
+    Returns (last-position logits (1, V), updated state). ``slot`` may be a
+    traced scalar — one jit specialisation per prompt length, not per slot.
+    """
+    assert tokens.shape[0] == 1, "prefill_into_slot admits one request"
+    logits, sub = prefill(params, tokens, cfg, n_cache, extras=extras)
+    return logits, write_slot(state, sub, slot)

@@ -1,4 +1,7 @@
-from repro.serving.engine import Engine, serve_step
+from repro.serving.engine import (Engine, GenerateResult, ServeResult,
+                                  serve_step)
 from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.scheduler import Request, Scheduler, make_trace
 
-__all__ = ["Engine", "SamplerConfig", "sample", "serve_step"]
+__all__ = ["Engine", "GenerateResult", "Request", "SamplerConfig",
+           "Scheduler", "ServeResult", "make_trace", "sample", "serve_step"]

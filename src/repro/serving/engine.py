@@ -1,21 +1,46 @@
-"""Batched serving engine.
+"""Serving engine: static batched generate + continuous-batching serve.
 
-The engine serves fixed-capacity batches: requests are packed into ``batch``
-slots, right-aligned prompts are prefilled together (padding masked through
-the chunk layout's ``n_tokens``), then decode proceeds lock-step with
-per-slot completion masks — the standard static-batching TPU serving shape
-(continuous batching swaps finished slots between generate() calls).
+Two execution models over the same pure model functions:
+
+* ``generate`` — the classic fixed batch: B prompts of one length prefill
+  together, decode proceeds lock-step until every slot finishes. Simple,
+  but a finished slot idles until the whole batch drains.
+* ``serve`` — **continuous batching**: a :class:`~repro.serving.scheduler.
+  Scheduler` feeds a FIFO request trace into ``B`` persistent decode slots.
+  When a slot frees, the next request is admitted by a single-sequence
+  prefill at its natural length whose KV caches, ``LycheeIndex``, recent-
+  buffer bookkeeping and position counter are spliced into that slot
+  (``model.prefill_into_slot``) while the other slots keep decoding
+  unperturbed. The per-slot hierarchical index makes this cheap: all decode
+  state is per-(layer, batch-element), so admission is one
+  ``dynamic_update_slice`` per leaf.
+
+Scheduler contract (who owns what):
+
+* the scheduler owns WHICH request runs in which slot and when (FIFO order,
+  arrival gating, lifecycle timestamps); it never touches device state;
+* the engine owns the device state and the admission *policy*: continuous
+  mode admits into any free slot, static mode only admits when all slots
+  are drained (the lock-step baseline measured by
+  ``benchmarks/throughput.py``);
+* per-request greedy outputs are independent of co-scheduled requests
+  (decode is per-slot vmapped; prefill is per-request at natural length),
+  so continuous and static modes produce bit-identical greedy tokens —
+  the invariant the throughput benchmark checks. (MoE archs route per
+  token independently at decode, so this holds there too; capacity drops
+  only arise in training-time batched dispatch.)
 
 ``serve_step`` is the pure function the decode dry-run shapes
 (``decode_32k`` / ``long_500k``) lower: one new token against a seq_len KV
 cache, including hierarchical retrieval, budgeted sparse attention and the
-lazy index update.
+lazy index update. It stays jit-donated — the engine reuses the state
+buffers in place every step.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +49,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as MD
 from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.scheduler import Request, Scheduler
 
 
 def serve_step(params, token, state, cfg: ModelConfig):
@@ -40,8 +66,24 @@ class GenerateResult:
     tpot_ms: float                # time per output token (decode only)
 
 
+@dataclasses.dataclass
+class ServeResult:
+    """Aggregate metrics of one trace replay (per-request detail rides on
+    the Request objects themselves)."""
+
+    mode: str                     # "continuous" | "static"
+    requests: Dict[int, Request]  # uid -> finished request (tokens filled)
+    wall_s: float
+    n_steps: int                  # batched decode steps executed
+    total_new_tokens: int
+    tokens_per_s: float
+    p50_latency_s: float
+    p99_latency_s: float
+    mean_ttft_s: float
+
+
 class Engine:
-    """Minimal batched inference engine over the pure model functions."""
+    """Batched inference engine over the pure model functions."""
 
     def __init__(self, cfg: ModelConfig, params, *, n_cache: int,
                  eos_id: Optional[int] = None, donate_state: bool = True):
@@ -50,12 +92,17 @@ class Engine:
         self.n_cache = n_cache
         self.eos_id = eos_id
 
+        donate = (2,) if donate_state else ()
         self._prefill = jax.jit(
             lambda p, tk, extras: MD.prefill(p, tk, cfg, n_cache,
                                              extras=extras))
         self._step = jax.jit(
             lambda p, tok, st: serve_step(p, tok, st, cfg),
-            donate_argnums=(2,) if donate_state else ())
+            donate_argnums=donate)
+        self._prefill_slot = jax.jit(
+            lambda p, tk, st, slot: MD.prefill_into_slot(
+                p, tk, cfg, n_cache, st, slot),
+            donate_argnums=donate)
 
     # ------------------------------------------------------------------
     def generate(self, prompts: np.ndarray, max_new: int,
@@ -74,15 +121,21 @@ class Engine:
         logits.block_until_ready()
         t1 = time.perf_counter()
 
-        out = np.zeros((B, max_new), np.int32)
+        pad = self.eos_id if self.eos_id is not None else 0
+        # pre-fill with the pad token: an early break (every row done) must
+        # leave the unreached columns padded, not zero
+        out = np.full((B, max_new), pad, np.int32)
         done = np.zeros((B,), bool)
         ngen = np.zeros((B,), np.int64)
         tok = sample(key, logits, sampler)
         for i in range(max_new):
-            out[:, i] = np.asarray(tok)
+            # finished slots keep decoding lock-step, but their sampled
+            # tokens are garbage — pad them so ``tokens`` is trustworthy
+            tok_np = np.asarray(tok)
+            out[:, i] = np.where(done, pad, tok_np)
             ngen[~done] += 1
             if self.eos_id is not None:
-                done |= np.asarray(tok) == self.eos_id
+                done |= tok_np == self.eos_id
                 if done.all():
                     break
             key, sub = jax.random.split(key)
@@ -94,3 +147,121 @@ class Engine:
         return GenerateResult(tokens=out, n_generated=ngen,
                               prefill_s=t1 - t0, decode_s=t2 - t1,
                               tpot_ms=1e3 * (t2 - t1) / n_steps)
+
+    # ------------------------------------------------------------------
+    # Continuous batching
+    # ------------------------------------------------------------------
+    def _zero_state(self, n_slots: int):
+        """All-slots-empty decode state (valid: every mask False, t=0)."""
+        dummy = jax.ShapeDtypeStruct(
+            (n_slots, max(8, self.cfg.lychee.min_chunk)), jnp.int32)
+        shapes = jax.eval_shape(
+            lambda p, tk: MD.prefill(p, tk, self.cfg, self.n_cache)[1],
+            self.params, dummy)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def serve(self, requests: Sequence[Request], *, n_slots: int,
+              mode: str = "continuous",
+              sampler: SamplerConfig = SamplerConfig(),
+              seed: int = 0, verbose: bool = False) -> ServeResult:
+        """Replay a request trace through the slot scheduler.
+
+        mode="continuous": a freed slot immediately admits the next pending
+        request (prefill splice) while other slots keep decoding.
+        mode="static": admission only when ALL slots are free — lock-step
+        waves, the static-batching baseline.
+
+        Request objects are mutated in place (lifecycle timestamps +
+        generated tokens); pass fresh copies to compare modes. Greedy
+        outputs per request are identical across modes and to
+        ``generate`` of the request alone (see module docstring).
+        """
+        assert mode in ("continuous", "static"), mode
+        assert not (self.cfg.is_encdec or self.cfg.n_patches), \
+            "streaming admission serves text-only requests"
+        for r in requests:
+            assert r.prompt_len + r.max_new <= self.n_cache, \
+                f"req {r.uid}: cache too small"
+
+        sched = Scheduler(n_slots)
+        sched.submit_all(requests)
+        state = self._zero_state(n_slots)
+        cur = np.zeros((n_slots,), np.int32)
+        active = np.zeros((n_slots,), bool)
+        remaining = np.zeros((n_slots,), np.int64)
+        key = jax.random.key(seed)
+        n_steps = 0
+        t0 = time.perf_counter()
+
+        def now() -> float:
+            return time.perf_counter() - t0
+
+        def retire(slot: int, req: Request, tok: int) -> bool:
+            if remaining[slot] <= 0 or \
+                    (self.eos_id is not None and tok == self.eos_id):
+                sched.finish(slot, now())
+                active[slot] = False
+                cur[slot] = 0
+                if verbose:
+                    print(f"[serve:{mode}] t={now():7.3f}s finish "
+                          f"req{req.uid} ({len(req.tokens)} tok)")
+                return True
+            return False
+
+        while not sched.all_done:
+            # ---- admission phase --------------------------------------
+            if mode == "continuous" or sched.active == 0:
+                for slot in sched.free_slots():
+                    if sched.next_ready(now()) is None:
+                        break
+                    req = sched.admit(slot, now())
+                    logits, state = self._prefill_slot(
+                        self.params, jnp.asarray(req.prompt[None]), state,
+                        jnp.int32(slot))
+                    key, sub = jax.random.split(key)
+                    tok0 = int(np.asarray(sample(sub, logits, sampler))[0])
+                    req.tokens.append(tok0)
+                    req.first_token_s = now()
+                    cur[slot] = tok0
+                    active[slot] = True
+                    remaining[slot] = req.max_new - 1
+                    if verbose:
+                        print(f"[serve:{mode}] t={now():7.3f}s admit "
+                              f"req{req.uid} (S={req.prompt_len}, "
+                              f"gen={req.max_new}) -> slot {slot}")
+                    retire(slot, req, tok0)
+            if not active.any():
+                if sched.pending:
+                    # open-loop trace: head not arrived yet — idle briefly
+                    wait = (sched.next_arrival_s() or 0.0) - now()
+                    time.sleep(min(max(wait, 0.0), 0.01))
+                continue
+
+            # ---- one lock-step decode over the live slots --------------
+            logits, state = self._step(self.params, jnp.asarray(cur), state)
+            n_steps += 1
+            key, sub = jax.random.split(key)
+            tok = np.asarray(sample(sub, logits, sampler))
+            for slot in range(n_slots):
+                if not active[slot]:
+                    continue
+                req = sched.slot_of(slot)
+                tk = int(tok[slot])
+                req.tokens.append(tk)
+                remaining[slot] -= 1
+                cur[slot] = tk
+                retire(slot, req, tk)
+
+        jax.block_until_ready(state["t"])
+        wall = now()
+        done = sched.finished
+        total = sum(len(r.tokens) for r in done.values())
+        lats = np.asarray([r.latency_s for r in done.values()])
+        ttfts = np.asarray([r.ttft_s for r in done.values()])
+        return ServeResult(
+            mode=mode, requests=done, wall_s=wall, n_steps=n_steps,
+            total_new_tokens=total,
+            tokens_per_s=total / wall if wall > 0 else 0.0,
+            p50_latency_s=float(np.percentile(lats, 50)) if len(lats) else 0.0,
+            p99_latency_s=float(np.percentile(lats, 99)) if len(lats) else 0.0,
+            mean_ttft_s=float(ttfts.mean()) if len(ttfts) else 0.0)

@@ -1,0 +1,150 @@
+"""Request scheduler for the continuous-batching engine.
+
+The scheduler is pure host-side bookkeeping — it never touches device
+state. It owns:
+
+* a FIFO **request queue** (arrival-time gated, so a Poisson trace replays
+  faithfully in wall-clock time);
+* the **slot table**: which request occupies which of the engine's ``B``
+  decode slots, plus per-slot admit/finish timestamps;
+* per-request **lifecycle records** (queued -> running -> finished) with the
+  timing fields the latency percentiles are computed from.
+
+The engine drives it: ``next_ready`` + ``admit`` when a slot frees,
+``finish`` when a slot's request completes. Admission *policy* (continuous
+vs static waves) lives in the engine — the scheduler only answers "who is
+next" and "what is free".
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request in a serving trace."""
+
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int
+    arrival_s: float = 0.0        # offset from trace start (0 = offline)
+
+    # lifecycle (filled by the scheduler / engine) ------------------------
+    admitted_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    finished_s: Optional[float] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Queueing + prefill + decode: finish relative to arrival."""
+        if self.finished_s is None:
+            return None
+        return self.finished_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+
+class Scheduler:
+    """FIFO queue + slot table for a fixed-capacity decode batch."""
+
+    def __init__(self, n_slots: int):
+        assert n_slots >= 1
+        self.n_slots = n_slots
+        self._queue: Deque[Request] = deque()
+        self._slots: List[Optional[Request]] = [None] * n_slots
+        self.finished: Dict[int, Request] = {}
+        self.n_admitted = 0
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def submit_all(self, reqs: Sequence[Request]) -> None:
+        for r in sorted(reqs, key=lambda r: r.arrival_s):
+            self.submit(r)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def all_done(self) -> bool:
+        return not self._queue and self.active == 0
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def slot_of(self, slot: int) -> Optional[Request]:
+        return self._slots[slot]
+
+    def next_arrival_s(self) -> Optional[float]:
+        return self._queue[0].arrival_s if self._queue else None
+
+    def next_ready(self, now_s: float) -> Optional[Request]:
+        """Peek the FIFO head if it has arrived by ``now_s``."""
+        if self._queue and self._queue[0].arrival_s <= now_s:
+            return self._queue[0]
+        return None
+
+    # -- slot lifecycle ------------------------------------------------------
+    def admit(self, slot: int, now_s: float) -> Request:
+        """Pop the FIFO head into ``slot``."""
+        assert self._slots[slot] is None, f"slot {slot} busy"
+        req = self._queue.popleft()
+        req.admitted_s = now_s
+        self._slots[slot] = req
+        self.n_admitted += 1
+        return req
+
+    def finish(self, slot: int, now_s: float) -> Request:
+        req = self._slots[slot]
+        assert req is not None, f"slot {slot} already free"
+        req.finished_s = now_s
+        self._slots[slot] = None
+        self.finished[req.uid] = req
+        return req
+
+
+# ---------------------------------------------------------------------------
+# Trace synthesis
+# ---------------------------------------------------------------------------
+def make_trace(rng: np.random.Generator, n_requests: int, vocab: int,
+               prompt_lens: Sequence[int] = (64, 256, 1024),
+               gen_lens: Sequence[int] = (8, 64),
+               rate_rps: float = 0.0) -> List[Request]:
+    """Synthesise a mixed-length request trace.
+
+    Prompt lengths and generation budgets are drawn uniformly from the given
+    choices; ``rate_rps > 0`` spaces arrivals by exponential gaps (a Poisson
+    arrival process — the standard open-loop serving-benchmark driver),
+    ``rate_rps == 0`` queues everything at t=0 (offline / batch mode).
+    """
+    gaps = (rng.exponential(1.0 / rate_rps, size=n_requests)
+            if rate_rps > 0 else np.zeros(n_requests))
+    arrivals = np.cumsum(gaps)
+    reqs = []
+    for i in range(n_requests):
+        S = int(rng.choice(list(prompt_lens)))
+        reqs.append(Request(
+            uid=i,
+            prompt=rng.integers(0, vocab, size=(S,)).astype(np.int32),
+            max_new=int(rng.choice(list(gen_lens))),
+            arrival_s=float(arrivals[i])))
+    return reqs

@@ -21,12 +21,21 @@ def current_mesh() -> Optional[Mesh]:
 
 @contextlib.contextmanager
 def mesh_context(mesh: Mesh):
-    """Enter both our ambient context and jax's mesh context."""
+    """Enter both our ambient context and jax's mesh context.
+
+    jax.sharding.set_mesh is the modern entry point; older jax uses the
+    Mesh object itself as the resource-environment context manager.
+    """
     prev = current_mesh()
     _state.mesh = mesh
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
     try:
-        with jax.sharding.set_mesh(mesh):
-            yield mesh
+        if set_mesh is not None:
+            with set_mesh(mesh):
+                yield mesh
+        else:
+            with mesh:
+                yield mesh
     finally:
         _state.mesh = prev
 

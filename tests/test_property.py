@@ -16,7 +16,13 @@ These sweep randomized shapes/contents far beyond the fixed unit tests:
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import LycheeConfig
 from repro.core import (build_index, chunk_sequence, spherical_kmeans,

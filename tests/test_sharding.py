@@ -15,8 +15,13 @@ pytestmark = pytest.mark.skipif(
 
 
 def _mesh(shape=(2, 2), axes=("data", "model")):
-    # AbstractMesh: enough for spec construction, no devices needed
-    return jax.sharding.AbstractMesh(shape, axes)
+    # AbstractMesh: enough for spec construction, no devices needed.
+    # Signature changed across jax versions: old takes a shape_tuple of
+    # (name, size) pairs, new takes (shape, axis_names).
+    try:
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 def test_param_specs_tp_and_fsdp():
@@ -58,7 +63,7 @@ def test_decode_state_specs_batched_decode():
                                               jnp.bfloat16),
                     "index": {"chunk_key": jax.ShapeDtypeStruct(
                         (3, 8, 4, 32, 16), jnp.float32)}},),
-        "t": jax.ShapeDtypeStruct((), jnp.int32),
+        "t": jax.ShapeDtypeStruct((8,), jnp.int32),   # per-slot positions
     }
     specs = decode_state_specs(state, mesh, ("data",), ("model",))
     kspec = specs["groups"][0]["k"]
@@ -70,7 +75,8 @@ def test_decode_state_specs_batched_decode():
     assert _ax(kspec[3]) == ("model",)
     ck = specs["groups"][0]["index"]["chunk_key"]
     assert _ax(ck[3]) == ("model",)           # M dim on ctx axes
-    assert specs["t"] == P()
+    # (B,) per-slot counters ride the batch axes like the token vector
+    assert _ax(specs["t"][0]) == ("data",)
 
 
 def test_decode_state_specs_context_parallel():

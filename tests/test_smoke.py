@@ -75,7 +75,9 @@ def test_prefill_decode(arch, rng):
         assert logits.shape == (B, cfg.vocab)
         assert np.isfinite(np.asarray(logits)).all(), arch
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    assert int(state["t"]) == S + (cfg.n_patches or 0) + 4
+    # per-slot position counters: one entry per batch slot, all advanced
+    assert state["t"].shape == (B,)
+    assert (np.asarray(state["t"]) == S + (cfg.n_patches or 0) + 4).all()
 
 
 def test_chunked_ssd_grads_finite_at_long_seq():
