@@ -2,16 +2,18 @@
 
 LongBench V2 accuracy cannot be reproduced offline (no pretrained LLM);
 what CAN be isolated is the retrieval layer every method differs in. We
-compare LycheeCluster vs Quest (fixed pages, min-max scoring) vs ClusterKV
-(token-granular clusters) vs StreamingLLM (window only) with the paper's
-Recall Rate metric, on the paper's hard case: VARIABLE-length semantic
-units (6–20 tokens, like JSON records/code statements) whose boundaries do
-NOT align with any fixed page grid. A TIGHT budget makes fragmentation
-costly: Quest wastes budget on page halves that straddle two units;
-ClusterKV scatters a unit's tokens across clusters. The secondary axis the
-paper argues (Fig. 4) — selection cost — is measured in the tpot bench,
-where ClusterKV's token-granular scoring is ~3.5× slower than Lychee's
-two-level pruning.
+compare the registered cache policies — LycheeCluster vs Quest (fixed
+pages, min-max scoring) vs ClusterKV (token-granular clusters) vs a
+StreamingLLM-style recency window — with the paper's Recall Rate metric,
+on the paper's hard case: VARIABLE-length semantic units (6–20 tokens,
+like JSON records/code statements) whose boundaries do NOT align with any
+fixed page grid. A TIGHT budget makes fragmentation costly: Quest wastes
+budget on page halves that straddle two units; ClusterKV scatters a unit's
+tokens across clusters. The secondary axis the paper argues (Fig. 4) —
+selection cost — is measured in the tpot bench.
+
+All four methods go through the SAME :class:`~repro.core.policy.CachePolicy`
+interface (``build`` + ``select`` → spans → tokens) — no per-method wiring.
 """
 from __future__ import annotations
 
@@ -21,9 +23,9 @@ import numpy as np
 from benchmarks.chunking import _aligned_corpus
 from benchmarks.common import emit, recall_rate
 from repro.configs.base import LycheeConfig
-from repro.core import build_index, chunk_sequence, retrieve
-from repro.core.baselines import (build_clusterkv, build_quest,
-                                  clusterkv_select, quest_select)
+from repro.core import chunk_sequence
+from repro.core.attention import assemble_spans
+from repro.core.policy import make_policy, spans_to_tokens
 
 
 def run():
@@ -31,14 +33,21 @@ def run():
     N, d = 4096, 64
     budget = 192                      # tight: fragmentation is punished
     cfg = LycheeConfig(min_chunk=8, max_chunk=16, sink=0, buffer_size=0,
-                       budget=budget, top_kg=8, max_coarse=32)
+                       budget=budget, top_kg=8, max_coarse=32,
+                       quest_page=16, ckv_tokens_per_cluster=16)
     keys, tokens, table = _aligned_corpus(rng, N, d)
     layout = chunk_sequence(tokens, table, cfg)
-    index = build_index(keys, layout, cfg)
-    qidx = build_quest(keys, page=16)
-    cidx = build_clusterkv(keys, tokens_per_cluster=16)
 
-    rows = {"lychee": [], "quest": [], "clusterkv": [], "window": []}
+    pols = {m: make_policy(m, cfg) for m in ("lychee", "quest", "clusterkv")}
+    states = {m: p.build(keys, layout if p.needs_layout else None, N)
+              for m, p in pols.items()}
+    # StreamingLLM-style window baseline: the streaming policy selects
+    # nothing, so its active set is exactly the assemble_spans recent
+    # buffer — sized to the same budget for a fair row.
+    wcfg = cfg.replace(buffer_size=budget, sink=0)
+    wpol = make_policy("streaming", wcfg)
+
+    rows = {m: [] for m in (*pols, "window")}
     neff = {m: [] for m in rows}
     for _ in range(32):
         qi = int(rng.integers(0, N))
@@ -46,21 +55,17 @@ def run():
         qj = jnp.asarray(q, jnp.float32)
         kh, qn = np.asarray(keys[0]), np.asarray(qj)
 
-        ret = retrieve(index, qj[None], cfg)
-        rows["lychee"].append(recall_rate(ret.token_idx[0],
-                                          ret.token_mask[0], kh, qn))
-        neff["lychee"].append(int(ret.token_mask.sum()))
-        ti, tm = quest_select(qidx, qj[None], budget)
-        rows["quest"].append(recall_rate(ti[0], tm[0], kh, qn))
-        neff["quest"].append(int(tm.sum()))
-        ti, tm = clusterkv_select(cidx, qj[None], budget,
-                                  tokens_per_cluster=16)
-        rows["clusterkv"].append(recall_rate(ti[0], tm[0], kh, qn))
-        neff["clusterkv"].append(int(tm.sum()))
-        wi = jnp.arange(N - budget, N)
-        rows["window"].append(recall_rate(wi, jnp.ones(budget, bool),
-                                          kh, qn))
-        neff["window"].append(budget)
+        for m, pol in pols.items():
+            ti, tm = spans_to_tokens(*pol.select(states[m], qj[None], N),
+                                     pol.span_len)
+            rows[m].append(recall_rate(ti[0], tm[0], kh, qn))
+            neff[m].append(int(tm.sum()))
+        s, ln = wpol.select(None, qj[None], N)
+        starts, lens = assemble_spans(s, ln, N, wcfg,
+                                      max_chunk=wpol.span_len)
+        ti, tm = spans_to_tokens(starts, lens, wpol.span_len)
+        rows["window"].append(recall_rate(ti[0], tm[0], kh, qn))
+        neff["window"].append(int(tm.sum()))
     out = [{"method": m, "recall": float(np.mean(v)), "budget": budget,
             "effective_tokens": float(np.mean(neff[m]))}
            for m, v in rows.items()]

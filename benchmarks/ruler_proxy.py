@@ -30,8 +30,8 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs.base import LycheeConfig, get_config
 from repro.core import chunk_sequence, fixed_chunking, retrieve
-from repro.core.baselines import build_quest, quest_select
 from repro.core.index import build_index
+from repro.core.policy import make_policy, spans_to_tokens
 from repro.models import model as MD
 from repro.models.model import chunked_ce
 from repro.training.data import (NL, QUERY, SEP, structured_retrieval_task)
@@ -145,8 +145,10 @@ def run():
                 np.asarray(ret.token_mask)].tolist())
             hits[name].append(len(got & span) / len(span))
             neff[name].append(len(got))
-        qidx = build_quest(keys, page=16)
-        ti, tm = quest_select(qidx, probe, ly.budget)
+        qpol = make_policy("quest", ly)
+        qstate = qpol.build(keys, None, S)
+        ti, tm = spans_to_tokens(*qpol.select(qstate, probe, S),
+                                 qpol.span_len)
         got = set(np.asarray(ti)[np.asarray(tm)].tolist())
         hits["quest"].append(len(got & span) / len(span))
         neff["quest"].append(len(got))

@@ -11,7 +11,9 @@ mixed generation budgets) through the same engine twice:
 Reports tokens/s, p50/p99 request latency and decode-step counts for both,
 checks the per-request greedy outputs are IDENTICAL across modes (decode is
 per-slot independent; prefill is per-request at natural length), and prints
-the throughput speedup. Both runs follow a warmup trace so jit compilation
+the throughput speedup. ``--policy`` runs the gate under any registered
+cache policy (lychee | quest | clusterkv | streaming | dense) — the
+continuous-batching win is policy-independent. Both runs follow a warmup trace so jit compilation
 (one prefill specialisation per prompt length + the decode step) is paid
 before any timer starts.
 
@@ -26,14 +28,16 @@ import jax
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, LycheeConfig, get_config
+from repro.core.policy import list_policies
 from repro.models import model as MD
 from repro.serving import Engine, Request, make_trace
 
 
 def build_engine(args):
-    lychee = (LycheeConfig(enabled=False) if args.no_lychee else
-              LycheeConfig(budget=args.budget, sink=16, buffer_size=64,
-                           max_coarse=32, top_kg=8, full_attn_layers=0))
+    policy = "dense" if args.no_lychee else args.policy
+    lychee = LycheeConfig(policy=policy, enabled=policy != "dense",
+                          budget=args.budget, sink=16, buffer_size=64,
+                          max_coarse=32, top_kg=8, full_attn_layers=0)
     cfg = get_config(args.arch, reduced=args.reduced).replace(
         dtype="float32", lychee=lychee)
     params = MD.init_model(jax.random.key(0), cfg)
@@ -57,7 +61,12 @@ def main():
                     default=[64, 256, 1024])
     ap.add_argument("--gen-lens", type=int, nargs="+", default=[8, 96])
     ap.add_argument("--budget", type=int, default=256)
-    ap.add_argument("--no-lychee", action="store_true")
+    ap.add_argument("--policy", default="lychee",
+                    choices=list(list_policies()),
+                    help="cache policy the continuous-vs-static gate "
+                         "runs under")
+    ap.add_argument("--no-lychee", action="store_true",
+                    help="legacy alias for --policy dense")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -66,7 +75,8 @@ def main():
     trace = make_trace(rng, args.requests, cfg.vocab,
                        prompt_lens=args.prompt_lens, gen_lens=args.gen_lens)
     n_prompt = sum(r.prompt_len for r in trace)
-    print(f"[throughput] {cfg.name} | slots={args.slots} "
+    print(f"[throughput] {cfg.name} | policy={engine.policy} "
+          f"slots={args.slots} "
           f"requests={args.requests} prompts={sorted(set(args.prompt_lens))} "
           f"gens={sorted(set(args.gen_lens))} "
           f"({n_prompt} prompt tokens total)")

@@ -3,24 +3,27 @@
 Full attention scans the whole cache every token (linear growth);
 LycheeCluster's cost is bounded by the budget. We time the decode-attention
 operator (the component the paper's speedup comes from) at growing context
-lengths on CPU, plus ClusterKV-style selection for comparison. Absolute
-milliseconds are CPU numbers; the shape of the curves (linear vs flat) is
-the reproduced claim, and the TPU-side magnitude comes from §Roofline.
+lengths on CPU, for the dense reference and for the ``lychee`` and
+``clusterkv`` cache policies — both driven through the same
+:class:`~repro.core.policy.CachePolicy` select interface (ClusterKV's
+token-granular scoring is the paper's ~3.5× selection-cost comparison
+point). Absolute milliseconds are CPU numbers; the shape of the curves
+(linear vs flat) is the reproduced claim, and the TPU-side magnitude comes
+from §Roofline.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (build_lychee, coherent_keys, emit,
-                               structured_tokens, timeit)
+from benchmarks.common import (coherent_keys, emit, structured_tokens,
+                               timeit)
 from repro.configs.base import LycheeConfig
-from repro.core import full_decode_attention, retrieve
+from repro.core import (chunk_sequence, full_decode_attention,
+                        synthetic_delimiter_table)
 from repro.core.attention import sparse_decode_attention
-from repro.core.baselines import build_clusterkv, clusterkv_select
+from repro.core.policy import make_policy, spans_to_tokens
 
 
 def run():
@@ -29,13 +32,16 @@ def run():
     budget = 512
     cfg = LycheeConfig(min_chunk=8, max_chunk=16, sink=16, buffer_size=64,
                        budget=budget, top_kg=8, max_coarse=32)
+    table = jnp.asarray(synthetic_delimiter_table(997))
     rows = []
     for N in (2048, 4096, 8192, 16384):
         keys = coherent_keys(rng, N, d, H=H)
         values = jnp.asarray(rng.standard_normal((H, N, d)), jnp.float32)
         tokens = structured_tokens(rng, N)
-        index, _ = build_lychee(keys, tokens, cfg)
-        cidx = build_clusterkv(keys, tokens_per_cluster=32, iters=4)
+        layout = chunk_sequence(tokens, table, cfg)
+        pols = {m: make_policy(m, cfg) for m in ("lychee", "clusterkv")}
+        states = {m: p.build(keys, layout if p.needs_layout else None, N)
+                  for m, p in pols.items()}
         q = jnp.asarray(rng.standard_normal((H * G, d)), jnp.float32)
         probe = q.reshape(H, G, d).mean(1)
 
@@ -43,21 +49,20 @@ def run():
             qq, kk, vv, N, d ** -0.5))
         t_full = timeit(full_fn, q, keys, values)
 
-        @jax.jit
-        def lychee_fn(qq, pb, kk, vv):
-            ret = retrieve(index, pb, cfg)
-            return sparse_decode_attention(qq, kk, vv, ret.token_idx,
-                                           ret.token_mask, N, cfg, d ** -0.5)
-        t_ly = timeit(lychee_fn, q, probe, keys, values)
+        t_pol = {}
+        for m, pol in pols.items():
+            state = states[m]
 
-        @jax.jit
-        def ckv_fn(qq, pb, kk, vv):
-            ti, tm = clusterkv_select(cidx, pb, budget)
-            return sparse_decode_attention(qq, kk, vv, ti, tm, N, cfg,
-                                           d ** -0.5)
-        t_ckv = timeit(ckv_fn, q, probe, keys, values)
+            @jax.jit
+            def pol_fn(qq, pb, kk, vv, pol=pol, state=state):
+                ti, tm = spans_to_tokens(*pol.select(state, pb, N),
+                                         pol.span_len)
+                return sparse_decode_attention(qq, kk, vv, ti, tm, N, cfg,
+                                               d ** -0.5)
+            t_pol[m] = timeit(pol_fn, q, probe, keys, values)
 
-        rows.append({"context": N, "full_ms": t_full, "lychee_ms": t_ly,
-                     "clusterkv_ms": t_ckv,
-                     "speedup_vs_full": t_full / t_ly})
+        rows.append({"context": N, "full_ms": t_full,
+                     "lychee_ms": t_pol["lychee"],
+                     "clusterkv_ms": t_pol["clusterkv"],
+                     "speedup_vs_full": t_full / t_pol["lychee"]})
     return emit(rows, "tpot_fig4")

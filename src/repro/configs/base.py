@@ -29,9 +29,12 @@ from typing import Callable, Dict, Optional, Tuple
 
 @dataclasses.dataclass(frozen=True)
 class LycheeConfig:
-    """Hyper-parameters of the paper's technique (§4, App. A)."""
+    """Hyper-parameters of the paper's technique (§4, App. A) plus the
+    cache-management policy selection (``core/policy.py`` registry)."""
 
-    enabled: bool = True
+    enabled: bool = True          # False forces the "dense" policy
+    policy: str = "lychee"        # cache policy: lychee | quest | clusterkv
+                                  # | streaming | dense (core.policy registry)
     min_chunk: int = 8            # minimum chunk length before delimiter search
     max_chunk: int = 16           # forced split threshold
     buffer_size: int = 128        # decode-time recent-token buffer
@@ -43,9 +46,19 @@ class LycheeConfig:
     top_kg: int = 8               # coarse units kept
     full_attn_layers: int = 2     # first N layers keep full attention
     child_cap: int = 8            # static max fine clusters per coarse unit
+    chunk_cap: int = 6            # CC: static max member chunks per fine
+                                  # cluster (capacity-planning source of truth)
     pooling: str = "mean"         # "mean" | "max" (Table 3 ablation)
     use_kernel: bool = False      # Pallas sparse-attention path (True on TPU;
                                   # interpret-mode validated in tests)
+
+    # --- baseline-policy knobs (core/policy.py) ----------------------------
+    quest_page: int = 16          # Quest: fixed page size
+    ckv_tokens_per_cluster: int = 32   # ClusterKV: cluster granularity
+    ckv_cap_factor: int = 4       # ClusterKV: member-list cap multiplier
+
+    def replace(self, **kw) -> "LycheeConfig":
+        return dataclasses.replace(self, **kw)
 
     def top_kc(self, budget: Optional[int] = None) -> int:
         """Fine clusters kept so that selected tokens ≈ budget."""

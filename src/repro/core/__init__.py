@@ -5,6 +5,8 @@ from repro.core.chunking import (byte_delimiter_table, chunk_sequence,
                                  fixed_chunking, synthetic_delimiter_table)
 from repro.core.index import build_index
 from repro.core.kmeans import spherical_kmeans
+from repro.core.policy import (CachePolicy, list_policies, make_policy,
+                               policy_for, register_policy, spans_to_tokens)
 from repro.core.pooling import l2_normalize, pool_chunks
 from repro.core.retrieval import Retrieval, retrieve, retrieve_dense, ub_scores
 from repro.core.types import (ChunkLayout, LycheeIndex, empty_index,
@@ -12,11 +14,12 @@ from repro.core.types import (ChunkLayout, LycheeIndex, empty_index,
 from repro.core.update import lazy_update, maybe_lazy_update, reset_index
 
 __all__ = [
-    "ChunkLayout", "LycheeIndex", "Retrieval", "build_index",
+    "CachePolicy", "ChunkLayout", "LycheeIndex", "Retrieval", "build_index",
     "byte_delimiter_table", "chunk_sequence", "empty_index",
     "empty_index_like", "fixed_chunking", "full_decode_attention",
-    "index_dims", "l2_normalize", "lazy_update", "maybe_lazy_update",
-    "pad_index", "pool_chunks", "reset_index", "retrieve",
-    "retrieve_dense", "sparse_decode_attention", "spherical_kmeans",
-    "synthetic_delimiter_table", "ub_scores",
+    "index_dims", "l2_normalize", "lazy_update", "list_policies",
+    "make_policy", "maybe_lazy_update", "pad_index", "policy_for",
+    "pool_chunks", "register_policy", "reset_index", "retrieve",
+    "retrieve_dense", "sparse_decode_attention", "spans_to_tokens",
+    "spherical_kmeans", "synthetic_delimiter_table", "ub_scores",
 ]

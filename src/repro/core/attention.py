@@ -7,9 +7,10 @@ overlapping the sink/recent ranges are masked out so no position is counted
 twice in the softmax.
 
 This module is the pure-jnp implementation — the oracle for the Pallas
-``sparse_attention`` kernel and the path used on CPU. It serves both
-LycheeCluster and the baseline selectors (Quest/ClusterKV/StreamingLLM),
-which emit the same (token_idx, token_mask) interface.
+``sparse_attention`` kernel and the path used on CPU. It serves every
+registered :class:`~repro.core.policy.CachePolicy` (LycheeCluster, Quest,
+ClusterKV, StreamingLLM), which all emit the same span / (token_idx,
+token_mask) interfaces and share the sink/recent assembly below.
 """
 from __future__ import annotations
 

@@ -46,13 +46,13 @@ def build_member_lists(assign: jax.Array, mask: jax.Array, L: int,
 
 
 def build_index(keys: jax.Array, layout: ChunkLayout, cfg: LycheeConfig,
-                chunk_cap: int = 6, n_tokens=None) -> LycheeIndex:
+                n_tokens=None) -> LycheeIndex:
     """Build the three-tier index for one (layer, batch element).
 
     keys: (H, N, d) token keys. Returns a :class:`LycheeIndex`.
     """
     H, N, d = keys.shape
-    M, L, P, CC, FC = index_dims(N, cfg, chunk_cap)
+    M, L, P, CC, FC = index_dims(N, cfg)
 
     chunk_key = pool_chunks(keys, layout, M, cfg.pooling, n_tokens)  # (H,M,d)
 

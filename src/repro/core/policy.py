@@ -1,0 +1,412 @@
+"""Pluggable KV cache-management policies (the §5.1 comparison surface).
+
+A :class:`CachePolicy` owns the *selection state* of one policy-managed
+attention layer — what the paper calls the index — as a per-(layer, slot)
+pytree of STATIC shapes, so every policy composes with the continuous-
+batching slot surgery (``models.model.write_slot`` / ``reset_slot``) exactly
+like the Lychee index does. Five operations:
+
+* ``empty(N, H, d)``          all-invalid state for an ``N``-token cache
+                              (zero leaves ARE the empty state — the
+                              recycled-slot contract);
+* ``build(keys, layout, n_cache)``   prefill-time construction, padded to
+                              the static capacities of ``n_cache`` so slots
+                              admitted from different prompt lengths carry
+                              identical leaf shapes;
+* ``select(state, probe, t)`` decode-time selection → chunk SPANS
+                              ``(starts, lens)`` per kv head, the TPU-native
+                              active-set form every span executor (pure-jnp,
+                              ctx-sharded shard_map, Pallas kernel) consumes;
+* ``update(state, k_cache, t)``  streaming append: fold the token written at
+                              position ``t - 1`` into the state;
+* ``pad(state, N_cap)`` / ``reset(state)``  slot-lifecycle hooks.
+
+Registered policies (``register_policy`` / ``get_policy``):
+
+* ``lychee``     the paper's three-tier hierarchical index — a thin wrapper
+                 over :mod:`repro.core.index`/``retrieval``/``update``,
+                 bit-identical to calling them directly;
+* ``quest``      Quest (Tang et al., 2024): fixed pages with per-page
+                 elementwise min/max key bounds, score = Σ_d max(q·min,
+                 q·max); streaming update extends the tail page's bounds;
+* ``clusterkv``  ClusterKV (Liu et al., 2025): token-granular spherical
+                 k-means; streaming update assigns each new token to its
+                 nearest centroid (moving-average, like the Lychee graft);
+* ``streaming``  StreamingLLM (Xiao et al., 2024): selects nothing — the
+                 active set is the shared sink + recent buffer only;
+* ``dense``      no selection state; the model runs full cache attention
+                 (``is_dense`` short-circuits dispatch).
+
+Every policy flows through the same sink/recent-buffer span assembly
+(:func:`repro.core.attention.assemble_spans`) and the same attention
+executors, so an end-to-end tokens/s comparison isolates the selection
+policy — the precondition for honest §5.1 tables.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LycheeConfig
+from repro.core.index import build_index, build_member_lists
+from repro.core.kmeans import spherical_kmeans
+from repro.core.pooling import l2_normalize
+from repro.core.retrieval import retrieve_spans
+from repro.core.types import ChunkLayout, empty_index, pad_index
+from repro.core.update import maybe_lazy_update
+
+_NEG = -1e30
+
+
+def spans_to_tokens(starts: jax.Array, lens: jax.Array, span_len: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Expand a span table into ``(token_idx, token_mask)`` — the flat form
+    consumed by ``sparse_decode_attention`` and the recall metrics.
+
+    starts/lens: (..., C). Returns (..., C * span_len) each.
+    """
+    offs = jnp.arange(span_len, dtype=jnp.int32)
+    tok = starts[..., None] + offs
+    mask = offs < jnp.clip(lens, 0, span_len)[..., None]
+    flat = starts.shape[:-1] + (starts.shape[-1] * span_len,)
+    return tok.reshape(flat), mask.reshape(flat)
+
+
+class CachePolicy:
+    """Base cache-management policy. Subclasses override the five ops.
+
+    Class attributes describe the dispatch contract:
+
+    * ``stateful``      the policy carries a pytree state in the decode
+                        cache (key ``"policy_state"``);
+    * ``has_update``    ``update`` does real work at decode time;
+    * ``needs_layout``  ``build`` consumes the structure-aware ChunkLayout;
+    * ``is_dense``      the model bypasses selection and runs full cache
+                        attention (no ``select``/``update`` calls).
+    """
+
+    name: str = ""
+    stateful: bool = True
+    has_update: bool = True
+    needs_layout: bool = False
+    is_dense: bool = False
+
+    def __init__(self, cfg: LycheeConfig):
+        self.cfg = cfg
+
+    @property
+    def span_len(self) -> int:
+        """Static max span length — the executors' per-span gather width."""
+        return self.cfg.max_chunk
+
+    # -- lifecycle ---------------------------------------------------------
+    def empty(self, N: int, H: int, d: int, dtype=jnp.float32):
+        """All-invalid state for an N-token cache (zero leaves)."""
+        return None
+
+    def build(self, keys: jax.Array, layout: Optional[ChunkLayout],
+              n_cache: int, n_tokens=None):
+        """Prefill-time state over ``keys`` (H, S, d), padded to the static
+        capacities of an ``n_cache``-token cache (slot-splice uniformity)."""
+        return None
+
+    def build_batched(self, keys: jax.Array, layout, n_cache: int):
+        """vmap ``build`` over a leading batch dim of ``keys`` (B, H, S, d),
+        threading the (batched) layout only for policies that consume it —
+        the one call site cache builders need."""
+        if self.needs_layout:
+            return jax.vmap(lambda kb, lay: self.build(kb, lay, n_cache))(
+                keys, layout)
+        return jax.vmap(lambda kb: self.build(kb, None, n_cache))(keys)
+
+    def select(self, state, probe: jax.Array, t) -> Tuple[jax.Array,
+                                                          jax.Array]:
+        """Decode-time selection. probe: (H, d) one query per kv head;
+        t: scalar current length. Returns chunk spans (starts, lens),
+        each (H, C) int32 — padding spans carry len 0."""
+        raise NotImplementedError
+
+    def update(self, state, keys: jax.Array, t):
+        """Streaming append: fold the row written at position ``t - 1`` of
+        ``keys`` (H, N, d) into the state. ``t`` = length AFTER the token
+        was appended. Jit-safe; vmapped per slot by the model."""
+        return state
+
+    def pad(self, state, N_cap: int):
+        """Grow a short-prompt state to the capacities of ``N_cap``."""
+        return state
+
+    def reset(self, state):
+        """Empty state with the same static shapes (zero leaves ARE the
+        empty state for every registered policy — the contract
+        ``models.model.reset_slot`` relies on)."""
+        return None if state is None else jax.tree.map(jnp.zeros_like, state)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, Type[CachePolicy]] = {}
+
+
+def register_policy(cls: Type[CachePolicy]) -> Type[CachePolicy]:
+    assert cls.name, f"{cls.__name__} needs a name"
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def list_policies() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def make_policy(name: str, cfg: LycheeConfig) -> CachePolicy:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](cfg)
+
+
+def policy_for(cfg: LycheeConfig) -> CachePolicy:
+    """Resolve the effective policy of a config (``enabled=False`` forces
+    ``dense`` — the pre-policy ``--no-lychee`` behaviour)."""
+    return make_policy(cfg.policy if cfg.enabled else "dense", cfg)
+
+
+# ---------------------------------------------------------------------------
+# LycheeCluster (paper §4) — wraps the existing index, bit-identical
+# ---------------------------------------------------------------------------
+@register_policy
+class LycheePolicy(CachePolicy):
+    name = "lychee"
+    needs_layout = True
+
+    def empty(self, N, H, d, dtype=jnp.float32):
+        return empty_index(N, H, d, self.cfg, dtype)
+
+    def build(self, keys, layout, n_cache, n_tokens=None):
+        return pad_index(build_index(keys, layout, self.cfg,
+                                     n_tokens=n_tokens), n_cache, self.cfg)
+
+    def select(self, state, probe, t):
+        starts, lens, _ = retrieve_spans(state, probe, self.cfg)
+        return starts, lens
+
+    def update(self, state, keys, t):
+        return maybe_lazy_update(state, keys, t, self.cfg)
+
+    def pad(self, state, N_cap):
+        return pad_index(state, N_cap, self.cfg)
+
+
+# ---------------------------------------------------------------------------
+# Quest (Tang et al., 2024)
+# ---------------------------------------------------------------------------
+class QuestState(NamedTuple):
+    """Per-page min/max key bounds. Pg = ceil(n_cache / page)."""
+
+    kmin: jax.Array     # (H, Pg, d)
+    kmax: jax.Array     # (H, Pg, d)
+    pvalid: jax.Array   # (H, Pg) bool
+
+
+@register_policy
+class QuestPolicy(CachePolicy):
+    name = "quest"
+
+    @property
+    def span_len(self) -> int:
+        return self.cfg.quest_page
+
+    def empty(self, N, H, d, dtype=jnp.float32):
+        Pg = max(1, -(-N // self.cfg.quest_page))
+        return QuestState(kmin=jnp.zeros((H, Pg, d), dtype),
+                          kmax=jnp.zeros((H, Pg, d), dtype),
+                          pvalid=jnp.zeros((H, Pg), bool))
+
+    def build(self, keys, layout, n_cache, n_tokens=None):
+        H, S, d = keys.shape
+        page = self.cfg.quest_page
+        Pg = max(1, -(-max(n_cache, S) // page))
+        t = jnp.int32(S) if n_tokens is None else jnp.asarray(n_tokens,
+                                                              jnp.int32)
+        kp = jnp.pad(keys, ((0, 0), (0, Pg * page - S), (0, 0)))
+        tmask = (jnp.arange(Pg * page) < t).reshape(Pg, page)
+        kp = kp.reshape(H, Pg, page, d)
+        kmin = jnp.min(jnp.where(tmask[None, :, :, None], kp, jnp.inf), 2)
+        kmax = jnp.max(jnp.where(tmask[None, :, :, None], kp, -jnp.inf), 2)
+        pvalid = jnp.broadcast_to(jnp.any(tmask, 1)[None], (H, Pg))
+        kmin = jnp.where(pvalid[..., None], kmin, 0.0).astype(keys.dtype)
+        kmax = jnp.where(pvalid[..., None], kmax, 0.0).astype(keys.dtype)
+        return QuestState(kmin=kmin, kmax=kmax, pvalid=pvalid)
+
+    def select(self, state, probe, t):
+        H, Pg, d = state.kmin.shape
+        page = self.cfg.quest_page
+        k_pages = max(1, min(self.cfg.budget // page, Pg))
+
+        t = jnp.asarray(t, jnp.int32)
+
+        def per_head(h):
+            q = probe[h]
+            # Quest Eq. 3 upper bound: per-dim max of q*min / q*max
+            score = jnp.sum(jnp.maximum(q * state.kmin[h],
+                                        q * state.kmax[h]), -1)
+            score = jnp.where(state.pvalid[h], score, _NEG)
+            top_s, top_p = jax.lax.top_k(score, k_pages)
+            ok = top_s > _NEG / 2
+            starts = (top_p * page).astype(jnp.int32)
+            # clip the tail page at the valid length so direct span->token
+            # consumers never see phantom positions >= t
+            lens = jnp.where(ok, jnp.clip(t - starts, 0, page), 0)
+            return starts, lens.astype(jnp.int32)
+
+        return jax.vmap(per_head)(jnp.arange(H))
+
+    def update(self, state, keys, t):
+        """Extend the tail page's min/max with the freshly appended key."""
+        H, Pg, d = state.kmin.shape
+        page = self.cfg.quest_page
+        tpos = jnp.clip(jnp.asarray(t, jnp.int32) - 1, 0, keys.shape[1] - 1)
+        row = keys[:, tpos].astype(state.kmin.dtype)          # (H, d)
+        p = jnp.clip(tpos // page, 0, Pg - 1)
+        was = state.pvalid[:, p]                              # (H,)
+        nmin = jnp.where(was[:, None],
+                         jnp.minimum(state.kmin[:, p], row), row)
+        nmax = jnp.where(was[:, None],
+                         jnp.maximum(state.kmax[:, p], row), row)
+        return QuestState(
+            kmin=jax.lax.dynamic_update_slice(state.kmin, nmin[:, None, :],
+                                              (0, p, 0)),
+            kmax=jax.lax.dynamic_update_slice(state.kmax, nmax[:, None, :],
+                                              (0, p, 0)),
+            pvalid=state.pvalid.at[:, p].set(True))
+
+
+# ---------------------------------------------------------------------------
+# ClusterKV (Liu et al., 2025)
+# ---------------------------------------------------------------------------
+class ClusterKVState(NamedTuple):
+    """Token-granular spherical clusters. C = n_cache // tokens_per_cluster;
+    cap = tokens_per_cluster * cap_factor member slots per cluster."""
+
+    centroid: jax.Array   # (H, C, d) unit-norm
+    cvalid: jax.Array     # (H, C) bool
+    members: jax.Array    # (H, C, cap) int32 token positions, -1 pad
+    nmember: jax.Array    # (H, C) int32 (counts overflow beyond cap too)
+
+
+@register_policy
+class ClusterKVPolicy(CachePolicy):
+    name = "clusterkv"
+
+    @property
+    def span_len(self) -> int:
+        return 1                   # token-granular: every span is one token
+
+    def _dims(self, N: int) -> Tuple[int, int]:
+        tpc = self.cfg.ckv_tokens_per_cluster
+        return max(1, N // tpc), tpc * self.cfg.ckv_cap_factor
+
+    def empty(self, N, H, d, dtype=jnp.float32):
+        C, cap = self._dims(N)
+        return ClusterKVState(centroid=jnp.zeros((H, C, d), dtype),
+                              cvalid=jnp.zeros((H, C), bool),
+                              members=jnp.zeros((H, C, cap), jnp.int32),
+                              nmember=jnp.zeros((H, C), jnp.int32))
+
+    def build(self, keys, layout, n_cache, n_tokens=None):
+        H, S, d = keys.shape
+        C_cap, cap = self._dims(max(n_cache, S))
+        C_s = min(max(1, S // self.cfg.ckv_tokens_per_cluster), C_cap)
+        t = jnp.int32(S) if n_tokens is None else jnp.asarray(n_tokens,
+                                                              jnp.int32)
+        mask = jnp.arange(S) < t
+        kn = l2_normalize(keys) * mask[None, :, None]
+
+        def per_head(kh):
+            km = spherical_kmeans(kh, mask, C_s, self.cfg.kmeans_iters)
+            members, nm = build_member_lists(km.assign, mask, C_s, cap)
+            return km.centroid, km.valid, members, nm
+
+        cent, valid, members, nm = jax.vmap(per_head)(kn)
+        padC = C_cap - C_s
+        return ClusterKVState(
+            centroid=jnp.pad(cent, ((0, 0), (0, padC), (0, 0))),
+            cvalid=jnp.pad(valid, ((0, 0), (0, padC))),
+            members=jnp.pad(members, ((0, 0), (0, padC), (0, 0)),
+                            constant_values=-1),
+            nmember=jnp.pad(nm, ((0, 0), (0, padC))))
+
+    def select(self, state, probe, t):
+        H, C, d = state.centroid.shape
+        cap = state.members.shape[-1]
+        k_cl = max(1, min(self.cfg.budget // self.cfg.ckv_tokens_per_cluster,
+                          C))
+
+        def per_head(h):
+            score = jnp.einsum("cd,d->c", state.centroid[h], probe[h])
+            score = jnp.where(state.cvalid[h], score, _NEG)
+            top_s, top_c = jax.lax.top_k(score, k_cl)
+            ok = top_s > _NEG / 2
+            tok = state.members[h][top_c].reshape(-1)          # (k_cl*cap,)
+            m = (tok >= 0) & jnp.repeat(ok, cap)
+            return jnp.maximum(tok, 0), m.astype(jnp.int32)
+
+        return jax.vmap(per_head)(jnp.arange(H))
+
+    def update(self, state, keys, t):
+        """Assign the appended token to its nearest valid centroid: moving-
+        average (spherical) centroid shift + member-list append, mirroring
+        the Lychee dynamic-chunk graft at token granularity."""
+        H, C, d = state.centroid.shape
+        cap = state.members.shape[-1]
+        tpos = jnp.clip(jnp.asarray(t, jnp.int32) - 1, 0, keys.shape[1] - 1)
+        row = l2_normalize(keys[:, tpos].astype(state.centroid.dtype))
+        sim = jnp.einsum("hcd,hd->hc", state.centroid, row)
+        sim = jnp.where(state.cvalid, sim, _NEG)
+        cid = jnp.argmax(sim, axis=-1).astype(jnp.int32)       # (H,)
+        heads = jnp.arange(H)
+        live = state.cvalid.any(axis=-1)                       # (H,) gate
+
+        n = state.nmember[heads, cid].astype(state.centroid.dtype)
+        mu = state.centroid[heads, cid]
+        mu_new = l2_normalize((mu * n[:, None] + row) / (n[:, None] + 1.0))
+        centroid = state.centroid.at[heads, cid].set(
+            jnp.where(live[:, None], mu_new, mu))
+
+        pos = jnp.minimum(state.nmember[heads, cid], cap - 1)
+        ok = live & (state.nmember[heads, cid] < cap)
+        members = state.members.at[
+            heads, jnp.where(ok, cid, 0), jnp.where(ok, pos, 0)].set(
+            jnp.where(ok, tpos, state.members[heads, 0, 0]))
+        nmember = state.nmember.at[heads, cid].add(live.astype(jnp.int32))
+        return ClusterKVState(centroid=centroid, cvalid=state.cvalid,
+                              members=members, nmember=nmember)
+
+
+# ---------------------------------------------------------------------------
+# StreamingLLM (Xiao et al., 2024) — sink + window only, no state
+# ---------------------------------------------------------------------------
+@register_policy
+class StreamingPolicy(CachePolicy):
+    name = "streaming"
+    stateful = False
+    has_update = False
+
+    def select(self, state, probe, t):
+        """Retrieves nothing: the active set degenerates to the shared
+        sink + recent-buffer spans added by ``assemble_spans``."""
+        H = probe.shape[0]
+        return (jnp.zeros((H, 1), jnp.int32), jnp.zeros((H, 1), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Dense — full cache attention, no selection at all
+# ---------------------------------------------------------------------------
+@register_policy
+class DensePolicy(CachePolicy):
+    name = "dense"
+    stateful = False
+    has_update = False
+    is_dense = True

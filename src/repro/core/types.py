@@ -62,13 +62,15 @@ class LycheeIndex(NamedTuple):
     fine2coarse: jax.Array      # (H, L) int32
 
 
-def index_dims(N: int, cfg: LycheeConfig, chunk_cap: int = 6):
-    """Static capacities for a context of N tokens."""
+def index_dims(N: int, cfg: LycheeConfig):
+    """Static capacities for a context of N tokens. The chunk capacity per
+    fine cluster (CC) comes from ``cfg.chunk_cap`` — capacity planning has
+    one source of truth."""
     M = max(1, (N + cfg.min_chunk - 1) // cfg.min_chunk)
     L = max(1, M // cfg.avg_chunks_per_cluster)
     P = min(cfg.max_coarse, L)
     FC = max(cfg.child_cap, 2 * ((L + P - 1) // P))
-    return M, L, P, chunk_cap, FC
+    return M, L, P, cfg.chunk_cap, FC
 
 
 def empty_index_like(index: LycheeIndex) -> LycheeIndex:
@@ -81,8 +83,8 @@ def empty_index_like(index: LycheeIndex) -> LycheeIndex:
     return jax.tree.map(jnp.zeros_like, index)
 
 
-def pad_index(index: LycheeIndex, N_cap: int, cfg: LycheeConfig,
-              chunk_cap: int = 6) -> LycheeIndex:
+def pad_index(index: LycheeIndex, N_cap: int, cfg: LycheeConfig
+              ) -> LycheeIndex:
     """Grow an index built over a short prompt to the STATIC capacities of an
     ``N_cap``-token cache (continuous batching: every serving slot must carry
     identical leaf shapes regardless of the admitted prompt's length, so a
@@ -98,7 +100,7 @@ def pad_index(index: LycheeIndex, N_cap: int, cfg: LycheeConfig,
     P = index.coarse_centroid.shape[1]
     CC = index.fine_chunks.shape[-1]
     FC = index.coarse_children.shape[-1]
-    M2, L2, P2, CC2, FC2 = index_dims(N_cap, cfg, chunk_cap)
+    M2, L2, P2, CC2, FC2 = index_dims(N_cap, cfg)
     M2, L2, P2, FC2 = (max(M2, M), max(L2, L), max(P2, P), max(FC2, FC))
     if (M2, L2, P2, FC2) == (M, L, P, FC):
         return index
@@ -134,8 +136,8 @@ def pad_index(index: LycheeIndex, N_cap: int, cfg: LycheeConfig,
 
 
 def empty_index(N: int, H: int, d: int, cfg: LycheeConfig,
-                dtype=jnp.float32, chunk_cap: int = 6) -> LycheeIndex:
-    M, L, P, CC, FC = index_dims(N, cfg, chunk_cap)
+                dtype=jnp.float32) -> LycheeIndex:
+    M, L, P, CC, FC = index_dims(N, cfg)
     f = jnp.zeros
     return LycheeIndex(
         chunk_key=f((H, M, d), dtype),

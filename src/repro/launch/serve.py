@@ -1,10 +1,15 @@
 """Serving launcher: batched requests against any --arch (reduced scale on
 CPU; the production-mesh decode lowering is exercised by dryrun.py).
 
+``--policy`` selects the KV cache-management policy for the managed layers
+(lychee | quest | clusterkv | streaming | dense — the ``core.policy``
+registry); every policy runs through the same engine. ``--no-lychee`` is a
+legacy alias for ``--policy dense``.
+
 Fixed-batch mode (default):
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
-      --reduced --ctx 1024 --gen 32 --batch 2 [--no-lychee]
+      --reduced --ctx 1024 --gen 32 --batch 2 [--policy quest]
 
 Streaming mode (--stream): feeds a mixed-length request trace through the
 continuous-batching scheduler — Poisson arrivals at --rate req/s (0 =
@@ -23,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, LycheeConfig, get_config
+from repro.core.policy import list_policies
 from repro.models import model as MD
 from repro.serving import Engine, SamplerConfig, make_trace
 
@@ -35,7 +41,11 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--budget", type=int, default=256)
-    ap.add_argument("--no-lychee", action="store_true")
+    ap.add_argument("--policy", default="lychee",
+                    choices=list(list_policies()),
+                    help="KV cache-management policy for managed layers")
+    ap.add_argument("--no-lychee", action="store_true",
+                    help="legacy alias for --policy dense")
     ap.add_argument("--temperature", type=float, default=0.8)
     # --- streaming admission ------------------------------------------
     ap.add_argument("--stream", action="store_true",
@@ -49,14 +59,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    lychee = (LycheeConfig(enabled=False) if args.no_lychee else
-              LycheeConfig(budget=args.budget, sink=16, buffer_size=64,
-                           max_coarse=32, top_kg=8, full_attn_layers=0))
+    policy = "dense" if args.no_lychee else args.policy
+    lychee = LycheeConfig(policy=policy, enabled=policy != "dense",
+                          budget=args.budget, sink=16, buffer_size=64,
+                          max_coarse=32, top_kg=8, full_attn_layers=0)
     cfg = get_config(args.arch, reduced=args.reduced).replace(
         dtype="float32", lychee=lychee)
     rng = np.random.default_rng(args.seed)
     params = MD.init_model(jax.random.key(0), cfg)
-    mode = "full" if args.no_lychee else f"lychee(budget={args.budget})"
+    mode = "full" if policy == "dense" else \
+        f"{policy}(budget={args.budget})"
 
     if args.stream:
         trace = make_trace(rng, args.requests, cfg.vocab,

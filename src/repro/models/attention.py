@@ -6,8 +6,10 @@ Prefill/train uses a blocked flash-style attention (lax.scan over KV blocks,
 online softmax) so no S×S logits tensor is ever materialised — required for
 prefill_32k / train_4k to fit. Decode uses either dense cache attention
 (prelude layers — the paper keeps the first layers full), windowed ring-
-buffer attention (local layers), or LycheeCluster hierarchical retrieval +
-budgeted sparse attention (global layers).
+buffer attention (local layers), or the configured :class:`~repro.core.
+policy.CachePolicy` (global layers): policy selection + budgeted sparse
+span attention, with LycheeCluster's hierarchical retrieval as the default
+policy and Quest/ClusterKV/StreamingLLM/dense as registered alternatives.
 
 MLA decode runs in *absorbed latent space*: q̃ = W_ukᵀ q_nope scores the
 576-dim latent cache directly, so retrieval, the index, and the sparse
@@ -24,13 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import (build_index, chunk_sequence, empty_index,
-                        full_decode_attention, maybe_lazy_update, pad_index)
+from repro.core import full_decode_attention
 from repro.core.attention import (assemble_spans,
                                   full_decode_attention_ctxsharded,
                                   sparse_span_attention,
                                   sparse_span_attention_ctxsharded)
-from repro.core.retrieval import retrieve_spans
+from repro.core.policy import CachePolicy, policy_for
 from repro.core.types import ChunkLayout
 from repro.kernels import ops as kops
 from repro.models.layers import apply_rope, init_rmsnorm, rmsnorm, trunc_normal
@@ -164,43 +165,50 @@ def _slot_t(t, B: int) -> jax.Array:
     return jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
 
 
-def _lychee_attend(q, k_cache, v_cache, index, t, cfg: ModelConfig):
-    """q: (B, Hq, dk); t: (B,). Returns (out (B, Hq, dv), updated index)."""
+def _policy_attend(q, k_cache, v_cache, pstate, t, cfg: ModelConfig,
+                   pol: CachePolicy):
+    """Policy-managed decode attention: select spans -> sink/recent span
+    assembly -> budgeted sparse span attention -> streaming state update.
+
+    q: (B, Hq, dk); t: (B,). Returns (out (B, Hq, dv), updated policy state
+    — ``None`` for stateless policies)."""
     B, Hq, dk = q.shape
     Hkv = k_cache.shape[1]
     G = Hq // Hkv
     ly = cfg.lychee
     probe = q.reshape(B, Hkv, G, dk).mean(axis=2)           # (B, Hkv, dk)
 
-    def per_b(idx_b, probe_b, t_b):
-        s, ln, _ = retrieve_spans(idx_b, probe_b, ly)
-        return assemble_spans(s, ln, t_b, ly)
+    def per_b(st_b, probe_b, t_b):
+        s, ln = pol.select(st_b, probe_b, t_b)
+        return assemble_spans(s, ln, t_b, ly, max_chunk=pol.span_len)
 
-    starts, lens = jax.vmap(per_b)(index, probe, t)         # (B, Hkv, C)
+    starts, lens = jax.vmap(per_b)(pstate, probe, t)        # (B, Hkv, C)
     qg = q.reshape(B, Hkv, G, dk)
     scale = 1.0 / dk ** 0.5 if cfg.qk_nope_dim == 0 else \
         1.0 / (cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5
     ctx_ax = kv_axes()[2]
     if ly.use_kernel:
         out = kops.chunk_attention(qg, k_cache, v_cache, starts, lens,
-                                   max_chunk=ly.max_chunk, scale=scale,
+                                   max_chunk=pol.span_len, scale=scale,
                                    softcap=cfg.attn_softcap)
     elif ctx_ax is not None:
         # §Perf iteration 1d: shard_map flash-combine over the context
         # shards — collective is O(B·H·G·dv), not O(gathered block)
         out = sparse_span_attention_ctxsharded(
             qg, k_cache, v_cache, starts, lens, ctx_ax,
-            max_chunk=ly.max_chunk, scale=scale, softcap=cfg.attn_softcap)
+            max_chunk=pol.span_len, scale=scale, softcap=cfg.attn_softcap)
     else:
         out = sparse_span_attention(qg, k_cache, v_cache, starts, lens,
-                                    max_chunk=ly.max_chunk, scale=scale,
+                                    max_chunk=pol.span_len, scale=scale,
                                     softcap=cfg.attn_softcap)
-    # lazy update (Algorithm 1 step 4): graft a dynamic chunk when due.
-    # t is per-slot, so the lax.cond inside becomes a select under vmap —
-    # every slot computes the graft and keeps it only when its cadence hits.
-    index = jax.vmap(lambda i, kc, tb: maybe_lazy_update(i, kc, tb + 1, ly))(
-        index, k_cache, t)
-    return out.reshape(B, Hq, -1), index
+    # streaming update (lychee: Algorithm 1 step 4 lazy graft; quest: tail-
+    # page min/max extension; clusterkv: nearest-centroid assignment).
+    # t is per-slot, so any lax.cond inside becomes a select under vmap —
+    # every slot computes the update and keeps it only when its cadence hits.
+    if pol.has_update and pstate is not None:
+        pstate = jax.vmap(lambda s, kc, tb: pol.update(s, kc, tb + 1))(
+            pstate, k_cache, t)
+    return out.reshape(B, Hq, -1), pstate
 
 
 def _append_kv(cache_kv: jax.Array, row: jax.Array, at: jax.Array
@@ -213,9 +221,10 @@ def _append_kv(cache_kv: jax.Array, row: jax.Array, at: jax.Array
 
 
 def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
-               kind: str, use_lychee: bool, rope: bool = True) -> Tuple:
+               kind: str, managed: bool, rope: bool = True) -> Tuple:
     """x: (B, 1, d); t: scalar or (B,) per-slot positions;
-    cache: {"k","v"[, "index"]}. Returns (out, cache)."""
+    cache: {"k","v"[, "policy_state"]}. ``managed`` marks layers whose cache
+    is run through the configured CachePolicy. Returns (out, cache)."""
     B = x.shape[0]
     dh = cfg.resolved_head_dim
     tt = _slot_t(t, B)
@@ -240,9 +249,14 @@ def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
         k_c = shard(k_c, *kv_axes())
         v_c = shard(v_c, *kv_axes())
         cache = dict(cache, k=k_c, v=v_c)
-        if use_lychee and cfg.lychee.enabled and "index" in cache:
-            out, index = _lychee_attend(q, k_c, v_c, cache["index"], tt, cfg)
-            cache = dict(cache, index=index)
+        pol = policy_for(cfg.lychee) if managed else None
+        if pol is not None and not pol.is_dense and \
+                (not pol.stateful or "policy_state" in cache):
+            out, pstate = _policy_attend(q, k_c, v_c,
+                                         cache.get("policy_state"), tt,
+                                         cfg, pol)
+            if pstate is not None:
+                cache = dict(cache, policy_state=pstate)
         elif kv_axes()[2] is not None:
             # §Perf iteration 4: dense prelude attention, shard-local flash
             out = full_decode_attention_ctxsharded(
@@ -259,8 +273,9 @@ def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
 
 def gqa_prefill_cache(k: jax.Array, v: jax.Array, cfg: ModelConfig,
                       kind: str, layout: Optional[ChunkLayout],
-                      n_cache: int, use_lychee: bool) -> dict:
-    """Build the decode cache (and Lychee index) after a prefill forward.
+                      n_cache: int, managed: bool) -> dict:
+    """Build the decode cache (and the policy's selection state) after a
+    prefill forward.
 
     k/v: (B, Hkv, S, dh) post-RoPE."""
     B, Hkv, S, dh = k.shape
@@ -280,14 +295,14 @@ def gqa_prefill_cache(k: jax.Array, v: jax.Array, cfg: ModelConfig,
     k_c = shard(k_c, *kv_axes())
     v_c = shard(v_c, *kv_axes())
     cache = {"k": k_c, "v": v_c}
-    if use_lychee and cfg.lychee.enabled and layout is not None:
+    pol = policy_for(cfg.lychee) if managed else None
+    if pol is not None and pol.stateful and \
+            not (pol.needs_layout and layout is None):
         # layout is batched (leading B dim) — vmap over (keys, layout) pairs.
-        # The index is padded to the CACHE capacity (not the prompt length)
+        # The state is padded to the CACHE capacity (not the prompt length)
         # so every serving slot carries identical leaf shapes and a freed
         # slot can be respliced with any request's state.
-        cache["index"] = jax.vmap(
-            lambda kb, lay: pad_index(build_index(kb, lay, cfg.lychee),
-                                      n_cache, cfg.lychee))(k, layout)
+        cache["policy_state"] = pol.build_batched(k, layout, n_cache)
     return cache
 
 

@@ -16,16 +16,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import (build_index, full_decode_attention, maybe_lazy_update,
-                        pad_index)
-from repro.core.attention import (assemble_spans,
-                                  full_decode_attention_ctxsharded,
-                                  sparse_span_attention,
-                                  sparse_span_attention_ctxsharded)
-from repro.core.retrieval import retrieve_spans
+from repro.core import full_decode_attention
+from repro.core.attention import full_decode_attention_ctxsharded
+from repro.core.policy import policy_for
 from repro.core.types import ChunkLayout
-from repro.kernels import ops as kops
-from repro.models.attention import flash_attention
+from repro.models.attention import _policy_attend, flash_attention
 from repro.models.layers import (apply_rope, init_rmsnorm, rmsnorm,
                                  trunc_normal)
 from repro.sharding.ctx import kv_axes, shard
@@ -110,9 +105,9 @@ def _absorbed_queries(p, x, pos, cfg):
 
 
 def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
-               use_lychee: bool) -> Tuple[jax.Array, dict]:
+               managed: bool) -> Tuple[jax.Array, dict]:
     """x: (B,1,d); t: scalar or (B,) per-slot positions;
-    cache: {"latent": (B, N, kvl+rd)[, "index"]}."""
+    cache: {"latent": (B, N, kvl+rd)[, "policy_state"]}."""
     B = x.shape[0]
     H = cfg.n_heads
     nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -135,31 +130,17 @@ def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
     v_c = latent[:, None, :, :kvl]                          # values = c_kv
 
     ly = cfg.lychee
-    if use_lychee and ly.enabled and "index" in cache:
-        probe = q_eff.mean(axis=1, keepdims=True)           # (B,1,576)
-
-        def per_b(idx_b, probe_b, t_b):
-            s, ln, _ = retrieve_spans(idx_b, probe_b, ly)
-            return assemble_spans(s, ln, t_b, ly)
-
-        starts, lens = jax.vmap(per_b)(cache["index"], probe, tt)
-        qg = q_eff[:, None]                                 # (B,1,H,576)
-        ctx_ax = kv_axes()[2]
-        if ly.use_kernel:
-            ctx = kops.chunk_attention(qg, k_c, v_c, starts, lens,
-                                       max_chunk=ly.max_chunk, scale=scale)
-        elif ctx_ax is not None:
-            ctx = sparse_span_attention_ctxsharded(
-                qg, k_c, v_c, starts, lens, ctx_ax,
-                max_chunk=ly.max_chunk, scale=scale)
-        else:
-            ctx = sparse_span_attention(qg, k_c, v_c, starts, lens,
-                                        max_chunk=ly.max_chunk, scale=scale)
-        ctx = ctx[:, 0]                                     # (B,H,kvl)
-        index = jax.vmap(lambda i, kc, tb: maybe_lazy_update(
-            i, kc[None] if kc.ndim == 2 else kc, tb + 1, ly))(
-            cache["index"], latent, tt)
-        cache = dict(cache, index=index)
+    pol = policy_for(ly) if managed else None
+    if pol is not None and not pol.is_dense and \
+            (not pol.stateful or "policy_state" in cache):
+        # the latent cache is one logical kv head, so the shared policy
+        # dispatch applies directly: its GQA-group-mean probe degenerates
+        # to the head-mean q_eff, and the MLA scale comes from cfg.
+        ctx, pstate = _policy_attend(q_eff, k_c, v_c,
+                                     cache.get("policy_state"), tt, cfg,
+                                     pol)
+        if pstate is not None:
+            cache = dict(cache, policy_state=pstate)
     elif kv_axes()[2] is not None:
         ctx = full_decode_attention_ctxsharded(
             q_eff, k_c, v_c, tt + 1, kv_axes()[2], scale=scale)
@@ -177,19 +158,19 @@ def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
 
 def mla_prefill_cache(latent: jax.Array, cfg: ModelConfig,
                       layout: Optional[ChunkLayout], n_cache: int,
-                      use_lychee: bool) -> dict:
-    """latent: (B, S, kvl+rd). The Lychee index treats the latent cache as a
+                      managed: bool) -> dict:
+    """latent: (B, S, kvl+rd). The cache policy treats the latent cache as a
     single logical kv head of width 576."""
     B, S, D = latent.shape
     pad = n_cache - S
     lat = jnp.pad(latent, ((0, 0), (0, pad), (0, 0)))
     lat = shard(lat, kv_axes()[0], kv_axes()[2], None)
     cache = {"latent": lat}
-    if use_lychee and cfg.lychee.enabled and layout is not None:
+    pol = policy_for(cfg.lychee) if managed else None
+    if pol is not None and pol.stateful and \
+            not (pol.needs_layout and layout is None):
         # layout is batched (leading B dim); latent cache = 1 logical kv
         # head. Padded to cache capacity for uniform serving-slot shapes.
-        cache["index"] = jax.vmap(
-            lambda lb, lay: pad_index(build_index(lb[None], lay, cfg.lychee),
-                                      n_cache, cfg.lychee))(
-            latent, layout)
+        cache["policy_state"] = pol.build_batched(latent[:, None], layout,
+                                                  n_cache)
     return cache

@@ -12,17 +12,19 @@ Three entry points per model, all pure functions of (params, cfg):
 * ``train_forward``  — full-sequence teacher forcing; returns (loss, metrics).
 * ``prefill``        — full-sequence forward that also builds the decode
                        state: KV caches/ring buffers/SSM states and, for
-                       lychee-managed layers, the hierarchical index
-                       (Algorithm 1 phase 1).
+                       policy-managed layers, the selection state of the
+                       configured :class:`~repro.core.policy.CachePolicy`
+                       (lychee default: Algorithm 1 phase 1).
 * ``decode_step``    — one token in, one token's logits out, state updated
-                       (Algorithm 1 phase 2: retrieval, sparse attention,
-                       lazy update).
+                       (lychee: Algorithm 1 phase 2 — retrieval, sparse
+                       attention, lazy update; other policies plug their
+                       own select/update through the same path).
 
-Block kinds and their decode-time cache policy:
+Block kinds and their decode-time cache management:
 
-  attn / mla / mla_moe      prelude -> dense cache; scanned -> LycheeCluster
+  attn / mla / mla_moe      prelude -> dense cache; scanned -> CachePolicy
   attn_local / swa_moe      sliding-window ring buffer (exact, O(window))
-  shared_attn (zamba2)      shared *weights*, per-group caches; LycheeCluster
+  shared_attn (zamba2)      shared *weights*, per-group caches; CachePolicy
   mamba / mlstm / slstm     O(1) recurrent state (attention-free)
   dec_cross (whisper)       self-attn as "attn" + cross-attn over cached
                             encoder KV
@@ -41,6 +43,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import chunk_sequence, synthetic_delimiter_table
+from repro.core.policy import policy_for
 from repro.core.types import ChunkLayout
 from repro.models import attention as A
 from repro.models import mamba2 as M2
@@ -158,14 +161,16 @@ def block_forward(bp: dict, kind: str, x: jax.Array, positions: jax.Array,
 
 def block_make_cache(bp: dict, kind: str, material, x: jax.Array,
                      cfg: ModelConfig, layout: Optional[ChunkLayout],
-                     n_cache: int, use_lychee: bool,
+                     n_cache: int, managed: bool,
                      enc_out: Optional[jax.Array] = None) -> Any:
-    """Turn forward material into the decode cache for this block."""
+    """Turn forward material into the decode cache for this block.
+    ``managed`` marks layers whose cache is run through the configured
+    :class:`~repro.core.policy.CachePolicy`."""
     if kind in ("attn", "attn_local", "enc_attn", "shared_attn", "swa_moe",
                 "dec_cross"):
         akind = "attn" if kind in ("shared_attn", "dec_cross") else kind
         cache = A.gqa_prefill_cache(material["k"], material["v"], cfg, akind,
-                                    layout, n_cache, use_lychee)
+                                    layout, n_cache, managed)
         if kind == "dec_cross":
             ek, ev = A.cross_kv(bp["cross"], enc_out, cfg)
             cache["enc_k"], cache["enc_v"] = ek, ev
@@ -173,7 +178,7 @@ def block_make_cache(bp: dict, kind: str, material, x: jax.Array,
     if kind in MLA_KINDS:
         from repro.models.mla import mla_prefill_cache
         return mla_prefill_cache(material["latent"], cfg, layout, n_cache,
-                                 use_lychee)
+                                 managed)
     if kind == "mamba":
         return M2.mamba2_prefill_state(bp["mixer"], rmsnorm(bp["norm1"], x),
                                        cfg)
@@ -189,11 +194,11 @@ def block_make_cache(bp: dict, kind: str, material, x: jax.Array,
 
 # --- single-token decode ------------------------------------------------------
 def block_decode(bp: dict, kind: str, x: jax.Array, t, cache: Any,
-                 cfg: ModelConfig, use_lychee: bool) -> Tuple[jax.Array, Any]:
+                 cfg: ModelConfig, managed: bool) -> Tuple[jax.Array, Any]:
     if kind in ("attn", "attn_local", "swa_moe", "shared_attn"):
         akind = "attn" if kind == "shared_attn" else kind
         h, cache = A.gqa_decode(bp["attn"], rmsnorm(bp["norm1"], x), t,
-                                cache, cfg, akind, use_lychee)
+                                cache, cfg, akind, managed)
         x = x + h
         if kind == "swa_moe":
             h, _ = MOE.moe_apply(bp["moe"], rmsnorm(bp["norm2"], x), cfg)
@@ -204,7 +209,7 @@ def block_decode(bp: dict, kind: str, x: jax.Array, t, cache: Any,
     if kind in MLA_KINDS:
         from repro.models.mla import mla_decode
         h, cache = mla_decode(bp["attn"], rmsnorm(bp["norm1"], x), t, cache,
-                              cfg, use_lychee)
+                              cfg, managed)
         x = x + h
         if kind == "mla":
             x = x + mlp_apply(bp["mlp"], rmsnorm(bp["norm2"], x))
@@ -226,7 +231,7 @@ def block_decode(bp: dict, kind: str, x: jax.Array, t, cache: Any,
         return x + h, st
     if kind == "dec_cross":
         h, cache = A.gqa_decode(bp["attn"], rmsnorm(bp["norm1"], x), t,
-                                cache, cfg, "attn", use_lychee)
+                                cache, cfg, "attn", managed)
         x = x + h
         x = x + A.cross_decode(bp["cross"], rmsnorm(bp["norm_x"], x),
                                cache["enc_k"], cache["enc_v"], cfg)
@@ -428,11 +433,12 @@ def _mtp_loss(params: dict, x: jax.Array, tokens: jax.Array,
 # ---------------------------------------------------------------------------
 # Prefill: forward + decode-state construction
 # ---------------------------------------------------------------------------
-def _use_lychee(cfg: ModelConfig, kind: str, scanned: bool) -> bool:
+def _policy_managed(cfg: ModelConfig, kind: str, scanned: bool) -> bool:
     """Prelude layers keep full attention (paper App. A); scanned global-
-    attention layers are lychee-managed; local/SWA layers use exact ring
-    buffers; SSM kinds have no cache to manage."""
-    if not cfg.lychee.enabled or not scanned:
+    attention layers are managed by the configured CachePolicy (the
+    ``dense`` policy recovers full attention there); local/SWA layers use
+    exact ring buffers; SSM kinds have no cache to manage."""
+    if not scanned:
         return False
     return kind in ("attn", "shared_attn", "dec_cross") + MLA_KINDS and \
         kind not in LOCAL_KINDS
@@ -463,7 +469,7 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
     state = {"prelude": [cache...], "groups": stacked caches, "t": (B,)}.
 
     Every leaf's shape depends only on ``n_cache`` (KV caches pad to it,
-    Lychee indices pad to its chunk capacities, ``t`` is per-slot), so
+    policy states pad to its static capacities, ``t`` is per-slot), so
     states from prefills of DIFFERENT prompt lengths are pytree-compatible:
     the per-slot surgery below (``prefill_into_slot`` / ``write_slot``)
     splices one request's state into any slot of a live batched state.
@@ -473,7 +479,8 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
     positions = jnp.arange(S, dtype=jnp.int32)
     enc_out = run_encoder(params, extras["frames"], cfg) if cfg.is_encdec \
         else None
-    if layout is None and cfg.lychee.enabled and cfg.uses_attention:
+    needs_layout = policy_for(cfg.lychee).needs_layout
+    if layout is None and needs_layout and cfg.uses_attention:
         layout = make_layout(tokens, cfg, extras=extras)
 
     prelude_caches = []
@@ -490,10 +497,11 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
             bp = _shared_params(params, kind, gp[pos_i])
             x_in = x
             x, _, mat = block_forward(bp, kind, x, positions, cfg, enc_out)
-            lych = _use_lychee(cfg, kind, scanned=True)
+            managed = _policy_managed(cfg, kind, scanned=True)
             caches.append(block_make_cache(
-                bp, kind, mat, x_in, cfg, layout if lych else None,
-                n_cache, lych, enc_out))
+                bp, kind, mat, x_in, cfg,
+                layout if managed and needs_layout else None,
+                n_cache, managed, enc_out))
         return x, tuple(caches)
 
     x, group_caches = jax.lax.scan(group_step, x, params["pattern"])
@@ -532,8 +540,8 @@ def decode_step(params: dict, token: jax.Array, state: dict,
         new = []
         for pos_i, kind in enumerate(cfg.pattern):
             bp = _shared_params(params, kind, gp[pos_i])
-            lych = _use_lychee(cfg, kind, scanned=True)
-            x, c = block_decode(bp, kind, x, t, caches[pos_i], cfg, lych)
+            managed = _policy_managed(cfg, kind, scanned=True)
+            x, c = block_decode(bp, kind, x, t, caches[pos_i], cfg, managed)
             new.append(c)
         return x, tuple(new)
 
@@ -575,9 +583,9 @@ def write_slot(state: dict, sub: dict, slot) -> dict:
     a B=1 ``prefill``) into slot ``slot`` of a live batched state.
 
     This is the continuous-batching admission primitive: the KV caches,
-    LycheeIndex, recent-buffer bookkeeping, and position counter of the slot
-    are all overwritten in one pass; other slots' leaves are untouched, so
-    their retrieval stays bit-identical.
+    policy selection state, recent-buffer bookkeeping, and position counter
+    of the slot are all overwritten in one pass; other slots' leaves are
+    untouched, so their retrieval stays bit-identical.
     """
     slot = jnp.asarray(slot, jnp.int32)
 
@@ -593,9 +601,10 @@ def write_slot(state: dict, sub: dict, slot) -> dict:
 
 def reset_slot(state: dict, slot) -> dict:
     """Clear a drained slot: caches zeroed, position counter 0, and the
-    slot's LycheeIndex emptied (zero leaves ARE the empty index — see
-    ``core.update.reset_index``), so a recycled slot's chunk cursor and
-    validity masks restart cleanly and leak nothing into the next request.
+    slot's policy state emptied (zero leaves ARE the empty state for every
+    registered CachePolicy — see ``core.policy.CachePolicy.reset`` and
+    ``core.update.reset_index``), so a recycled slot's cursors and validity
+    masks restart cleanly and leak nothing into the next request.
     """
     slot = jnp.asarray(slot, jnp.int32)
 

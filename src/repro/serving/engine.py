@@ -8,12 +8,18 @@ Two execution models over the same pure model functions:
 * ``serve`` — **continuous batching**: a :class:`~repro.serving.scheduler.
   Scheduler` feeds a FIFO request trace into ``B`` persistent decode slots.
   When a slot frees, the next request is admitted by a single-sequence
-  prefill at its natural length whose KV caches, ``LycheeIndex``, recent-
-  buffer bookkeeping and position counter are spliced into that slot
-  (``model.prefill_into_slot``) while the other slots keep decoding
-  unperturbed. The per-slot hierarchical index makes this cheap: all decode
-  state is per-(layer, batch-element), so admission is one
+  prefill at its natural length whose KV caches, cache-policy selection
+  state, recent-buffer bookkeeping and position counter are spliced into
+  that slot (``model.prefill_into_slot``) while the other slots keep
+  decoding unperturbed. The per-slot policy state makes this cheap: all
+  decode state is per-(layer, batch-element), so admission is one
   ``dynamic_update_slice`` per leaf.
+
+The KV selection strategy of policy-managed layers is pluggable
+(:mod:`repro.core.policy`): pass ``policy="lychee" | "quest" | "clusterkv"
+| "streaming" | "dense"`` to run any registered :class:`CachePolicy`
+through the identical prefill/decode/serve machinery — the apples-to-apples
+§5.1 comparison surface (``benchmarks/policy_e2e.py``).
 
 Scheduler contract (who owns what):
 
@@ -47,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.policy import policy_for
 from repro.models import model as MD
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.scheduler import Request, Scheduler
@@ -74,6 +81,8 @@ class ServeResult:
     mode: str                     # "continuous" | "static"
     requests: Dict[int, Request]  # uid -> finished request (tokens filled)
     wall_s: float
+    decode_s: float               # wall-clock inside lock-step decode only
+                                  # (admission prefills + scheduling excluded)
     n_steps: int                  # batched decode steps executed
     total_new_tokens: int
     tokens_per_s: float
@@ -86,11 +95,19 @@ class Engine:
     """Batched inference engine over the pure model functions."""
 
     def __init__(self, cfg: ModelConfig, params, *, n_cache: int,
-                 eos_id: Optional[int] = None, donate_state: bool = True):
+                 eos_id: Optional[int] = None, donate_state: bool = True,
+                 policy: Optional[str] = None):
+        """``policy`` overrides the cache-management policy of
+        ``cfg.lychee`` (a name from the ``core.policy`` registry); ``None``
+        keeps the config's own selection."""
+        if policy is not None:
+            cfg = cfg.replace(lychee=cfg.lychee.replace(
+                policy=policy, enabled=policy != "dense"))
         self.cfg = cfg
         self.params = params
         self.n_cache = n_cache
         self.eos_id = eos_id
+        self.policy = policy_for(cfg.lychee).name
 
         donate = (2,) if donate_state else ()
         self._prefill = jax.jit(
@@ -191,6 +208,7 @@ class Engine:
         remaining = np.zeros((n_slots,), np.int64)
         key = jax.random.key(seed)
         n_steps = 0
+        decode_s = 0.0
         t0 = time.perf_counter()
 
         def now() -> float:
@@ -238,10 +256,12 @@ class Engine:
                 continue
 
             # ---- one lock-step decode over the live slots --------------
+            t_step = time.perf_counter()
             logits, state = self._step(self.params, jnp.asarray(cur), state)
             n_steps += 1
             key, sub = jax.random.split(key)
             tok = np.asarray(sample(sub, logits, sampler))
+            decode_s += time.perf_counter() - t_step
             for slot in range(n_slots):
                 if not active[slot]:
                     continue
@@ -259,8 +279,8 @@ class Engine:
         lats = np.asarray([r.latency_s for r in done.values()])
         ttfts = np.asarray([r.ttft_s for r in done.values()])
         return ServeResult(
-            mode=mode, requests=done, wall_s=wall, n_steps=n_steps,
-            total_new_tokens=total,
+            mode=mode, requests=done, wall_s=wall, decode_s=decode_s,
+            n_steps=n_steps, total_new_tokens=total,
             tokens_per_s=total / wall if wall > 0 else 0.0,
             p50_latency_s=float(np.percentile(lats, 50)) if len(lats) else 0.0,
             p99_latency_s=float(np.percentile(lats, 99)) if len(lats) else 0.0,

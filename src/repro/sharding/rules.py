@@ -129,6 +129,12 @@ _STATE_LAYOUTS = {
     "coarse_centroid": (None, None, None), "coarse_radius": (None, None),
     "coarse_size": (None, None), "coarse_valid": (None, None),
     "coarse_children": (None, None, None), "coarse_nchild": (None, None),
+    # QuestState fields (page dim = ctx)
+    "kmin": (None, "ctx", None), "kmax": (None, "ctx", None),
+    "pvalid": (None, "ctx"),
+    # ClusterKVState fields (cluster dim = ctx)
+    "centroid": (None, "ctx", None), "cvalid": (None, "ctx"),
+    "members": (None, "ctx", None), "nmember": (None, "ctx"),
     "t": (),
 }
 

@@ -85,8 +85,9 @@ def test_reset_slot_keeps_other_slots_retrieval_bit_identical(setup):
 
     def fine_ids_of(st):
         """Retrieval over slot 1's index in the FIRST scanned group layer."""
-        index = jax.tree.map(lambda l: l[0, 0],
-                             MD.slice_slot(st, 1)["groups"][0]["index"])
+        index = jax.tree.map(
+            lambda l: l[0, 0],
+            MD.slice_slot(st, 1)["groups"][0]["policy_state"])
         probe = jnp.asarray(np.random.default_rng(3).standard_normal(
             (index.chunk_key.shape[0], index.chunk_key.shape[-1])),
             jnp.float32)
@@ -102,12 +103,13 @@ def test_reset_slot_keeps_other_slots_retrieval_bit_identical(setup):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     # and the reset slot itself is genuinely empty: all-invalid retrieval
-    empty = jax.tree.map(lambda l: l[0, 0], state2["groups"][0]["index"])
+    empty = jax.tree.map(lambda l: l[0, 0],
+                         state2["groups"][0]["policy_state"])
     assert int(empty.chunk_count) == 0
     assert not bool(np.asarray(empty.fine_valid).any())
     # reset_index on an unbatched index is the same contract
     ref = reset_index(jax.tree.map(lambda l: l[0, 0],
-                                   state["groups"][0]["index"]))
+                                   state["groups"][0]["policy_state"]))
     for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(empty)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 

@@ -1,0 +1,280 @@
+"""CachePolicy API tests: the equivalence and lifecycle contracts that make
+the policy redesign safe.
+
+* the registry exposes exactly the five paper-comparison policies;
+* the ``lychee`` policy is a BIT-IDENTICAL wrapper over the pre-policy
+  index machinery (build == build_index+pad_index, select == retrieve_spans,
+  update == maybe_lazy_update) — the refactor cannot have changed the
+  paper's numbers;
+* the ``dense`` policy's incremental decode matches a full-prefix forward
+  (the exactness oracle: decoding token by token equals teacher forcing);
+* every policy serves a continuous-batching trace with recycled slots and
+  produces per-request greedy outputs identical to the request served alone
+  (the slot-splice invariant, per policy);
+* ``reset``/``pad`` round-trips: resetting a slot leaves other slots'
+  leaves bit-identical and the reset state is all-zero; padded build states
+  carry the same static shapes as ``empty`` at cache capacity (the
+  prompt-length-independence that makes slot splicing legal);
+* quest/clusterkv streaming updates fold appended tokens into the state
+  (pages extend; members append).
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LycheeConfig, get_config
+from repro.core import build_index, chunk_sequence, pad_index
+from repro.core import synthetic_delimiter_table
+from repro.core.policy import (list_policies, make_policy, policy_for,
+                               spans_to_tokens)
+from repro.core.retrieval import retrieve_spans
+from repro.core.update import maybe_lazy_update
+from repro.models import model as MD
+from repro.serving import Engine, make_trace
+
+POLICY_NAMES = ("lychee", "quest", "clusterkv", "streaming", "dense")
+STATEFUL = ("lychee", "quest", "clusterkv")
+N_CACHE = 128
+
+
+def _ly(policy="lychee", **kw):
+    base = dict(policy=policy, enabled=policy != "dense", budget=64, sink=4,
+                buffer_size=16, max_coarse=8, top_kg=4, full_attn_layers=0,
+                quest_page=8, ckv_tokens_per_cluster=8)
+    base.update(kw)
+    return LycheeConfig(**base)
+
+
+def _cfg(policy="lychee"):
+    return get_config("granite-3-8b", reduced=True).replace(
+        dtype="float32", lychee=_ly(policy))
+
+
+@pytest.fixture(scope="module")
+def params():
+    # params are policy-independent: one init serves every engine below
+    return MD.init_model(jax.random.key(0), _cfg())
+
+
+def test_registry_exposes_the_five_paper_policies():
+    assert set(list_policies()) == set(POLICY_NAMES)
+    with pytest.raises(KeyError):
+        make_policy("nope", _ly())
+    # enabled=False forces dense regardless of the configured name
+    assert policy_for(_ly("lychee", enabled=False)).is_dense
+    assert policy_for(_ly("quest")).name == "quest"
+
+
+# ---------------------------------------------------------------------------
+# lychee policy == the pre-policy index machinery, bit for bit
+# ---------------------------------------------------------------------------
+def test_lychee_policy_is_bit_identical_wrapper():
+    ly = _ly()
+    rng = np.random.default_rng(0)
+    H, S, d = 2, 96, 16
+    keys = jnp.asarray(rng.standard_normal((H, S, d)), jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, 997, size=(S,)), jnp.int32)
+    table = jnp.asarray(synthetic_delimiter_table(997))
+    layout = chunk_sequence(tokens, table, ly)
+    pol = make_policy("lychee", ly)
+
+    ref = pad_index(build_index(keys, layout, ly), N_CACHE, ly)
+    got = pol.build(keys, layout, N_CACHE)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    probe = jnp.asarray(rng.standard_normal((H, d)), jnp.float32)
+    s_ref, l_ref, _ = retrieve_spans(ref, probe, ly)
+    s_got, l_got = pol.select(got, probe, S)
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_got))
+    np.testing.assert_array_equal(np.asarray(l_ref), np.asarray(l_got))
+    assert pol.span_len == ly.max_chunk
+
+    # update at the lazy-graft cadence (t % max_chunk == 0) and off it
+    for t in (ly.max_chunk * 5, ly.max_chunk * 5 + 3):
+        u_ref = maybe_lazy_update(ref, keys, t, ly)
+        u_got = pol.update(got, keys, t)
+        for a, b in zip(jax.tree.leaves(u_ref), jax.tree.leaves(u_got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# dense policy == full-prefix forward (incremental decode exactness)
+# ---------------------------------------------------------------------------
+def test_dense_policy_decode_matches_full_prefix_forward(params):
+    cfg = _cfg("dense")
+    rng = np.random.default_rng(1)
+    S = 48
+    prompt = rng.integers(0, cfg.vocab, size=(1, S)).astype(np.int32)
+    logits, state = MD.prefill(params, jnp.asarray(prompt), cfg, N_CACHE)
+    seq = prompt.copy()
+    for _ in range(3):
+        tok = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+        seq = np.concatenate([seq, tok[:, None]], axis=1)
+        logits, state = MD.decode_step(params, jnp.asarray(tok), state, cfg)
+        # teacher-forced forward over the full prefix must agree with the
+        # incremental decode step (same math, different summation order)
+        ref, _ = MD.prefill(params, jnp.asarray(seq), cfg, N_CACHE)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                                   atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# every policy end-to-end: recycled slots, serve == solo generate
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_policy_serve_matches_request_served_alone(params, policy):
+    cfg = _cfg(policy)
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    assert engine.policy == policy
+    trace = make_trace(np.random.default_rng(2), 4, cfg.vocab,
+                       prompt_lens=(24, 48), gen_lens=(4, 6))
+    res = engine.serve(copy.deepcopy(trace), n_slots=2, mode="continuous")
+    assert len(res.requests) == 4          # slots recycled mid-stream
+    for req in trace:
+        alone = engine.generate(req.prompt[None], req.max_new)
+        assert res.requests[req.uid].tokens == alone.tokens[0].tolist(), \
+            f"policy {policy}: req {req.uid} diverged from solo serving"
+
+
+# ---------------------------------------------------------------------------
+# slot lifecycle: reset / pad round-trips
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_reset_slot_roundtrip_per_policy(params, policy):
+    cfg = _cfg(policy)
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, cfg.vocab, size=(2, 64)).astype(np.int32)
+    _, state = MD.prefill(params, jnp.asarray(prompts), cfg, N_CACHE)
+    cache0 = state["groups"][0]
+    if policy in STATEFUL:
+        assert "policy_state" in cache0
+    else:
+        assert "policy_state" not in cache0
+
+    state2 = MD.reset_slot(state, 0)
+    # slot 1 survives bit-identically
+    for a, b in zip(jax.tree.leaves(MD.slice_slot(state, 1)),
+                    jax.tree.leaves(MD.slice_slot(state2, 1))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # slot 0 is genuinely empty: zero leaves == policy.reset contract
+    for leaf in jax.tree.leaves(MD.slice_slot(state2, 0)):
+        assert not np.asarray(leaf).any()
+    if policy in STATEFUL:
+        pol = policy_for(cfg.lychee)
+        st0 = jax.tree.map(lambda l: l[0, 0], cache0["policy_state"])
+        ref = pol.reset(st0)
+        got = jax.tree.map(lambda l: l[0, 0],
+                           state2["groups"][0]["policy_state"])
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("policy", STATEFUL)
+def test_build_pads_to_cache_capacity_shapes(policy):
+    """States built from different prompt lengths carry IDENTICAL leaf
+    shapes (== empty(n_cache)), the precondition for write_slot splicing."""
+    ly = _ly(policy)
+    pol = make_policy(policy, ly)
+    rng = np.random.default_rng(4)
+    H, d = 2, 16
+    table = jnp.asarray(synthetic_delimiter_table(997))
+    shapes = []
+    for S in (24, 64):
+        keys = jnp.asarray(rng.standard_normal((H, S, d)), jnp.float32)
+        layout = None
+        if pol.needs_layout:
+            tokens = jnp.asarray(rng.integers(0, 997, size=(S,)), jnp.int32)
+            layout = chunk_sequence(tokens, table, ly)
+        st = pol.build(keys, layout, N_CACHE)
+        shapes.append([tuple(l.shape) for l in jax.tree.leaves(st)])
+    assert shapes[0] == shapes[1]
+    empty = pol.empty(N_CACHE, H, d)
+    assert shapes[0] == [tuple(l.shape) for l in jax.tree.leaves(empty)]
+    # pad on an already-capacity-sized state is a no-op
+    st = pol.build(keys, layout, N_CACHE)
+    padded = pol.pad(st, N_CACHE)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(padded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# streaming updates do real work (quest pages extend; clusterkv appends)
+# ---------------------------------------------------------------------------
+def test_quest_update_extends_tail_page():
+    ly = _ly("quest")
+    pol = make_policy("quest", ly)
+    rng = np.random.default_rng(5)
+    H, S, d = 2, 40, 8
+    keys = jnp.asarray(rng.standard_normal((H, N_CACHE, d)), jnp.float32)
+    st = pol.build(keys[:, :S], None, N_CACHE, n_tokens=S)
+    page = ly.quest_page
+    p_new = S // page                       # first page past the prefill
+    assert not bool(st.pvalid[0, p_new])
+    st2 = pol.update(st, keys, S + 1)       # token appended at position S
+    assert bool(st2.pvalid[0, p_new])
+    np.testing.assert_allclose(np.asarray(st2.kmin[:, p_new]),
+                               np.asarray(keys[:, S]), rtol=1e-6)
+    # a second token in the same page tightens elementwise bounds
+    st3 = pol.update(st2, keys, S + 2)
+    lo = np.minimum(np.asarray(keys[:, S]), np.asarray(keys[:, S + 1]))
+    hi = np.maximum(np.asarray(keys[:, S]), np.asarray(keys[:, S + 1]))
+    np.testing.assert_allclose(np.asarray(st3.kmin[:, p_new]), lo, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(st3.kmax[:, p_new]), hi, rtol=1e-6)
+    # fully-built pages are untouched
+    np.testing.assert_array_equal(np.asarray(st3.kmin[:, 0]),
+                                  np.asarray(st.kmin[:, 0]))
+
+
+def test_clusterkv_update_appends_member_to_nearest_centroid():
+    ly = _ly("clusterkv")
+    pol = make_policy("clusterkv", ly)
+    rng = np.random.default_rng(6)
+    H, S, d = 1, 64, 8
+    keys = jnp.asarray(rng.standard_normal((H, N_CACHE, d)), jnp.float32)
+    st = pol.build(keys[:, :S], None, N_CACHE, n_tokens=S)
+    total0 = int(np.asarray(st.nmember).sum())
+    st2 = pol.update(st, keys, S + 1)
+    assert int(np.asarray(st2.nmember).sum()) == total0 + 1
+    # position S now appears in exactly one member list
+    members = np.asarray(st2.members)
+    assert (members == S).sum() == 1
+    # centroids stay unit-norm after the moving-average shift
+    norms = np.linalg.norm(np.asarray(st2.centroid), axis=-1)
+    valid = np.asarray(st2.cvalid)
+    np.testing.assert_allclose(norms[valid], 1.0, atol=1e-5)
+    # updating an all-empty state is a gated no-op
+    z = pol.reset(st)
+    z2 = pol.update(z, keys, S + 1)
+    for a, b in zip(jax.tree.leaves(z), jax.tree.leaves(z2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quest_select_clips_tail_page_at_valid_length():
+    """Selected spans never cover positions >= t, even when t is not
+    page-aligned — direct span->token consumers (benchmarks) rely on it."""
+    ly = _ly("quest")
+    pol = make_policy("quest", ly)
+    rng = np.random.default_rng(7)
+    H, S, d = 2, 100, 8                      # 100 % quest_page(8) != 0
+    keys = jnp.asarray(rng.standard_normal((H, S, d)), jnp.float32)
+    st = pol.build(keys, None, S)
+    probe = jnp.asarray(rng.standard_normal((H, d)), jnp.float32)
+    ti, tm = spans_to_tokens(*pol.select(st, probe, S), pol.span_len)
+    sel = np.asarray(ti)[np.asarray(tm)]
+    assert sel.size and sel.max() < S
+
+
+def test_spans_to_tokens_expansion():
+    starts = jnp.asarray([[0, 10], [4, 0]], jnp.int32)
+    lens = jnp.asarray([[2, 3], [1, 0]], jnp.int32)
+    tok, mask = spans_to_tokens(starts, lens, 4)
+    assert tok.shape == mask.shape == (2, 8)
+    got = [int(t) for t, m in zip(np.asarray(tok[0]), np.asarray(mask[0]))
+           if m]
+    assert got == [0, 1, 10, 11, 12]
+    assert [int(t) for t, m in zip(np.asarray(tok[1]), np.asarray(mask[1]))
+            if m] == [4]

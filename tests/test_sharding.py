@@ -61,7 +61,7 @@ def test_decode_state_specs_batched_decode():
     state = {
         "groups": ({"k": jax.ShapeDtypeStruct((3, 8, 4, 64, 16),
                                               jnp.bfloat16),
-                    "index": {"chunk_key": jax.ShapeDtypeStruct(
+                    "policy_state": {"chunk_key": jax.ShapeDtypeStruct(
                         (3, 8, 4, 32, 16), jnp.float32)}},),
         "t": jax.ShapeDtypeStruct((8,), jnp.int32),   # per-slot positions
     }
@@ -73,7 +73,7 @@ def test_decode_state_specs_batched_decode():
     # (G, B, H, N, d): batch on data, ctx on model
     assert _ax(kspec[1]) == ("data",)
     assert _ax(kspec[3]) == ("model",)
-    ck = specs["groups"][0]["index"]["chunk_key"]
+    ck = specs["groups"][0]["policy_state"]["chunk_key"]
     assert _ax(ck[3]) == ("model",)           # M dim on ctx axes
     # (B,) per-slot counters ride the batch axes like the token vector
     assert _ax(specs["t"][0]) == ("data",)
