@@ -22,6 +22,8 @@ from __future__ import annotations
 
 import argparse
 import copy
+import json
+import platform
 
 import jax
 import numpy as np
@@ -47,6 +49,10 @@ def main():
     ap.add_argument("--budget", type=int, default=256)
     ap.add_argument("--check", action="store_true",
                     help="assert serve == solo generate per request")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="persist the per-policy table (+ run metadata) as "
+                         "a JSON artifact — the perf-trajectory record CI "
+                         "uploads per PR")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -106,6 +112,20 @@ def main():
         print(f"  {r['policy']:10s} {r['tokens_per_s']:8.1f} "
               f"{r['tpot_ms']:9.1f} {r['p50_s']:7.2f} {r['p99_s']:7.2f} "
               f"{r['ttft_s']:7.2f}")
+    if args.json:
+        payload = {
+            "benchmark": "policy_e2e",
+            "arch": cfg0.name,
+            "backend": jax.default_backend(),
+            "host": platform.platform(),
+            "jax": jax.__version__,
+            "args": {k: v for k, v in vars(args).items() if k != "json"},
+            "checked": bool(args.check),
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"  wrote {args.json}")
     return rows
 
 

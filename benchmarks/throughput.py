@@ -23,6 +23,8 @@ from __future__ import annotations
 
 import argparse
 import copy
+import json
+import platform
 
 import jax
 import numpy as np
@@ -67,6 +69,9 @@ def main():
                          "runs under")
     ap.add_argument("--no-lychee", action="store_true",
                     help="legacy alias for --policy dense")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="persist the static/continuous numbers as a JSON "
+                         "artifact (perf-trajectory record)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -107,6 +112,27 @@ def main():
     print(f"  greedy outputs identical across modes: {identical}"
           + (f" (mismatch: {mismatched})" if mismatched else ""))
     print(f"  continuous vs static speedup: {speedup:.2f}x tokens/s")
+    if args.json:
+        payload = {
+            "benchmark": "throughput",
+            "arch": cfg.name,
+            "policy": engine.policy,
+            "backend": jax.default_backend(),
+            "host": platform.platform(),
+            "jax": jax.__version__,
+            "args": {k: v for k, v in vars(args).items() if k != "json"},
+            "identical": identical,
+            "speedup": speedup,
+            "modes": {m: {"tokens_per_s": r.tokens_per_s,
+                          "decode_s": r.decode_s, "n_steps": r.n_steps,
+                          "tpot_ms": 1e3 * r.decode_s / max(r.n_steps, 1),
+                          "p50_s": r.p50_latency_s, "p99_s": r.p99_latency_s,
+                          "ttft_s": r.mean_ttft_s}
+                      for m, r in results.items()},
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"  wrote {args.json}")
     if not identical:
         raise SystemExit("FAIL: outputs differ between modes")
     if speedup < 1.2:

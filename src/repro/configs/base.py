@@ -49,8 +49,14 @@ class LycheeConfig:
     chunk_cap: int = 6            # CC: static max member chunks per fine
                                   # cluster (capacity-planning source of truth)
     pooling: str = "mean"         # "mean" | "max" (Table 3 ablation)
-    use_kernel: bool = False      # Pallas sparse-attention path (True on TPU;
-                                  # interpret-mode validated in tests)
+    use_kernel: Optional[bool] = None
+                                  # Pallas sparse-attention span executor.
+                                  # None (default) = backend-aware: the
+                                  # single-dispatch compiled kernel on TPU,
+                                  # the pure-jnp oracle elsewhere. True
+                                  # forces the kernel (interpret mode off-
+                                  # TPU — how tests validate it); False
+                                  # forces the jnp path everywhere.
 
     # --- baseline-policy knobs (core/policy.py) ----------------------------
     quest_page: int = 16          # Quest: fixed page size

@@ -87,6 +87,81 @@ def assemble_spans(ret_starts: jax.Array, ret_lens: jax.Array, t,
     return starts, lens
 
 
+def fused_policy_decode(q, k_cache, v_cache, pstate, t, pol,
+                        ly: LycheeConfig, *, scale: float,
+                        softcap: float = 0.0):
+    """THE policy-managed decode hot path, fused (Algorithm 1 steps 1-4):
+
+        select (retrieval) -> assemble_spans (sink/recent merge)
+          -> span executor -> ``update_batched`` (lazy graft / page extend)
+
+    One call per managed layer per decode step; every registered
+    :class:`~repro.core.policy.CachePolicy` (lychee, quest, clusterkv,
+    streaming — dense short-circuits earlier) flows through it, so the whole
+    chain traces into the engine's single jitted ``serve_step``. The span
+    executor is picked once at trace time:
+
+    * Pallas kernel (``ly.use_kernel``; ``None`` = auto, i.e. TPU): ONE
+      ``pallas_call`` whose grid covers (B, Hkv, span tiles) — the cache is
+      passed as-is; its reserved ``cache_slack`` tail rows (never written,
+      see ``core.types.usable_rows``) make every span DMA in-bounds with no
+      per-step copy;
+    * context-sharded shard_map flash-combine when the cache's context dim
+      is sharded;
+    * pure-jnp gather oracle otherwise (CPU default).
+
+    q: (B, Hq, dk); k_cache/v_cache: (B, Hkv, N, d*); pstate: batched
+    policy state (None for stateless policies); t: (B,) per-slot lengths
+    BEFORE this token. Returns (out (B, Hq, dv), updated policy state).
+    """
+    from repro.kernels import ops as kops
+    from repro.sharding.ctx import kv_axes
+
+    B, Hq, dk = q.shape
+    Hkv = k_cache.shape[1]
+    G = Hq // Hkv
+    probe = q.reshape(B, Hkv, G, dk).mean(axis=2)           # (B, Hkv, dk)
+
+    def per_b(st_b, probe_b, t_b):
+        s, ln = pol.select(st_b, probe_b, t_b)
+        return assemble_spans(s, ln, t_b, ly, max_chunk=pol.span_len)
+
+    starts, lens = jax.vmap(per_b)(pstate, probe, t)        # (B, Hkv, C)
+    qg = q.reshape(B, Hkv, G, dk)
+    ctx_ax = kv_axes()[2]
+    use_kernel = ly.use_kernel
+    if use_kernel is None:
+        # auto: the single-device kernel must not shadow the context-
+        # sharded executor — indexing the full cache from one pallas_call
+        # would force XLA to replicate the sharded context dim
+        use_kernel = jax.default_backend() == "tpu" and ctx_ax is None
+    elif use_kernel and ctx_ax is not None:
+        raise ValueError(
+            "use_kernel=True is incompatible with a context-sharded KV "
+            "cache: the single pallas_call would replicate the sharded "
+            "context dim on every device. Use use_kernel=None (auto) so "
+            "sharded decode takes the shard_map flash-combine executor.")
+    if use_kernel:
+        out = kops.chunk_attention(qg, k_cache, v_cache, starts, lens,
+                                   max_chunk=pol.span_len, scale=scale,
+                                   softcap=softcap)
+    elif ctx_ax is not None:
+        # §Perf iteration 1d: shard_map flash-combine over the context
+        # shards — collective is O(B·H·G·dv), not O(gathered block)
+        out = sparse_span_attention_ctxsharded(
+            qg, k_cache, v_cache, starts, lens, ctx_ax,
+            max_chunk=pol.span_len, scale=scale, softcap=softcap)
+    else:
+        out = sparse_span_attention(qg, k_cache, v_cache, starts, lens,
+                                    max_chunk=pol.span_len, scale=scale,
+                                    softcap=softcap)
+    # streaming update (lychee: Algorithm 1 step 4 lazy graft; quest: tail-
+    # page min/max extension; clusterkv: nearest-centroid assignment).
+    # t + 1 = per-slot length after this token's cache append.
+    pstate = pol.update_batched(pstate, k_cache, t + 1)
+    return out.reshape(B, Hq, -1), pstate
+
+
 def sparse_span_attention(q, k_cache, v_cache, starts, lens, *,
                           max_chunk: int = 16, scale: float = 1.0,
                           softcap: float = 0.0) -> jax.Array:

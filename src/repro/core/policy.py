@@ -134,6 +134,18 @@ class CachePolicy:
         was appended. Jit-safe; vmapped per slot by the model."""
         return state
 
+    def update_batched(self, state, keys: jax.Array, t: jax.Array):
+        """Fold each serving slot's freshly appended token into its state —
+        the batched decode-time entry point (one call per managed layer per
+        step, from ``core.attention.fused_policy_decode``). keys:
+        (B, H, N, d); t: (B,) per-slot lengths AFTER the append. Default:
+        ``vmap`` of :meth:`update`; policies with a sparser real-work
+        cadence (lychee's ``max_chunk`` graft) override this to skip the
+        whole vmapped computation when no slot is due."""
+        if not self.has_update or state is None:
+            return state
+        return jax.vmap(self.update)(state, keys, t)
+
     def pad(self, state, N_cap: int):
         """Grow a short-prompt state to the capacities of ``N_cap``."""
         return state
@@ -194,6 +206,23 @@ class LycheePolicy(CachePolicy):
 
     def update(self, state, keys, t):
         return maybe_lazy_update(state, keys, t, self.cfg)
+
+    def update_batched(self, state, keys, t):
+        """Graft-cadence gate: a dynamic chunk is grafted only when some
+        slot's ``t`` hits a ``max_chunk`` boundary (and that slot's index
+        still has capacity), so on most decode steps the whole vmapped
+        graft — pooling, nearest-cluster search, centroid/radius/member
+        scatters — is skipped by one ``lax.cond``. When the cond IS taken
+        the per-slot ``maybe_lazy_update`` selects exactly as before — same
+        math as the ungated vmap (identical up to XLA fusion order)."""
+        due = jnp.any(((jnp.asarray(t, jnp.int32) % self.cfg.max_chunk) == 0)
+                      & (state.chunk_count < state.chunk_start.shape[-1]))
+        return jax.lax.cond(
+            due,
+            lambda s: jax.vmap(
+                lambda sb, kb, tb: maybe_lazy_update(sb, kb, tb, self.cfg))(
+                s, keys, t),
+            lambda s: s, state)
 
     def pad(self, state, N_cap):
         return pad_index(state, N_cap, self.cfg)

@@ -54,6 +54,36 @@ def _expand_tokens(index: LycheeIndex, head: int, fine_ids: jax.Array,
     return tok.reshape(-1), tmask.reshape(-1)
 
 
+def _select_fine(index: LycheeIndex, head: int, q: jax.Array,
+                 cfg: LycheeConfig, budget: int | None):
+    """Steps 1-2 of Algorithm 1 for ONE head: coarse pruning then fine
+    top-k over the survivors' gathered children. Shared by the token-level
+    (:func:`retrieve`) and span-level (:func:`retrieve_spans`) consumers.
+    Returns (fine_ids (kc,), fine_mask (kc,), coarse_ids (kg,))."""
+    kg = cfg.top_kg
+    kc = cfg.top_kc(budget)
+    # ---- Step 1: coarse-level pruning ----------------------------------
+    sg = ub_scores(q, index.coarse_centroid[head], index.coarse_radius[head],
+                   index.coarse_valid[head])
+    _, top_g = jax.lax.top_k(sg, min(kg, sg.shape[0]))              # (kg,)
+    # ---- Step 2: fine-level pruning over gathered children -------------
+    cand = index.coarse_children[head][top_g].reshape(-1)           # (kg*FC,)
+    cmask = cand >= 0
+    cand_safe = jnp.maximum(cand, 0)
+    mu = index.fine_centroid[head][cand_safe]
+    rr = index.fine_radius[head][cand_safe]
+    vv = index.fine_valid[head][cand_safe] & cmask
+    sc = ub_scores(q, mu, rr, vv)
+    k_eff = min(kc, sc.shape[0])
+    top_s, top_i = jax.lax.top_k(sc, k_eff)
+    fine_ids = cand_safe[top_i]
+    fine_mask = top_s > _NEG / 2
+    if k_eff < kc:  # pad to static kc
+        fine_ids = jnp.pad(fine_ids, (0, kc - k_eff))
+        fine_mask = jnp.pad(fine_mask, (0, kc - k_eff))
+    return fine_ids, fine_mask, top_g
+
+
 def retrieve(index: LycheeIndex, probe: jax.Array, cfg: LycheeConfig,
              budget: int | None = None) -> Retrieval:
     """Hierarchical retrieval for one (layer, batch element).
@@ -61,31 +91,10 @@ def retrieve(index: LycheeIndex, probe: jax.Array, cfg: LycheeConfig,
     probe: (H, d) one query probe per kv head (GQA group mean).
     """
     H, d = probe.shape
-    kg = cfg.top_kg
-    kc = cfg.top_kc(budget)
-    FC = index.coarse_children.shape[-1]
 
     def per_head(h):
-        q = probe[h]
-        # ---- Step 1: coarse-level pruning ------------------------------
-        sg = ub_scores(q, index.coarse_centroid[h], index.coarse_radius[h],
-                       index.coarse_valid[h])
-        _, top_g = jax.lax.top_k(sg, min(kg, sg.shape[0]))          # (kg,)
-        # ---- Step 2: fine-level pruning over gathered children ---------
-        cand = index.coarse_children[h][top_g].reshape(-1)          # (kg*FC,)
-        cmask = cand >= 0
-        cand_safe = jnp.maximum(cand, 0)
-        mu = index.fine_centroid[h][cand_safe]
-        rr = index.fine_radius[h][cand_safe]
-        vv = index.fine_valid[h][cand_safe] & cmask
-        sc = ub_scores(q, mu, rr, vv)
-        k_eff = min(kc, sc.shape[0])
-        top_s, top_i = jax.lax.top_k(sc, k_eff)
-        fine_ids = cand_safe[top_i]
-        fine_mask = top_s > _NEG / 2
-        if k_eff < kc:  # pad to static kc
-            fine_ids = jnp.pad(fine_ids, (0, kc - k_eff))
-            fine_mask = jnp.pad(fine_mask, (0, kc - k_eff))
+        fine_ids, fine_mask, top_g = _select_fine(index, h, probe[h], cfg,
+                                                  budget)
         # ---- Step 3 prep: expand chunks into token indices -------------
         tok, tmask = _expand_tokens(index, h, fine_ids, fine_mask,
                                     cfg.max_chunk)
@@ -96,26 +105,41 @@ def retrieve(index: LycheeIndex, probe: jax.Array, cfg: LycheeConfig,
                      fine_mask=fmask, coarse_ids=gids)
 
 
+class SpanRetrieval(NamedTuple):
+    """Cluster-selection record of a span-form retrieval (stability
+    metrics); the token expansion the span path never materialises is
+    deliberately absent."""
+
+    fine_ids: jax.Array     # (H, kc)
+    fine_mask: jax.Array    # (H, kc)
+    coarse_ids: jax.Array   # (H, kg)
+
+
 def retrieve_spans(index: LycheeIndex, probe: jax.Array, cfg: LycheeConfig,
                    budget: int | None = None):
     """Like :func:`retrieve` but emits CHUNK SPANS — the TPU-native active-set
     form consumed by the Pallas sparse-attention kernel (each span is one
-    contiguous DMA). Returns (starts (H, kc*CC), lens (H, kc*CC), ret).
+    contiguous DMA). The decode hot path: unlike :func:`retrieve`, the
+    (H, kc*CC*max_chunk) token expansion is never built — span consumers
+    gather/DMA whole chunks, so only the (kc*CC,) span table materialises.
+    Returns (starts (H, kc*CC), lens (H, kc*CC), :class:`SpanRetrieval`).
     """
-    ret = retrieve(index, probe, cfg, budget)
-    H, kc = ret.fine_ids.shape
-    CC = index.fine_chunks.shape[-1]
+    H, d = probe.shape
 
     def per_head(h):
-        chunks = index.fine_chunks[h][ret.fine_ids[h]]          # (kc, CC)
-        cmask = (chunks >= 0) & ret.fine_mask[h][:, None]
+        fine_ids, fine_mask, top_g = _select_fine(index, h, probe[h], cfg,
+                                                  budget)
+        chunks = index.fine_chunks[h][fine_ids]                 # (kc, CC)
+        cmask = (chunks >= 0) & fine_mask[:, None]
         cs = jnp.maximum(chunks, 0)
         starts = jnp.where(cmask, index.chunk_start[cs], 0)
         lens = jnp.where(cmask, index.chunk_len[cs], 0)
-        return starts.reshape(-1), lens.reshape(-1)
+        return (starts.reshape(-1), lens.reshape(-1), fine_ids, fine_mask,
+                top_g)
 
-    starts, lens = jax.vmap(per_head)(jnp.arange(H))
-    return starts, lens, ret
+    starts, lens, fids, fmask, gids = jax.vmap(per_head)(jnp.arange(H))
+    return starts, lens, SpanRetrieval(fine_ids=fids, fine_mask=fmask,
+                                       coarse_ids=gids)
 
 
 def retrieve_dense(index: LycheeIndex, probe: jax.Array, cfg: LycheeConfig,

@@ -62,6 +62,38 @@ class LycheeIndex(NamedTuple):
     fine2coarse: jax.Array      # (H, L) int32
 
 
+def cache_slack(cfg: LycheeConfig) -> int:
+    """Tail-slack rows RESERVED at the end of every policy-capable KV cache.
+
+    The Pallas sparse-attention kernel fetches each retrieved span with ONE
+    contiguous DMA of ``span_len`` rows (``span_len`` = ``max_chunk`` for
+    lychee/streaming, ``quest_page`` for quest, 1 for clusterkv). A span may
+    start at any written position ``<= t - 1``, so the last ``max(max_chunk,
+    quest_page)`` rows of the allocation are kept write-free (the serving
+    engine admits requests only up to :func:`usable_rows`) and the DMA past
+    ``t`` lands on allocated, zero rows *by construction* — the alternative
+    (the pre-slack design) was an O(N) ``jnp.pad`` copy of the whole cache
+    on every decode step. Rounded up to a multiple of 8 to keep the
+    boundary sublane-aligned.
+
+    The slack lives INSIDE the ``n_cache`` allocation rather than extending
+    it: cache row counts — and everything derived from them (index/page/
+    cluster capacities, context-dim shard splits) — stay exactly as they
+    were, so the 512-way mesh divisibility of the decode dry-runs is
+    untouched. Slack rows are zero, never written, never selected, and
+    masked by every executor, so numerics are unchanged everywhere.
+    """
+    return -(-max(cfg.max_chunk, cfg.quest_page, 1) // 8) * 8
+
+
+def usable_rows(n_cache: int, cfg: LycheeConfig) -> int:
+    """Serveable positions of an ``n_cache``-row cache: the tail
+    ``cache_slack`` rows are the kernel's DMA-overrun region and must never
+    be written (``prompt_len + max_new <= usable_rows`` — enforced by the
+    engine)."""
+    return n_cache - cache_slack(cfg)
+
+
 def index_dims(N: int, cfg: LycheeConfig):
     """Static capacities for a context of N tokens. The chunk capacity per
     fine cluster (CC) comes from ``cfg.chunk_cap`` — capacity planning has

@@ -54,9 +54,20 @@ def lazy_update(index: LycheeIndex, new_key: jax.Array, start,
     """Graft one dynamic chunk into the index (all kv heads at once).
 
     new_key: (H, d); start/length: scalars for the chunk's token span.
+
+    Drop-new at capacity: once ``chunk_count == M`` the graft is a no-op.
+    The previous behaviour kept overwriting slot ``M - 1``'s
+    ``chunk_start``/``chunk_len`` while older fine-cluster member lists
+    still pointed at that slot, so retrieval silently returned spans from
+    the *latest* dynamic chunk's positions wherever any stale member
+    referenced it — wrong tokens in the active set, softmax over the wrong
+    rows. Dropping the newest chunk loses a little recall at the capacity
+    edge (the recent buffer still covers those tokens exactly) but never
+    corrupts existing retrieval.
     """
     H, M, d = index.chunk_key.shape
     CC = index.fine_chunks.shape[-1]
+    can = index.chunk_count < M
     slot = jnp.minimum(index.chunk_count, M - 1)
     start = jnp.asarray(start, jnp.int32)
     length = jnp.asarray(length, jnp.int32)
@@ -113,7 +124,7 @@ def lazy_update(index: LycheeIndex, new_key: jax.Array, start,
         rg_new.astype(index.coarse_radius.dtype))
     coarse_size = index.coarse_size.at[heads, gid].add(1)
 
-    return index._replace(
+    grafted = index._replace(
         chunk_key=chunk_key, chunk_start=chunk_start, chunk_len=chunk_len,
         chunk_valid=chunk_valid,
         chunk_count=jnp.minimum(index.chunk_count + 1, M),
@@ -122,6 +133,9 @@ def lazy_update(index: LycheeIndex, new_key: jax.Array, start,
         fine_nchunks=fine_nchunks,
         coarse_centroid=coarse_centroid, coarse_radius=coarse_radius,
         coarse_size=coarse_size)
+    # drop-new at capacity: keep every leaf of the old index when full
+    return jax.tree.map(lambda new, old: jnp.where(can, new, old),
+                        grafted, index)
 
 
 def maybe_lazy_update(index: LycheeIndex, keys: jax.Array, t,
@@ -131,10 +145,13 @@ def maybe_lazy_update(index: LycheeIndex, keys: jax.Array, t,
     current token was appended. Jit-safe (lax.cond). Under the continuous-
     batching engine ``t`` is per-slot and this runs vmapped over the batch,
     where the cond lowers to a select — every slot computes the graft and
-    keeps it only when its own cadence hits."""
+    keeps it only when its own cadence hits. A full index
+    (``chunk_count == M``) is never due: the graft would be dropped anyway
+    (see :func:`lazy_update`), so the cond skips its compute entirely."""
     t = jnp.asarray(t, jnp.int32)
     size = jnp.int32(cfg.max_chunk)
-    due = (t % size) == 0
+    M = index.chunk_start.shape[0]
+    due = ((t % size) == 0) & (index.chunk_count < M)
 
     def do(idx):
         start = t - size

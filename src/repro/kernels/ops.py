@@ -1,41 +1,51 @@
 """Jit'd public wrappers over the Pallas kernels.
 
-``interpret`` defaults to True so the kernels execute (and are tested) on
-CPU; on a real TPU runtime set ``repro.kernels.ops.INTERPRET = False`` (or
-pass explicitly) and the same code paths compile to Mosaic.
+``interpret`` resolution, in precedence order:
+
+1. an explicit ``interpret=`` argument at the call site;
+2. the module override ``repro.kernels.ops.INTERPRET`` (a bool forces every
+   kernel one way — tests pin True, a TPU pod launcher may pin False);
+3. the backend default (``INTERPRET = None``, the shipped setting): compiled
+   Mosaic on TPU, the interpreter oracle on CPU/GPU — so the same decode
+   code path is fast where it can be and correct everywhere.
 """
 from __future__ import annotations
-
-import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.chunk_pool import chunk_pool
 from repro.kernels.hier_score import hier_score
+from repro.kernels.pallas_compat import backend_interpret
 from repro.kernels.sparse_attention import sparse_chunk_attention
 
-INTERPRET = True
+INTERPRET: bool | None = None    # None -> backend-aware (see module doc)
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Apply the three-level precedence documented in the module docstring."""
+    if interpret is not None:
+        return interpret
+    if INTERPRET is not None:
+        return INTERPRET
+    return backend_interpret()
 
 
 def pool_chunk_keys(keys, starts, lens, *, max_chunk=16, pooling="mean",
                     interpret=None):
     return chunk_pool(keys, starts, lens, max_chunk=max_chunk,
-                      pooling=pooling,
-                      interpret=INTERPRET if interpret is None else interpret)
+                      pooling=pooling, interpret=resolve_interpret(interpret))
 
 
 def score_upper_bound(probe, centroid, radius, valid, *, interpret=None):
     return hier_score(probe, centroid, radius, valid,
-                      interpret=INTERPRET if interpret is None else interpret)
+                      interpret=resolve_interpret(interpret))
 
 
 def chunk_attention(q, k_cache, v_cache, starts, lens, *, max_chunk=16,
                     scale=1.0, softcap=0.0, interpret=None):
     return sparse_chunk_attention(
         q, k_cache, v_cache, starts, lens, max_chunk=max_chunk, scale=scale,
-        softcap=softcap,
-        interpret=INTERPRET if interpret is None else interpret)
+        softcap=softcap, interpret=resolve_interpret(interpret))
 
 
 __all__ = ["INTERPRET", "chunk_attention", "pool_chunk_keys", "ref",
-           "score_upper_bound"]
+           "resolve_interpret", "score_upper_bound"]

@@ -3,10 +3,20 @@
 jax renamed ``TPUMemorySpace`` -> ``MemorySpace`` (and grew an ``HBM``
 member; older versions spell it ``ANY``). The kernels import the resolved
 ``HBM`` token from here so the rename is absorbed in exactly one place.
+Also hosts the backend-aware ``interpret`` default shared by every kernel
+wrapper: compiled Mosaic on a real TPU, the interpreter oracle elsewhere.
 """
 from __future__ import annotations
 
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 MEM = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
 HBM = getattr(MEM, "HBM", MEM.ANY)
+
+
+def backend_interpret() -> bool:
+    """Resolved default for ``interpret=None``: False (compile to Mosaic)
+    iff the default jax backend is a TPU; True (interpreter oracle) on
+    CPU/GPU hosts, where Mosaic cannot lower."""
+    return jax.default_backend() != "tpu"

@@ -9,7 +9,20 @@ copy per span — this is why chunk-granular retrieval maps so well to TPU:
 gathers become span DMAs, unlike token-scatter designs such as ClusterKV),
 then runs one flash-attention update (online softmax, f32 accumulators).
 
-Grid: (C // TC,) per (batch, kv-head); callers vmap the leading dims.
+Single compiled dispatch: the grid is ``(B, Hkv, C // TC)`` with the span
+tables scalar-prefetched (SMEM-resident before the body runs, the paged-
+attention pattern), so one ``pallas_call`` covers the whole batch — no outer
+vmap, no per-(batch, head) relaunch.
+
+Cache layout contract (tail slack): the caller allocates the KV cache with
+at least ``max_chunk`` rows of slack past the last writable position (see
+``core.types.cache_slack``), so a span DMA starting at any valid position
+``start <= t - 1`` stays in bounds *by construction*. The wrapper therefore
+never copies or pads the cache — the O(N)-per-token ``jnp.pad`` of the
+pre-slack design is gone (``tests/test_decode_fused.py`` asserts no
+cache-shaped copy survives in the jaxpr). Zero-length spans skip their DMAs
+entirely (``pl.when`` guard), so padding slots in the span table cost
+nothing.
 """
 from __future__ import annotations
 
@@ -28,9 +41,18 @@ _NEG = -1e30
 def _kernel(starts_ref, lens_ref, q_ref, k_hbm, v_hbm, out_ref,
             k_scr, v_scr, len_scr, m_scr, l_scr, acc_scr, ksem, vsem, *,
             max_chunk: int, tile_c: int, scale: float, softcap: float):
-    i = pl.program_id(0)
-    n_tiles = pl.num_programs(0)
-    G = q_ref.shape[0]
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    i = pl.program_id(2)
+    n_tiles = pl.num_programs(2)
+
+    @pl.when((b == 0) & (h == 0) & (i == 0))
+    def _zero_scratch():
+        # skipped spans leave their scratch rows untouched; rows never
+        # DMA'd in this invocation must still be *finite* so the masked
+        # p @ v contraction contributes exact zeros (0 * NaN would not)
+        k_scr[...] = jnp.zeros_like(k_scr)
+        v_scr[...] = jnp.zeros_like(v_scr)
 
     @pl.when(i == 0)
     def _init():
@@ -39,27 +61,46 @@ def _kernel(starts_ref, lens_ref, q_ref, k_hbm, v_hbm, out_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     # ---- DMA the tile's spans into VMEM ---------------------------------
-    def fetch(j, carry):
+    # Issue every guarded copy first (per-span semaphores), then wait:
+    # the TC span fetches of a tile are in flight concurrently.
+    def _copies(j):
         c = i * tile_c + j
-        start = starts_ref[c]
+        start = starts_ref[b, h, c]
         kcp = pltpu.make_async_copy(
-            k_hbm.at[pl.ds(start, max_chunk), :],
-            k_scr.at[pl.ds(j * max_chunk, max_chunk), :], ksem)
+            k_hbm.at[b, h, pl.ds(start, max_chunk), :],
+            k_scr.at[pl.ds(j * max_chunk, max_chunk), :], ksem.at[j])
         vcp = pltpu.make_async_copy(
-            v_hbm.at[pl.ds(start, max_chunk), :],
-            v_scr.at[pl.ds(j * max_chunk, max_chunk), :], vsem)
-        kcp.start()
-        vcp.start()
-        len_scr[pl.ds(j, 1)] = lens_ref[c][None].astype(jnp.int32)
-        kcp.wait()
-        vcp.wait()
+            v_hbm.at[b, h, pl.ds(start, max_chunk), :],
+            v_scr.at[pl.ds(j * max_chunk, max_chunk), :], vsem.at[j])
+        return kcp, vcp
+
+    def fetch(j, carry):
+        ln = lens_ref[b, h, i * tile_c + j]
+        len_scr[pl.ds(j, 1)] = ln[None].astype(jnp.int32)
+
+        @pl.when(ln > 0)          # len == 0 padding spans cost nothing
+        def _start():
+            kcp, vcp = _copies(j)
+            kcp.start()
+            vcp.start()
+        return carry
+
+    def drain(j, carry):
+        ln = lens_ref[b, h, i * tile_c + j]
+
+        @pl.when(ln > 0)
+        def _wait():
+            kcp, vcp = _copies(j)
+            kcp.wait()
+            vcp.wait()
         return carry
 
     jax.lax.fori_loop(0, tile_c, fetch, 0)
+    jax.lax.fori_loop(0, tile_c, drain, 0)
 
     # ---- flash update ----------------------------------------------------
     S = tile_c * max_chunk
-    q = q_ref[...].astype(jnp.float32)                       # (G, dk)
+    q = q_ref[0, 0].astype(jnp.float32)                      # (G, dk)
     k = k_scr[...].astype(jnp.float32)                       # (S, dk)
     v = v_scr[...].astype(jnp.float32)                       # (S, dv)
     logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
@@ -81,8 +122,8 @@ def _kernel(starts_ref, lens_ref, q_ref, k_hbm, v_hbm, out_ref,
 
     @pl.when(i == n_tiles - 1)
     def _finish():
-        out_ref[...] = (acc_scr[...] /
-                        jnp.maximum(l_scr[...], 1e-30)).astype(out_ref.dtype)
+        out_ref[0, 0] = (acc_scr[...] /
+                         jnp.maximum(l_scr[...], 1e-30)).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("max_chunk", "tile_c", "scale",
@@ -92,35 +133,49 @@ def sparse_chunk_attention(q: jax.Array, k_cache: jax.Array,
                            lens: jax.Array, *, max_chunk: int = 16,
                            tile_c: int = 8, scale: float = 1.0,
                            softcap: float = 0.0,
-                           interpret: bool = True) -> jax.Array:
-    """Single-position decode attention over chunk spans.
+                           interpret: bool | None = None) -> jax.Array:
+    """Single-position decode attention over chunk spans — ONE compiled
+    ``pallas_call`` whose grid covers ``(B, Hkv, C // TC)``.
 
     q: (B, Hkv, G, dk); k_cache: (B, Hkv, N, dk); v_cache: (B, Hkv, N, dv);
-    starts/lens: (B, Hkv, C) int32 (len == 0 -> span skipped).
+    starts/lens: (B, Hkv, C) int32 (len == 0 -> span skipped, no DMA).
     Returns (B, Hkv, G, dv) in q.dtype.
+
+    Contract: every span with len > 0 must satisfy ``start + max_chunk <=
+    N`` — callers allocate ``core.types.cache_slack`` tail rows so this
+    holds for any span starting below the logical capacity. The wrapper
+    clips ``starts`` to that bound as a hard safety net but never copies
+    the cache. ``interpret=None`` follows ``kernels.ops`` precedence:
+    explicit arg > ``ops.INTERPRET`` override > backend default (compiled
+    Mosaic on TPU, the interpreter oracle elsewhere).
     """
+    if interpret is None:
+        from repro.kernels import ops  # deferred: ops imports this module
+        interpret = ops.resolve_interpret(None)
     B, Hkv, G, dk = q.shape
     N = k_cache.shape[2]
+    assert N >= max_chunk, (
+        f"cache has {N} rows < max_chunk={max_chunk}: reserve tail slack "
+        "(core.types.cache_slack / usable_rows) so span DMAs stay in bounds")
     dv = v_cache.shape[3]
     C = starts.shape[-1]
     TC = min(tile_c, C)
     Cp = ((C + TC - 1) // TC) * TC
 
-    starts_p = jnp.clip(jnp.pad(starts, ((0, 0), (0, 0), (0, Cp - C))), 0, N)
+    starts_p = jnp.clip(jnp.pad(starts, ((0, 0), (0, 0), (0, Cp - C))),
+                        0, N - max_chunk)
     lens_p = jnp.clip(jnp.pad(lens, ((0, 0), (0, 0), (0, Cp - C))),
                       0, max_chunk)
-    k_p = jnp.pad(k_cache, ((0, 0), (0, 0), (0, max_chunk), (0, 0)))
-    v_p = jnp.pad(v_cache, ((0, 0), (0, 0), (0, max_chunk), (0, 0)))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(Cp // TC,),
+        grid=(B, Hkv, Cp // TC),
         in_specs=[
-            pl.BlockSpec((G, dk), lambda i, *_: (0, 0)),
+            pl.BlockSpec((1, 1, G, dk), lambda b, h, i, *_: (b, h, 0, 0)),
             pl.BlockSpec(memory_space=_HBM),
             pl.BlockSpec(memory_space=_HBM),
         ],
-        out_specs=pl.BlockSpec((G, dv), lambda i, *_: (0, 0)),
+        out_specs=pl.BlockSpec((1, 1, G, dv), lambda b, h, i, *_: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((TC * max_chunk, dk), k_cache.dtype),
             pltpu.VMEM((TC * max_chunk, dv), v_cache.dtype),
@@ -128,17 +183,16 @@ def sparse_chunk_attention(q: jax.Array, k_cache: jax.Array,
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, dv), jnp.float32),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((TC,)),
+            pltpu.SemaphoreType.DMA((TC,)),
         ],
     )
     call = pl.pallas_call(
         functools.partial(_kernel, max_chunk=max_chunk, tile_c=TC,
                           scale=scale, softcap=softcap),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((G, dv), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, dv), q.dtype),
         interpret=interpret,
         name="lychee_sparse_attention",
     )
-    inner = jax.vmap(jax.vmap(lambda s, ln, qq, kk, vv: call(s, ln, qq, kk, vv)))
-    return inner(starts_p, lens_p, q, k_p, v_p)
+    return call(starts_p, lens_p, q, k_cache, v_cache)

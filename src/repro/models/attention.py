@@ -27,13 +27,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import full_decode_attention
-from repro.core.attention import (assemble_spans,
-                                  full_decode_attention_ctxsharded,
-                                  sparse_span_attention,
-                                  sparse_span_attention_ctxsharded)
+from repro.core.attention import (full_decode_attention_ctxsharded,
+                                  fused_policy_decode)
 from repro.core.policy import CachePolicy, policy_for
 from repro.core.types import ChunkLayout
-from repro.kernels import ops as kops
 from repro.models.layers import apply_rope, init_rmsnorm, rmsnorm, trunc_normal
 from repro.sharding.ctx import kv_axes, shard
 
@@ -167,48 +164,19 @@ def _slot_t(t, B: int) -> jax.Array:
 
 def _policy_attend(q, k_cache, v_cache, pstate, t, cfg: ModelConfig,
                    pol: CachePolicy):
-    """Policy-managed decode attention: select spans -> sink/recent span
-    assembly -> budgeted sparse span attention -> streaming state update.
+    """Policy-managed decode attention — a thin config adapter over
+    :func:`repro.core.attention.fused_policy_decode`, the fused
+    select -> assemble_spans -> span executor -> update_batched hot path
+    every registered policy shares (GQA and MLA both land here).
 
     q: (B, Hq, dk); t: (B,). Returns (out (B, Hq, dv), updated policy state
     — ``None`` for stateless policies)."""
-    B, Hq, dk = q.shape
-    Hkv = k_cache.shape[1]
-    G = Hq // Hkv
-    ly = cfg.lychee
-    probe = q.reshape(B, Hkv, G, dk).mean(axis=2)           # (B, Hkv, dk)
-
-    def per_b(st_b, probe_b, t_b):
-        s, ln = pol.select(st_b, probe_b, t_b)
-        return assemble_spans(s, ln, t_b, ly, max_chunk=pol.span_len)
-
-    starts, lens = jax.vmap(per_b)(pstate, probe, t)        # (B, Hkv, C)
-    qg = q.reshape(B, Hkv, G, dk)
+    dk = q.shape[-1]
     scale = 1.0 / dk ** 0.5 if cfg.qk_nope_dim == 0 else \
         1.0 / (cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5
-    ctx_ax = kv_axes()[2]
-    if ly.use_kernel:
-        out = kops.chunk_attention(qg, k_cache, v_cache, starts, lens,
-                                   max_chunk=pol.span_len, scale=scale,
-                                   softcap=cfg.attn_softcap)
-    elif ctx_ax is not None:
-        # §Perf iteration 1d: shard_map flash-combine over the context
-        # shards — collective is O(B·H·G·dv), not O(gathered block)
-        out = sparse_span_attention_ctxsharded(
-            qg, k_cache, v_cache, starts, lens, ctx_ax,
-            max_chunk=pol.span_len, scale=scale, softcap=cfg.attn_softcap)
-    else:
-        out = sparse_span_attention(qg, k_cache, v_cache, starts, lens,
-                                    max_chunk=pol.span_len, scale=scale,
-                                    softcap=cfg.attn_softcap)
-    # streaming update (lychee: Algorithm 1 step 4 lazy graft; quest: tail-
-    # page min/max extension; clusterkv: nearest-centroid assignment).
-    # t is per-slot, so any lax.cond inside becomes a select under vmap —
-    # every slot computes the update and keeps it only when its cadence hits.
-    if pol.has_update and pstate is not None:
-        pstate = jax.vmap(lambda s, kc, tb: pol.update(s, kc, tb + 1))(
-            pstate, k_cache, t)
-    return out.reshape(B, Hq, -1), pstate
+    return fused_policy_decode(q, k_cache, v_cache, pstate, t, pol,
+                               cfg.lychee, scale=scale,
+                               softcap=cfg.attn_softcap)
 
 
 def _append_kv(cache_kv: jax.Array, row: jax.Array, at: jax.Array
@@ -221,10 +189,13 @@ def _append_kv(cache_kv: jax.Array, row: jax.Array, at: jax.Array
 
 
 def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
-               kind: str, managed: bool, rope: bool = True) -> Tuple:
+               kind: str, managed: bool, rope: bool = True,
+               pol: Optional[CachePolicy] = None) -> Tuple:
     """x: (B, 1, d); t: scalar or (B,) per-slot positions;
     cache: {"k","v"[, "policy_state"]}. ``managed`` marks layers whose cache
-    is run through the configured CachePolicy. Returns (out, cache)."""
+    is run through the configured CachePolicy (``pol`` may be passed by the
+    caller — ``model.decode_step`` resolves it once per step — or is
+    resolved here). Returns (out, cache)."""
     B = x.shape[0]
     dh = cfg.resolved_head_dim
     tt = _slot_t(t, B)
@@ -249,8 +220,9 @@ def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
         k_c = shard(k_c, *kv_axes())
         v_c = shard(v_c, *kv_axes())
         cache = dict(cache, k=k_c, v=v_c)
-        pol = policy_for(cfg.lychee) if managed else None
-        if pol is not None and not pol.is_dense and \
+        if managed and pol is None:
+            pol = policy_for(cfg.lychee)
+        if managed and pol is not None and not pol.is_dense and \
                 (not pol.stateful or "policy_state" in cache):
             out, pstate = _policy_attend(q, k_c, v_c,
                                          cache.get("policy_state"), tt,
@@ -273,11 +245,16 @@ def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
 
 def gqa_prefill_cache(k: jax.Array, v: jax.Array, cfg: ModelConfig,
                       kind: str, layout: Optional[ChunkLayout],
-                      n_cache: int, managed: bool) -> dict:
+                      n_cache: int, managed: bool,
+                      pol: Optional[CachePolicy] = None) -> dict:
     """Build the decode cache (and the policy's selection state) after a
     prefill forward.
 
-    k/v: (B, Hkv, S, dh) post-RoPE."""
+    k/v: (B, Hkv, S, dh) post-RoPE. The cache's last ``core.types.
+    cache_slack`` rows are the Pallas kernel's reserved DMA-overrun region:
+    the engine never writes them (``usable_rows``), so any span DMA of up
+    to ``span_len`` rows starting below ``t`` stays in bounds with no
+    per-step cache copy."""
     B, Hkv, S, dh = k.shape
     local = kind in ("attn_local", "swa_moe") and cfg.window
     if local:
@@ -295,8 +272,9 @@ def gqa_prefill_cache(k: jax.Array, v: jax.Array, cfg: ModelConfig,
     k_c = shard(k_c, *kv_axes())
     v_c = shard(v_c, *kv_axes())
     cache = {"k": k_c, "v": v_c}
-    pol = policy_for(cfg.lychee) if managed else None
-    if pol is not None and pol.stateful and \
+    if managed and pol is None:
+        pol = policy_for(cfg.lychee)
+    if managed and pol is not None and pol.stateful and \
             not (pol.needs_layout and layout is None):
         # layout is batched (leading B dim) — vmap over (keys, layout) pairs.
         # The state is padded to the CACHE capacity (not the prompt length)

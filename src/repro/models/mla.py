@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import full_decode_attention
 from repro.core.attention import full_decode_attention_ctxsharded
-from repro.core.policy import policy_for
+from repro.core.policy import CachePolicy, policy_for
 from repro.core.types import ChunkLayout
 from repro.models.attention import _policy_attend, flash_attention
 from repro.models.layers import (apply_rope, init_rmsnorm, rmsnorm,
@@ -105,7 +105,8 @@ def _absorbed_queries(p, x, pos, cfg):
 
 
 def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
-               managed: bool) -> Tuple[jax.Array, dict]:
+               managed: bool, pol: Optional[CachePolicy] = None
+               ) -> Tuple[jax.Array, dict]:
     """x: (B,1,d); t: scalar or (B,) per-slot positions;
     cache: {"latent": (B, N, kvl+rd)[, "policy_state"]}."""
     B = x.shape[0]
@@ -130,8 +131,9 @@ def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
     v_c = latent[:, None, :, :kvl]                          # values = c_kv
 
     ly = cfg.lychee
-    pol = policy_for(ly) if managed else None
-    if pol is not None and not pol.is_dense and \
+    if managed and pol is None:
+        pol = policy_for(ly)
+    if managed and pol is not None and not pol.is_dense and \
             (not pol.stateful or "policy_state" in cache):
         # the latent cache is one logical kv head, so the shared policy
         # dispatch applies directly: its GQA-group-mean probe degenerates
@@ -158,16 +160,20 @@ def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
 
 def mla_prefill_cache(latent: jax.Array, cfg: ModelConfig,
                       layout: Optional[ChunkLayout], n_cache: int,
-                      managed: bool) -> dict:
+                      managed: bool, pol: Optional[CachePolicy] = None
+                      ) -> dict:
     """latent: (B, S, kvl+rd). The cache policy treats the latent cache as a
-    single logical kv head of width 576."""
+    single logical kv head of width 576. The tail ``core.types.cache_slack``
+    rows are the kernel's reserved DMA-overrun region (never written —
+    ``usable_rows``)."""
     B, S, D = latent.shape
     pad = n_cache - S
     lat = jnp.pad(latent, ((0, 0), (0, pad), (0, 0)))
     lat = shard(lat, kv_axes()[0], kv_axes()[2], None)
     cache = {"latent": lat}
-    pol = policy_for(cfg.lychee) if managed else None
-    if pol is not None and pol.stateful and \
+    if managed and pol is None:
+        pol = policy_for(cfg.lychee)
+    if managed and pol is not None and pol.stateful and \
             not (pol.needs_layout and layout is None):
         # layout is batched (leading B dim); latent cache = 1 logical kv
         # head. Padded to cache capacity for uniform serving-slot shapes.

@@ -162,15 +162,20 @@ def block_forward(bp: dict, kind: str, x: jax.Array, positions: jax.Array,
 def block_make_cache(bp: dict, kind: str, material, x: jax.Array,
                      cfg: ModelConfig, layout: Optional[ChunkLayout],
                      n_cache: int, managed: bool,
-                     enc_out: Optional[jax.Array] = None) -> Any:
+                     enc_out: Optional[jax.Array] = None,
+                     pol=None) -> Any:
     """Turn forward material into the decode cache for this block.
     ``managed`` marks layers whose cache is run through the configured
-    :class:`~repro.core.policy.CachePolicy`."""
+    :class:`~repro.core.policy.CachePolicy` (``pol``, resolved once by the
+    caller). KV/latent caches keep exactly ``n_cache`` rows; the LAST
+    ``core.types.cache_slack`` of them are the Pallas kernel's reserved
+    DMA-overrun region and must never be written (``usable_rows`` — the
+    engine enforces this at admission)."""
     if kind in ("attn", "attn_local", "enc_attn", "shared_attn", "swa_moe",
                 "dec_cross"):
         akind = "attn" if kind in ("shared_attn", "dec_cross") else kind
         cache = A.gqa_prefill_cache(material["k"], material["v"], cfg, akind,
-                                    layout, n_cache, managed)
+                                    layout, n_cache, managed, pol=pol)
         if kind == "dec_cross":
             ek, ev = A.cross_kv(bp["cross"], enc_out, cfg)
             cache["enc_k"], cache["enc_v"] = ek, ev
@@ -178,7 +183,7 @@ def block_make_cache(bp: dict, kind: str, material, x: jax.Array,
     if kind in MLA_KINDS:
         from repro.models.mla import mla_prefill_cache
         return mla_prefill_cache(material["latent"], cfg, layout, n_cache,
-                                 managed)
+                                 managed, pol=pol)
     if kind == "mamba":
         return M2.mamba2_prefill_state(bp["mixer"], rmsnorm(bp["norm1"], x),
                                        cfg)
@@ -194,11 +199,12 @@ def block_make_cache(bp: dict, kind: str, material, x: jax.Array,
 
 # --- single-token decode ------------------------------------------------------
 def block_decode(bp: dict, kind: str, x: jax.Array, t, cache: Any,
-                 cfg: ModelConfig, managed: bool) -> Tuple[jax.Array, Any]:
+                 cfg: ModelConfig, managed: bool,
+                 pol=None) -> Tuple[jax.Array, Any]:
     if kind in ("attn", "attn_local", "swa_moe", "shared_attn"):
         akind = "attn" if kind == "shared_attn" else kind
         h, cache = A.gqa_decode(bp["attn"], rmsnorm(bp["norm1"], x), t,
-                                cache, cfg, akind, managed)
+                                cache, cfg, akind, managed, pol=pol)
         x = x + h
         if kind == "swa_moe":
             h, _ = MOE.moe_apply(bp["moe"], rmsnorm(bp["norm2"], x), cfg)
@@ -209,7 +215,7 @@ def block_decode(bp: dict, kind: str, x: jax.Array, t, cache: Any,
     if kind in MLA_KINDS:
         from repro.models.mla import mla_decode
         h, cache = mla_decode(bp["attn"], rmsnorm(bp["norm1"], x), t, cache,
-                              cfg, managed)
+                              cfg, managed, pol=pol)
         x = x + h
         if kind == "mla":
             x = x + mlp_apply(bp["mlp"], rmsnorm(bp["norm2"], x))
@@ -231,7 +237,7 @@ def block_decode(bp: dict, kind: str, x: jax.Array, t, cache: Any,
         return x + h, st
     if kind == "dec_cross":
         h, cache = A.gqa_decode(bp["attn"], rmsnorm(bp["norm1"], x), t,
-                                cache, cfg, "attn", managed)
+                                cache, cfg, "attn", managed, pol=pol)
         x = x + h
         x = x + A.cross_decode(bp["cross"], rmsnorm(bp["norm_x"], x),
                                cache["enc_k"], cache["enc_v"], cfg)
@@ -473,13 +479,22 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
     states from prefills of DIFFERENT prompt lengths are pytree-compatible:
     the per-slot surgery below (``prefill_into_slot`` / ``write_slot``)
     splices one request's state into any slot of a live batched state.
+
+    Tail-slack contract: the LAST ``core.types.cache_slack`` rows of every
+    KV/latent cache are the Pallas sparse-attention kernel's DMA-overrun
+    region. Callers must stop decoding at ``core.types.usable_rows`` (the
+    serving engine enforces this at admission) so those rows stay zero and
+    any ``span_len``-row span DMA starting below ``t`` is in bounds by
+    construction — no per-step cache copy, and row counts (hence context-
+    dim shard splits and index capacities) unchanged.
     """
     x = embed_inputs(params, tokens, cfg, extras)
     B, S, _ = x.shape
     positions = jnp.arange(S, dtype=jnp.int32)
     enc_out = run_encoder(params, extras["frames"], cfg) if cfg.is_encdec \
         else None
-    needs_layout = policy_for(cfg.lychee).needs_layout
+    pol = policy_for(cfg.lychee)          # resolved once, threaded down
+    needs_layout = pol.needs_layout
     if layout is None and needs_layout and cfg.uses_attention:
         layout = make_layout(tokens, cfg, extras=extras)
 
@@ -501,7 +516,7 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
             caches.append(block_make_cache(
                 bp, kind, mat, x_in, cfg,
                 layout if managed and needs_layout else None,
-                n_cache, managed, enc_out))
+                n_cache, managed, enc_out, pol=pol if managed else None))
         return x, tuple(caches)
 
     x, group_caches = jax.lax.scan(group_step, x, params["pattern"])
@@ -527,6 +542,7 @@ def decode_step(params: dict, token: jax.Array, state: dict,
                          (token.shape[0],))
     x = embed(params["embed"], token[:, None]).astype(jnp.dtype(cfg.dtype))
     x = shard(x, "batch", None, None)
+    pol = policy_for(cfg.lychee)          # resolved once, threaded down
 
     new_prelude = []
     for bp, kind, cache in zip(params["prelude"], cfg.prelude,
@@ -541,7 +557,8 @@ def decode_step(params: dict, token: jax.Array, state: dict,
         for pos_i, kind in enumerate(cfg.pattern):
             bp = _shared_params(params, kind, gp[pos_i])
             managed = _policy_managed(cfg, kind, scanned=True)
-            x, c = block_decode(bp, kind, x, t, caches[pos_i], cfg, managed)
+            x, c = block_decode(bp, kind, x, t, caches[pos_i], cfg, managed,
+                                pol=pol if managed else None)
             new.append(c)
         return x, tuple(new)
 

@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.policy import policy_for
+from repro.core.types import usable_rows
 from repro.models import model as MD
 from repro.serving.sampler import SamplerConfig, sample
 from repro.serving.scheduler import Request, Scheduler
@@ -106,6 +107,9 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.n_cache = n_cache
+        # the tail cache_slack rows are the Pallas kernel's DMA-overrun
+        # region (core.types): requests may only fill the usable prefix
+        self.usable = usable_rows(n_cache, cfg.lychee)
         self.eos_id = eos_id
         self.policy = policy_for(cfg.lychee).name
 
@@ -116,6 +120,15 @@ class Engine:
         self._step = jax.jit(
             lambda p, tok, st: serve_step(p, tok, st, cfg),
             donate_argnums=donate)
+
+        def _greedy_step(p, tok, st):
+            # greedy decode fuses the argmax into the jitted step: one
+            # dispatch and one (B,)-int host transfer per token instead of
+            # step + eager argmax over the (B, V) logits
+            logits, ns = serve_step(p, tok, st, cfg)
+            return jnp.argmax(logits, -1).astype(jnp.int32), ns
+
+        self._step_greedy = jax.jit(_greedy_step, donate_argnums=donate)
         self._prefill_slot = jax.jit(
             lambda p, tk, st, slot: MD.prefill_into_slot(
                 p, tk, cfg, n_cache, st, slot),
@@ -128,7 +141,8 @@ class Engine:
                  ) -> GenerateResult:
         """prompts: (B, S) int32 (right-padded prompts share one layout)."""
         B, S = prompts.shape
-        assert S + max_new <= self.n_cache, "cache too small"
+        assert S + max_new <= self.usable, \
+            "cache too small (tail cache_slack rows are reserved)"
         extras = extras or {}
         key = jax.random.key(seed)
 
@@ -139,6 +153,7 @@ class Engine:
         t1 = time.perf_counter()
 
         pad = self.eos_id if self.eos_id is not None else 0
+        greedy = sampler.temperature <= 0.0
         # pre-fill with the pad token: an early break (every row done) must
         # leave the unreached columns padded, not zero
         out = np.full((B, max_new), pad, np.int32)
@@ -156,9 +171,12 @@ class Engine:
                 if done.all():
                     break
             key, sub = jax.random.split(key)
-            logits, state = self._step(self.params, tok, state)
-            tok = sample(sub, logits, sampler)
-        jax.block_until_ready(logits)
+            if greedy:
+                tok, state = self._step_greedy(self.params, tok, state)
+            else:
+                logits, state = self._step(self.params, tok, state)
+                tok = sample(sub, logits, sampler)
+        jax.block_until_ready(tok)
         t2 = time.perf_counter()
         n_steps = int(ngen.max()) or 1
         return GenerateResult(tokens=out, n_generated=ngen,
@@ -197,8 +215,8 @@ class Engine:
         assert not (self.cfg.is_encdec or self.cfg.n_patches), \
             "streaming admission serves text-only requests"
         for r in requests:
-            assert r.prompt_len + r.max_new <= self.n_cache, \
-                f"req {r.uid}: cache too small"
+            assert r.prompt_len + r.max_new <= self.usable, \
+                f"req {r.uid}: cache too small (tail cache_slack reserved)"
 
         sched = Scheduler(n_slots)
         sched.submit_all(requests)
@@ -257,10 +275,16 @@ class Engine:
 
             # ---- one lock-step decode over the live slots --------------
             t_step = time.perf_counter()
-            logits, state = self._step(self.params, jnp.asarray(cur), state)
-            n_steps += 1
             key, sub = jax.random.split(key)
-            tok = np.asarray(sample(sub, logits, sampler))
+            if sampler.temperature <= 0.0:
+                tok_d, state = self._step_greedy(self.params,
+                                                 jnp.asarray(cur), state)
+                tok = np.asarray(tok_d)
+            else:
+                logits, state = self._step(self.params, jnp.asarray(cur),
+                                           state)
+                tok = np.asarray(sample(sub, logits, sampler))
+            n_steps += 1
             decode_s += time.perf_counter() - t_step
             for slot in range(n_slots):
                 if not active[slot]:

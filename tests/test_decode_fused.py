@@ -1,0 +1,344 @@
+"""PR 3 gates: the compiled single-dispatch decode path and its contracts.
+
+* kernel-vs-oracle equivalence on REAL span tables — every span-emitting
+  policy's ``select`` + ``assemble_spans`` output (not synthetic spans),
+  over padded/partial indexes and ``t`` within one ``max_chunk`` of the
+  logical cache boundary (the tail-slack read region);
+* engine-level: ``use_kernel=True`` (interpret) greedy == pure-jnp greedy
+  for ALL five registered policies, including a run that fills the cache to
+  exactly its logical capacity;
+* the no-copy contract: the ``sparse_chunk_attention`` jaxpr contains no
+  cache-sized pad/concatenate (the pre-slack design copied the whole K/V
+  cache every decode step);
+* ``lazy_update`` capacity edge (``chunk_count == M``): drop-new semantics
+  — the regression for the slot-``M-1`` overwrite corruption;
+* ``update_batched`` cadence gate == ungated vmap, bit for bit;
+* backend-aware ``interpret`` resolution precedence.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LycheeConfig, get_config
+from repro.core import build_index, chunk_sequence, synthetic_delimiter_table
+from repro.core.attention import assemble_spans
+from repro.core.policy import make_policy
+from repro.core.types import cache_slack, usable_rows
+from repro.core.update import lazy_update, maybe_lazy_update
+from repro.kernels import ops, ref
+from repro.kernels.sparse_attention import sparse_chunk_attention
+from repro.models import model as MD
+from repro.serving import Engine
+
+jax.config.update("jax_enable_x64", False)
+
+SPAN_POLICIES = ("lychee", "quest", "clusterkv", "streaming")
+ALL_POLICIES = SPAN_POLICIES + ("dense",)
+N_CACHE = 128
+
+
+def _ly(policy="lychee", **kw):
+    base = dict(policy=policy, enabled=policy != "dense", budget=64, sink=4,
+                buffer_size=16, max_coarse=8, top_kg=4, full_attn_layers=0,
+                quest_page=8, ckv_tokens_per_cluster=8)
+    base.update(kw)
+    return LycheeConfig(**base)
+
+
+def _policy_state(pol, keys, tokens, n_cache):
+    """Build the policy's selection state the way prefill does."""
+    if not pol.stateful:
+        return None
+    if pol.needs_layout:
+        table = jnp.asarray(synthetic_delimiter_table(997))
+        layout = chunk_sequence(tokens, table, pol.cfg)
+        return pol.build(keys, layout, n_cache)
+    return pol.build(keys, None, n_cache)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle on policy-emitted span tables
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", SPAN_POLICIES)
+@pytest.mark.parametrize("t_off", [0, 1])      # boundary and boundary-1
+def test_kernel_matches_oracle_on_policy_spans(policy, t_off):
+    """select -> assemble_spans -> kernel == oracle, with ``t`` within one
+    ``max_chunk`` of the usable capacity (span reads land in the reserved
+    tail-slack rows)."""
+    ly = _ly(policy)
+    rng = np.random.default_rng(7 + t_off)
+    H, S, d = 2, 96, 32
+    keys = jnp.asarray(rng.standard_normal((H, S, d)), jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, 997, size=(S,)), jnp.int32)
+    pol = make_policy(policy, ly)
+    state = _policy_state(pol, keys, tokens, N_CACHE)
+
+    rows = N_CACHE
+    usable = usable_rows(N_CACHE, ly)
+    k = jnp.asarray(rng.standard_normal((1, H, rows, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, H, rows, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((1, H, 2, d)), jnp.float32)
+    probe = q.mean(axis=2)[0]
+
+    # t at/inside the last max_chunk before the usable boundary — the
+    # hardest case for the tail-slack contract
+    for t in (usable - t_off, usable - pol.span_len + 1, S + 3):
+        s, ln = pol.select(state, probe, jnp.int32(t))
+        starts, lens = assemble_spans(s, ln, jnp.int32(t), ly,
+                                      max_chunk=pol.span_len)
+        starts, lens = starts[None], lens[None]               # (1, H, C)
+        got = ops.chunk_attention(q, k, v, starts, lens,
+                                  max_chunk=pol.span_len, scale=0.17,
+                                  interpret=True)
+        want = ref.sparse_chunk_attention_ref(q, k, v, starts, lens,
+                                              max_chunk=pol.span_len,
+                                              scale=0.17)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+        # the slack contract: every live span's DMA stays in bounds
+        live = np.asarray(lens)[0] > 0
+        assert (np.asarray(starts)[0][live] + pol.span_len <= rows).all()
+
+
+def test_kernel_matches_oracle_on_padded_partial_index():
+    """A short-prompt lychee index padded to cache capacity (partial/invalid
+    slots everywhere) must still produce kernel == oracle."""
+    ly = _ly("lychee")
+    rng = np.random.default_rng(3)
+    H, S, d = 2, 24, 32                           # S << N_CACHE: mostly pad
+    keys = jnp.asarray(rng.standard_normal((H, S, d)), jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, 997, size=(S,)), jnp.int32)
+    pol = make_policy("lychee", ly)
+    state = _policy_state(pol, keys, tokens, N_CACHE)
+
+    k = jnp.asarray(rng.standard_normal((1, H, N_CACHE, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, H, N_CACHE, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((1, H, 4, d)), jnp.float32)
+    s, ln = pol.select(state, q.mean(axis=2)[0], jnp.int32(S))
+    starts, lens = assemble_spans(s, ln, jnp.int32(S), ly)
+    starts, lens = starts[None], lens[None]
+    got = ops.chunk_attention(q, k, v, starts, lens, scale=0.2,
+                              interpret=True)
+    want = ref.sparse_chunk_attention_ref(q, k, v, starts, lens, scale=0.2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: kernel path == jnp path for ALL five policies
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_engine_kernel_matches_ref_per_policy(policy):
+    cfg_ref = get_config("granite-3-8b", reduced=True).replace(
+        dtype="float32", lychee=_ly(policy, use_kernel=False))
+    cfg_ker = cfg_ref.replace(lychee=_ly(policy, use_kernel=True))
+    params = MD.init_model(jax.random.key(2), cfg_ref)
+    rng = np.random.default_rng(2)
+    prompts = rng.integers(0, cfg_ref.vocab, size=(1, 64)).astype(np.int32)
+    toks = {}
+    for name, cfg in [("ref", cfg_ref), ("kernel", cfg_ker)]:
+        engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+        toks[name] = engine.generate(prompts, 5).tokens
+    np.testing.assert_array_equal(toks["ref"], toks["kernel"])
+
+
+def test_engine_kernel_fills_cache_to_usable_capacity():
+    """prompt + max_new == usable_rows exactly: the last decode steps place
+    the recent-window spans flush against the usable boundary, so their
+    DMAs read into the reserved tail rows. Greedy tokens must match the
+    jnp path."""
+    n_cache = 112
+    cfg_ref = get_config("granite-3-8b", reduced=True).replace(
+        dtype="float32", lychee=_ly("lychee", use_kernel=False))
+    cfg_ker = cfg_ref.replace(lychee=_ly("lychee", use_kernel=True))
+    assert usable_rows(n_cache, cfg_ref.lychee) == 96
+    params = MD.init_model(jax.random.key(3), cfg_ref)
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, cfg_ref.vocab, size=(1, 88)).astype(np.int32)
+    toks = {}
+    for name, cfg in [("ref", cfg_ref), ("kernel", cfg_ker)]:
+        engine = Engine(cfg, params, n_cache=n_cache, donate_state=False)
+        toks[name] = engine.generate(prompts, 8).tokens     # 88 + 8 == 96
+    np.testing.assert_array_equal(toks["ref"], toks["kernel"])
+
+
+# ---------------------------------------------------------------------------
+# tail-slack layout contract
+# ---------------------------------------------------------------------------
+def test_reserved_tail_rows_stay_zero_and_capacity_is_enforced():
+    ly = _ly("lychee")
+    cfg = get_config("granite-3-8b", reduced=True).replace(
+        dtype="float32", lychee=ly)
+    assert cache_slack(ly) == 16
+    usable = usable_rows(N_CACHE, ly)
+    assert usable == N_CACHE - 16
+    params = MD.init_model(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+
+    # decode right up to the usable boundary: the reserved tail must stay
+    # zero (it is the kernel's DMA-overrun region) and row counts must be
+    # unchanged by the slack design (shard splits stay even)
+    prompts = rng.integers(0, cfg.vocab, size=(1, usable - 3)).astype(
+        np.int32)
+    logits, state = MD.prefill(params, jnp.asarray(prompts), cfg, N_CACHE)
+    for _ in range(3):
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        logits, state = MD.decode_step(params, tok, state, cfg)
+    assert int(state["t"][0]) == usable
+    k_leaf = np.asarray(state["groups"][0]["k"])
+    assert k_leaf.shape[-2] == N_CACHE
+    assert not k_leaf[..., usable:, :].any()        # reserved tail: zero
+    assert k_leaf[..., usable - 1, :].any()         # last usable row: written
+
+    # the engine enforces the usable capacity at admission
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    short = prompts[:, :32]
+    with pytest.raises(AssertionError, match="reserved"):
+        engine.generate(short, N_CACHE - 32 + 1)
+    assert engine.usable == usable
+
+
+# ---------------------------------------------------------------------------
+# no-copy contract: jaxpr of the kernel wrapper never pads the cache
+# ---------------------------------------------------------------------------
+def _all_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            for sub in _subjaxprs(val):
+                yield from _all_eqns(sub)
+
+
+def _subjaxprs(val):
+    if isinstance(val, jax.extend.core.ClosedJaxpr if
+                  hasattr(jax.extend, "core") else jax.core.ClosedJaxpr):
+        yield val.jaxpr
+    elif hasattr(val, "eqns"):                    # raw Jaxpr
+        yield val
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from _subjaxprs(v)
+
+
+def test_sparse_attention_jaxpr_has_no_cache_copy():
+    B, H, G, d, N, C = 2, 2, 4, 32, 128 + 16, 10
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, H, G, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, N, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, N, d)), jnp.float32)
+    starts = jnp.zeros((B, H, C), jnp.int32)
+    lens = jnp.zeros((B, H, C), jnp.int32)
+    fn = functools.partial(sparse_chunk_attention, max_chunk=16,
+                           interpret=True)
+    jaxpr = jax.make_jaxpr(fn)(q, k, v, starts, lens)
+    cache_elems = B * H * N * d
+    offenders = []
+    for eqn in _all_eqns(jaxpr.jaxpr):
+        if eqn.primitive.name in ("pad", "concatenate", "copy"):
+            for var in eqn.invars:
+                aval = getattr(var, "aval", None)
+                if aval is not None and aval.size >= cache_elems:
+                    offenders.append(str(eqn))
+    assert not offenders, (
+        "cache-sized copy in the decode hot path:\n" + "\n".join(offenders))
+
+
+# ---------------------------------------------------------------------------
+# lazy_update capacity edge (chunk_count == M): drop-new, never corrupt
+# ---------------------------------------------------------------------------
+def _full_index(ly, rng, H=2, S=64, d=16, n_cache=64):
+    """A real index grafted until chunk_count == M."""
+    keys = jnp.asarray(rng.standard_normal((H, S, d)), jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, 997, size=(S,)), jnp.int32)
+    table = jnp.asarray(synthetic_delimiter_table(997))
+    layout = chunk_sequence(tokens, table, ly)
+    idx = build_index(keys, layout, ly)
+    M = idx.chunk_start.shape[0]
+    step = 0
+    while int(idx.chunk_count) < M:
+        nk = jnp.asarray(rng.standard_normal((H, d)), jnp.float32)
+        idx = lazy_update(idx, nk, 40 + step, ly.max_chunk, ly)
+        step += 1
+    return idx, keys, M
+
+
+def test_lazy_update_at_capacity_drops_new_chunk():
+    ly = _ly("lychee")
+    rng = np.random.default_rng(11)
+    idx, keys, M = _full_index(ly, rng)
+    assert int(idx.chunk_count) == M
+
+    before = jax.tree.map(np.asarray, idx)
+    nk = jnp.asarray(rng.standard_normal(idx.chunk_key.shape[::2]),
+                     jnp.float32)
+    after = lazy_update(idx, nk, 999, ly.max_chunk, ly)
+    # drop-new: EVERY leaf unchanged — in particular slot M-1's
+    # chunk_start/chunk_len, which the old code kept overwriting while
+    # stale member lists still pointed at it
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # member lists -> chunk table stays consistent: every referenced slot's
+    # span is the one it was registered with
+    assert int(after.chunk_count) == M
+    assert (np.asarray(after.chunk_start)[:M] ==
+            before.chunk_start[:M]).all()
+
+
+def test_maybe_lazy_update_not_due_when_full():
+    ly = _ly("lychee")
+    rng = np.random.default_rng(12)
+    idx, keys, M = _full_index(ly, rng)
+    t = ly.max_chunk * 6                          # on-cadence
+    out = maybe_lazy_update(idx, keys, t, ly)
+    for a, b in zip(jax.tree.leaves(idx), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# update_batched cadence gate == ungated vmap
+# ---------------------------------------------------------------------------
+def test_lychee_update_batched_matches_ungated_vmap():
+    ly = _ly("lychee")
+    rng = np.random.default_rng(5)
+    pol = make_policy("lychee", ly)
+    H, S, d, B = 2, 64, 16, 3
+    keys = jnp.asarray(rng.standard_normal((B, H, S, d)), jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, 997, size=(B, S)), jnp.int32)
+    table = jnp.asarray(synthetic_delimiter_table(997))
+    layout = jax.vmap(lambda tk: chunk_sequence(tk, table, ly))(tokens)
+    state = pol.build_batched(keys, layout, N_CACHE)
+
+    mc = ly.max_chunk
+    for t in ([mc * 2, mc * 3 + 1, mc * 4],       # one slot due
+              [mc + 1, mc + 2, mc + 3]):          # no slot due -> gate skips
+        tt = jnp.asarray(t, jnp.int32)
+        got = pol.update_batched(state, keys, tt)
+        want = jax.vmap(lambda s, k, tb: maybe_lazy_update(s, k, tb, ly))(
+            state, keys, tt)
+        # same math; tolerance only absorbs XLA fusion differences between
+        # the cond-wrapped and bare vmap compilations (~1e-9 on f32)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# backend-aware interpret resolution
+# ---------------------------------------------------------------------------
+def test_interpret_resolution_precedence():
+    on_tpu = jax.default_backend() == "tpu"
+    assert ops.resolve_interpret(None) == (not on_tpu)    # backend default
+    assert ops.resolve_interpret(True) is True            # explicit wins
+    assert ops.resolve_interpret(False) is False
+    old = ops.INTERPRET
+    try:
+        ops.INTERPRET = False                             # module override
+        assert ops.resolve_interpret(None) is False
+        assert ops.resolve_interpret(True) is True        # explicit beats it
+    finally:
+        ops.INTERPRET = old

@@ -84,7 +84,8 @@ def test_sparse_attention(B, Hkv, G, dk, dv, N, C, dtype, softcap):
 
 
 def test_sparse_attention_all_empty():
-    """All spans masked -> output must be zeros, not NaN."""
+    """All spans masked -> output must be zeros, not NaN (every DMA is
+    skipped by the ``pl.when`` guard, so scratch is never written)."""
     B, Hkv, G, d, N, C = 1, 1, 2, 32, 64, 4
     rng = np.random.default_rng(0)
     q = jnp.asarray(rng.standard_normal((B, Hkv, G, d)), jnp.float32)
@@ -95,3 +96,51 @@ def test_sparse_attention_all_empty():
     got = ops.chunk_attention(q, k, v, starts, lens, scale=0.1)
     assert np.isfinite(np.asarray(got)).all()
     np.testing.assert_allclose(np.asarray(got), 0.0, atol=1e-6)
+
+
+def test_sparse_attention_len0_spans_cost_nothing_and_change_nothing():
+    """Interleaving len == 0 padding spans (whose DMAs the kernel skips)
+    must give the same result as the same table with them masked by the
+    oracle AND as the compacted table without them."""
+    B, Hkv, G, d, N, mc = 1, 2, 2, 32, 128, 16
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((B, Hkv, G, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, N, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, N, d)), jnp.float32)
+    live_s = np.array([[0, 32, 64], [16, 48, 96]], np.int32)
+    live_l = np.array([[16, 9, 16], [5, 16, 12]], np.int32)
+    # interleave empties (start values deliberately junk-but-clippable)
+    pad_s = np.array([[0, 7, 0, 32, 0, 64, 125], [0, 16, 3, 48, 0, 96, 1]],
+                     np.int32)
+    pad_l = np.array([[0, 0, 0, 0, 0, 0, 0], [0, 0, 0, 0, 0, 0, 0]],
+                     np.int32)
+    pad_s[:, 1::2] = live_s
+    pad_l[:, 1::2] = live_l
+    a = ops.chunk_attention(q, k, v, jnp.asarray(live_s)[None],
+                            jnp.asarray(live_l)[None], scale=0.2)
+    b = ops.chunk_attention(q, k, v, jnp.asarray(pad_s)[None],
+                            jnp.asarray(pad_l)[None], scale=0.2)
+    want = ref.sparse_chunk_attention_ref(
+        q, k, v, jnp.asarray(pad_s)[None], jnp.asarray(pad_l)[None],
+        scale=0.2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_sparse_attention_span_at_buffer_boundary():
+    """A live span starting at exactly N - max_chunk (the last legal DMA
+    origin — where tail-slack reads land in a real cache) matches the
+    oracle."""
+    B, Hkv, G, d, N, mc = 1, 1, 2, 32, 96, 16
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((B, Hkv, G, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, N, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, N, d)), jnp.float32)
+    starts = jnp.asarray([[[0, N - mc, N - mc]]], jnp.int32)
+    lens = jnp.asarray([[[mc, mc, 3]]], jnp.int32)
+    got = ops.chunk_attention(q, k, v, starts, lens, scale=0.2)
+    want = ref.sparse_chunk_attention_ref(q, k, v, starts, lens, scale=0.2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
