@@ -1,0 +1,171 @@
+"""Multi-turn KV/index reuse: turn-2 TTFT via ``extend_slot`` vs re-prefill.
+
+The paper's lazy-update claim ("supports efficient streaming generation")
+applied across turns: a follow-up turn should pay only for its prompt DELTA
+— the slot's KV rows are reused and every cache policy's selection state is
+extended through its streaming-update path (lychee lazy-grafts dynamic
+chunks, quest extends tail pages, clusterkv assigns to nearest centroids) —
+instead of re-running the full-history prefill + index rebuild that flat-
+rebuild baselines (ClusterKV et al.) pay on every turn.
+
+For each policy this benchmark replays the SAME two-turn session twice
+through the engine — once with ``reuse="extend"`` and once with
+``reuse="reprefill"`` — and reports the turn-2 TTFT (first token of turn 2
+relative to the turn's start: the extend/prefill dispatch plus the first
+sample) and the resulting speedup. Greedy turn-2 token identity between the
+two paths is reported per policy; for the state-free policies (dense,
+streaming) identity is REQUIRED (their selection cannot depend on how the
+state was built), and ``--check`` additionally requires extend to be
+strictly faster than re-prefill for every policy — the acceptance gate.
+
+Run:  PYTHONPATH=src python benchmarks/session_reuse.py --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+
+import jax
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, LycheeConfig, get_config
+from repro.core.policy import list_policies
+from repro.models import model as MD
+from repro.serving import Engine, Session, Turn
+
+
+def two_turn_session(rng, vocab, history, delta, gen1, gen2) -> Session:
+    return Session(uid=0, turns=[
+        Turn(prompt=rng.integers(0, vocab, size=(history,))
+             .astype(np.int32), max_new=gen1),
+        Turn(prompt=rng.integers(0, vocab, size=(delta,))
+             .astype(np.int32), max_new=gen2)])
+
+
+def run_once(engine, sess_factory, reuse):
+    res = engine.serve([sess_factory()], n_slots=1, reuse=reuse)
+    sess = res.requests[0]
+    return sess.turns[1].ttft_s, [t.tokens for t in sess.turns]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b", choices=list(ARCH_IDS))
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--policies", default=",".join(list_policies()),
+                    help="comma-separated subset of the policy registry")
+    ap.add_argument("--history", type=int, default=1024,
+                    help="turn-1 prompt length (the reused history)")
+    ap.add_argument("--delta", type=int, default=64,
+                    help="turn-2 prompt delta length")
+    ap.add_argument("--gen1", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=16,
+                    help="turn-2 generation budget")
+    ap.add_argument("--repeat", type=int, default=3,
+                    help="timed repeats per path (min is reported)")
+    ap.add_argument("--budget", type=int, default=256)
+    ap.add_argument("--check", action="store_true",
+                    help="assert extend TTFT < re-prefill TTFT per policy "
+                         "(and token identity for the state-free policies)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="persist the per-policy table (+ run metadata) as "
+                         "a JSON artifact — the perf-trajectory record CI "
+                         "uploads per PR")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    policies = [p.strip() for p in args.policies.split(",") if p.strip()]
+    unknown = set(policies) - set(list_policies())
+    if unknown:
+        raise SystemExit(f"unknown policies {sorted(unknown)}; "
+                         f"registry has {list(list_policies())}")
+
+    cfg0 = get_config(args.arch, reduced=args.reduced).replace(
+        dtype="float32")
+    params = MD.init_model(jax.random.key(0), cfg0)
+    n_cache = args.history + args.delta + args.gen + 64
+    print(f"[session_reuse] {cfg0.name} | history={args.history} "
+          f"delta={args.delta} gen2={args.gen} budget={args.budget} "
+          f"policies={policies}")
+
+    rows = []
+    failures = []
+    for policy in policies:
+        lychee = LycheeConfig(policy=policy, enabled=policy != "dense",
+                              budget=args.budget, sink=16, buffer_size=64,
+                              max_coarse=32, top_kg=8, full_attn_layers=0)
+        engine = Engine(cfg0.replace(lychee=lychee), params,
+                        n_cache=n_cache, donate_state=True)
+        rng0 = np.random.default_rng(args.seed)
+        prompts = (rng0.integers(0, cfg0.vocab, size=(args.history,)),
+                   rng0.integers(0, cfg0.vocab, size=(args.delta,)))
+
+        def factory():
+            return Session(uid=0, turns=[
+                Turn(prompt=prompts[0].astype(np.int32), max_new=args.gen1),
+                Turn(prompt=prompts[1].astype(np.int32), max_new=args.gen)])
+
+        # warmup pays jit for BOTH admission primitives (history-length
+        # prefill, delta-length extend, concatenated-history re-prefill)
+        # and the decode step
+        for reuse in ("extend", "reprefill"):
+            run_once(engine, factory, reuse)
+
+        timings = {}
+        tokens = {}
+        for reuse in ("extend", "reprefill"):
+            best = None
+            for _ in range(args.repeat):
+                ttft2, toks = run_once(engine, factory, reuse)
+                best = ttft2 if best is None else min(best, ttft2)
+                tokens[reuse] = toks
+            timings[reuse] = best
+        identical = tokens["extend"][1] == tokens["reprefill"][1]
+        assert tokens["extend"][0] == tokens["reprefill"][0], \
+            f"[{policy}] turn-1 must be identical (same prefill)"
+        speedup = timings["reprefill"] / max(timings["extend"], 1e-9)
+        rows.append({"policy": policy,
+                     "ttft2_extend_ms": 1e3 * timings["extend"],
+                     "ttft2_reprefill_ms": 1e3 * timings["reprefill"],
+                     "speedup": speedup,
+                     "turn2_identical": identical})
+        if args.check:
+            if timings["extend"] >= timings["reprefill"]:
+                failures.append(f"{policy}: extend TTFT "
+                                f"{1e3 * timings['extend']:.1f}ms not below "
+                                f"re-prefill "
+                                f"{1e3 * timings['reprefill']:.1f}ms")
+            if policy in ("dense", "streaming") and not identical:
+                failures.append(f"{policy}: state-free policy diverged "
+                                f"between extend and re-prefill")
+
+    print(f"\n  {'policy':10s} {'extend ms':>10s} {'reprefill ms':>13s} "
+          f"{'speedup':>8s} {'turn2 ==':>9s}")
+    for r in rows:
+        print(f"  {r['policy']:10s} {r['ttft2_extend_ms']:10.1f} "
+              f"{r['ttft2_reprefill_ms']:13.1f} {r['speedup']:7.2f}x "
+              f"{str(r['turn2_identical']):>9s}")
+
+    if args.json:
+        payload = {
+            "benchmark": "session_reuse",
+            "arch": cfg0.name,
+            "backend": jax.default_backend(),
+            "host": platform.platform(),
+            "jax": jax.__version__,
+            "args": {k: v for k, v in vars(args).items() if k != "json"},
+            "checked": bool(args.check),
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"  wrote {args.json}")
+    if failures:
+        raise SystemExit("FAIL: " + "; ".join(failures))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

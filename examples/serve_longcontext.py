@@ -15,6 +15,16 @@ the per-slot prefill splice), printing throughput and latency percentiles:
 
       PYTHONPATH=src python examples/serve_longcontext.py --stream \
           [--requests 8] [--rate 1.0]
+
+With --multiturn it runs the session API end to end: a long first turn,
+then a short follow-up whose prompt delta is appended onto the slot's live
+KV cache and hierarchical index (``extend_slot`` — the lazy-update
+streaming path, no re-prefill), with per-turn sampling parameters and the
+``on_token`` streaming callback; it then re-runs the same
+session with ``reuse="reprefill"`` to show the turn-2 TTFT difference:
+
+      PYTHONPATH=src python examples/serve_longcontext.py --multiturn \
+          [--ctx 2048] [--gen 32]
 """
 import argparse
 
@@ -23,7 +33,7 @@ import numpy as np
 
 from repro.configs.base import LycheeConfig, get_config
 from repro.models import model as MD
-from repro.serving import Engine, SamplerConfig, make_trace
+from repro.serving import (Engine, SamplerParams, Session, Turn, make_trace)
 
 
 def main():
@@ -33,6 +43,9 @@ def main():
     ap.add_argument("--gen", type=int, default=64)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--stream", action="store_true")
+    ap.add_argument("--multiturn", action="store_true",
+                    help="two-turn session demo: extend_slot KV/index "
+                         "reuse vs re-prefill, streaming, stop sequences")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate (req/s); 0 = offline")
@@ -45,6 +58,47 @@ def main():
         dtype="float32", lychee=lychee)
     params = MD.init_model(jax.random.key(0), cfg)
     n_cache = args.ctx + (cfg.n_patches or 0) + args.gen + 32
+
+    if args.multiturn:
+        # --- the session API in one screen -----------------------------
+        # Turn 1: a long context processed once (greedy). Turn 2: a short
+        # follow-up delta — only these tokens are prefilled; the history's
+        # KV rows and the hierarchical index are REUSED (lychee grafts the
+        # generated tokens in as dynamic chunks via lazy_update). Each turn
+        # carries its own SamplerParams; on_token streams tokens as they
+        # are sampled. (Turns also take stop=((tok, ...),) sequences that
+        # end a turn early — see tests/test_session.py.)
+        session = Session(uid=0, turns=[
+            Turn(prompt=rng.integers(0, cfg.vocab, size=(args.ctx,))
+                 .astype(np.int32), max_new=args.gen),
+            Turn(prompt=rng.integers(0, cfg.vocab, size=(args.ctx // 16,))
+                 .astype(np.int32), max_new=args.gen,
+                 sampling=SamplerParams(temperature=0.8, top_k=50)),
+        ])
+        engine = Engine(cfg, params,
+                        n_cache=session.total_len() + 64)
+        import copy
+        for reuse in ("extend", "reprefill"):    # warm BOTH jit paths
+            engine.serve(copy.deepcopy([session]), n_slots=1, reuse=reuse)
+        streamed = {}
+        res = {}
+        for reuse in ("extend", "reprefill"):
+            streamed[reuse] = []
+            res[reuse] = engine.serve(
+                copy.deepcopy([session]), n_slots=1, reuse=reuse,
+                on_token=lambda uid, tok, out=streamed[reuse]:
+                out.append(tok))
+        for reuse, r in res.items():
+            t2 = r.requests[0].turns[1]
+            print(f"[{reuse:9s}] turn-2 TTFT {1e3 * t2.ttft_s:7.1f}ms   "
+                  f"tokens {t2.tokens[:8]} ...")
+        sp = (res["reprefill"].requests[0].turns[1].ttft_s
+              / res["extend"].requests[0].turns[1].ttft_s)
+        print(f"turn-2 TTFT speedup (extend vs re-prefill): {sp:.2f}x "
+              f"at history={args.ctx}+{args.gen}")
+        print(f"streamed {len(streamed['extend'])} tokens via on_token "
+              f"(extend run)")
+        return
 
     if args.stream:
         trace = make_trace(rng, args.requests, cfg.vocab,
@@ -77,7 +131,7 @@ def main():
                     ("full", cfg.replace(lychee=LycheeConfig(enabled=False)))]:
         engine = Engine(c, params, n_cache=n_cache)
         res = engine.generate(prompts, args.gen,
-                              SamplerConfig(temperature=0.8, top_k=50),
+                              SamplerParams(temperature=0.8, top_k=50),
                               extras=extras)
         results[name] = res
         print(f"[{name:6s}] prefill {res.prefill_s:.2f}s   "

@@ -19,6 +19,12 @@ like the Lychee index does. Five operations:
                               ctx-sharded shard_map, Pallas kernel) consumes;
 * ``update(state, k_cache, t)``  streaming append: fold the token written at
                               position ``t - 1`` into the state;
+* ``extend(state, k_cache, t0, n)``  streaming MULTI-token append (the
+                              session-reuse path of ``model.extend_slot``):
+                              fold rows ``[t0, t0+n)`` in without a rebuild,
+                              following the same trajectory per-token decode
+                              would have (lychee lazy-grafts, quest extends
+                              tail pages, clusterkv assigns to centroids);
 * ``pad(state, N_cap)`` / ``reset(state)``  slot-lifecycle hooks.
 
 Registered policies (``register_policy`` / ``get_policy``):
@@ -145,6 +151,37 @@ class CachePolicy:
         if not self.has_update or state is None:
             return state
         return jax.vmap(self.update)(state, keys, t)
+
+    def extend(self, state, keys: jax.Array, t0, n_new: int):
+        """Streaming multi-token append — the session-reuse primitive
+        (``model.extend_slot``): fold the ``n_new`` cache rows written at
+        positions ``[t0, t0 + n_new)`` of ``keys`` (H, N, d) into the state
+        WITHOUT rebuilding it, exactly as if those tokens had been decoded
+        one by one (lychee grafts dynamic chunks at its ``max_chunk``
+        cadence via ``lazy_update``; quest extends tail-page min/max bounds;
+        clusterkv assigns each token to its nearest centroid). ``t0`` is the
+        slot's length BEFORE the delta (traced ok); ``n_new`` is static.
+
+        The default replays :meth:`update` over the delta with a
+        ``fori_loop`` — per-token updates are cheap and the loop keeps the
+        HLO O(1) in the delta length — and is exactly the trajectory a
+        decoded session would have followed, so a subsequent decode behaves
+        identically to one that streamed those tokens.
+        """
+        if not self.has_update or state is None or n_new == 0:
+            return state
+        t0 = jnp.asarray(t0, jnp.int32)
+        return jax.lax.fori_loop(
+            0, n_new, lambda i, s: self.update(s, keys, t0 + 1 + i), state)
+
+    def extend_batched(self, state, keys: jax.Array, t0: jax.Array,
+                       n_new: int):
+        """vmap :meth:`extend` over the slot axis. keys: (B, H, N, d);
+        t0: (B,) per-slot lengths before the delta."""
+        if not self.has_update or state is None or n_new == 0:
+            return state
+        return jax.vmap(lambda s, k, t: self.extend(s, k, t, n_new))(
+            state, keys, jnp.asarray(t0, jnp.int32))
 
     def pad(self, state, N_cap: int):
         """Grow a short-prompt state to the capacities of ``N_cap``."""

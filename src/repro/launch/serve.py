@@ -18,6 +18,16 @@ per-slot prefill splice:
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
       --reduced --stream --requests 12 --slots 4 --rate 2.0
+
+Multi-turn sessions (--stream --turns N): each request becomes an N-turn
+conversation; later turns append their prompt delta onto the slot's live KV
+cache and index (``model.extend_slot`` — no re-prefill), each turn draws
+its own sampling temperature (mixed greedy/sampled batches, one fused
+dispatch per token), and --stream-tokens prints tokens as they are sampled
+via the ``on_token`` callback:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
+      --reduced --stream --turns 3 --requests 6 --slots 2 --stream-tokens
 """
 from __future__ import annotations
 
@@ -30,7 +40,8 @@ import numpy as np
 from repro.configs.base import ARCH_IDS, LycheeConfig, get_config
 from repro.core.policy import list_policies
 from repro.models import model as MD
-from repro.serving import Engine, SamplerConfig, make_trace
+from repro.serving import (Engine, SamplerParams, make_session_trace,
+                           make_trace)
 
 
 def main():
@@ -54,6 +65,11 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate (req/s); 0 = offline")
+    ap.add_argument("--turns", type=int, default=1,
+                    help="turns per session (>1: multi-turn chat trace; "
+                         "later turns reuse the slot's KV via extend_slot)")
+    ap.add_argument("--stream-tokens", action="store_true",
+                    help="print tokens as they are sampled (on_token)")
     ap.add_argument("--prompt-lens", type=int, nargs="+",
                     default=[64, 256, 1024])
     ap.add_argument("--seed", type=int, default=0)
@@ -71,26 +87,42 @@ def main():
         f"{policy}(budget={args.budget})"
 
     if args.stream:
-        trace = make_trace(rng, args.requests, cfg.vocab,
-                           prompt_lens=args.prompt_lens,
-                           gen_lens=(args.gen // 2, args.gen),
-                           rate_rps=args.rate)
-        n_cache = max(args.prompt_lens) + args.gen + 32
+        if args.turns > 1:
+            trace = make_session_trace(
+                rng, args.requests, cfg.vocab, n_turns=args.turns,
+                first_lens=args.prompt_lens,
+                delta_lens=(16, max(32, args.gen)),
+                gen_lens=(max(1, args.gen // 2), args.gen),
+                temperatures=(0.0, args.temperature),
+                rate_rps=args.rate)
+        else:
+            trace = make_trace(rng, args.requests, cfg.vocab,
+                               prompt_lens=args.prompt_lens,
+                               gen_lens=(args.gen // 2, args.gen),
+                               rate_rps=args.rate)
+        n_cache = max(s.total_len() for s in trace) + 32
         engine = Engine(cfg, params, n_cache=n_cache)
+        on_token = None
+        if args.stream_tokens:
+            on_token = lambda uid, tok: print(  # noqa: E731
+                f"    [token] sess{uid} -> {tok}")
         res = engine.serve(trace, n_slots=args.slots, mode="continuous",
-                           sampler=SamplerConfig(
+                           sampler=SamplerParams(
                                temperature=args.temperature, top_k=50),
-                           verbose=True)
+                           verbose=True, on_token=on_token)
         print(f"[{cfg.name} | {mode} | stream] "
-              f"{res.total_new_tokens} tokens / {res.wall_s:.2f}s = "
+              f"{res.total_new_tokens} tokens / {res.wall_s:.2f}s "
+              f"({res.idle_s:.2f}s idle) = "
               f"{res.tokens_per_s:.1f} tok/s over {res.n_steps} steps")
         print(f"  latency p50 {res.p50_latency_s:.2f}s  "
               f"p99 {res.p99_latency_s:.2f}s  "
               f"mean TTFT {res.mean_ttft_s:.2f}s")
         for uid in sorted(res.requests)[:4]:
-            r = res.requests[uid]
-            print(f"  req{uid}: S={r.prompt_len} "
-                  f"-> {r.tokens[:8]} ... ({len(r.tokens)} tok)")
+            s = res.requests[uid]
+            per_turn = " | ".join(
+                f"T{j + 1}(S={t.prompt_len}, ttft {1e3 * t.ttft_s:.0f}ms)"
+                f" {t.tokens[:4]}..." for j, t in enumerate(s.turns))
+            print(f"  sess{uid}: {per_turn}")
         return
 
     prompts = rng.integers(0, cfg.vocab,
@@ -107,7 +139,7 @@ def main():
     engine = Engine(cfg, params,
                     n_cache=args.ctx + (cfg.n_patches or 0) + args.gen + 32)
     res = engine.generate(prompts, args.gen,
-                          SamplerConfig(temperature=args.temperature,
+                          SamplerParams(temperature=args.temperature,
                                         top_k=50), extras=extras)
     print(f"[{cfg.name} | {mode}] prefill {res.prefill_s:.2f}s  "
           f"decode {res.decode_s:.2f}s  TPOT {res.tpot_ms:.1f}ms")

@@ -243,6 +243,90 @@ def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
     return shard(out, "batch", None, None), cache
 
 
+def gqa_extend(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
+               kind: str, managed: bool, rope: bool = True,
+               pol: Optional[CachePolicy] = None) -> Tuple:
+    """Multi-token EXTEND of one occupied slot — the session-reuse
+    primitive between ``gqa_forward`` (prefill from scratch) and
+    ``gqa_decode`` (one token).
+
+    x: (1, S, d) — the next turn's delta tokens, embedded; t: (1,) the
+    slot's current length (rows ``[0, t)`` of the cache hold the session
+    history, INCLUDING previously generated tokens). The delta's K/V rows
+    are appended at ``[t, t + S)`` and the delta queries run exact blocked
+    flash attention over the whole cache (history + delta) with causal
+    masking by absolute position — numerically the prefill math, so greedy
+    continuations match the re-prefill-from-scratch oracle — while the
+    policy state is EXTENDED through the streaming-update path
+    (``CachePolicy.extend``: lychee lazy-grafts dynamic chunks, quest
+    extends tail pages, clusterkv assigns to nearest centroids) instead of
+    being rebuilt.
+
+    Single-slot contract: extend operates on a ``slice_slot`` view (B=1) so
+    per-slot positions reduce to one traced scalar and flash attention's
+    shared position vectors apply. Returns (out (1, S, d_model), cache).
+    """
+    B, S, _ = x.shape
+    assert B == 1, "extend_slot extends one slot at a time"
+    dh = cfg.resolved_head_dim
+    tt = _slot_t(t, B)
+    t0 = tt[0]                                              # traced scalar
+    d_pos = t0 + jnp.arange(S, dtype=jnp.int32)             # (S,) absolute
+    q, k_t, v_t = _project_qkv(p, x, d_pos[None], cfg, rope)  # (1,H,S,dh)
+    scale = 1.0 / dh ** 0.5
+
+    local = kind in ("attn_local", "swa_moe") and cfg.window
+    if local:
+        W = cache["k"].shape[2]
+        # ring slot j currently holds the LARGEST position < t congruent to
+        # j (mod W); never-written slots resolve to a negative position and
+        # are masked as invalid (k_pos = -1)
+        j = jnp.arange(W, dtype=jnp.int32)
+        ring_pos = t0 - 1 - jnp.mod(t0 - 1 - j, W)
+        ring_pos = jnp.where(ring_pos >= 0, ring_pos, -1)
+        k_comb = jnp.concatenate([cache["k"], k_t], axis=2)
+        v_comb = jnp.concatenate([cache["v"], v_t], axis=2)
+        out = flash_attention(q, k_comb, v_comb, q_pos=d_pos,
+                              k_pos=jnp.concatenate([ring_pos, d_pos]),
+                              causal=True, window=cfg.window, scale=scale,
+                              softcap=cfg.attn_softcap)
+        # fold the delta into the ring: only the last min(S, W) rows can
+        # survive, so slot indices are distinct and one scatter suffices
+        lo = max(0, S - W)
+        slots = jnp.mod(d_pos[lo:], W)
+        cache = dict(cache,
+                     k=cache["k"].at[:, :, slots].set(k_t[:, :, lo:]),
+                     v=cache["v"].at[:, :, slots].set(v_t[:, :, lo:]))
+    else:
+        k_c = jax.vmap(
+            lambda c, r, a: jax.lax.dynamic_update_slice_in_dim(c, r, a, 1))(
+            cache["k"], k_t, tt)
+        v_c = jax.vmap(
+            lambda c, r, a: jax.lax.dynamic_update_slice_in_dim(c, r, a, 1))(
+            cache["v"], v_t, tt)
+        k_c = shard(k_c, *kv_axes())
+        v_c = shard(v_c, *kv_axes())
+        cache = dict(cache, k=k_c, v=v_c)
+        N = k_c.shape[2]
+        # rows >= t + S (zero / slack rows) carry k_pos > every q_pos, so
+        # causal masking excludes them — exact, no per-step copy
+        out = flash_attention(q, k_c, v_c, q_pos=d_pos,
+                              k_pos=jnp.arange(N, dtype=jnp.int32),
+                              causal=True, scale=scale,
+                              softcap=cfg.attn_softcap)
+        if managed and pol is None:
+            pol = policy_for(cfg.lychee)
+        if managed and pol is not None and pol.stateful and \
+                "policy_state" in cache:
+            cache = dict(cache, policy_state=pol.extend_batched(
+                cache["policy_state"], k_c, tt, S))
+
+    Hq = out.shape[1]
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, Hq * out.shape[-1])
+    out = out @ p["wo"]
+    return shard(out, "batch", None, None), cache
+
+
 def gqa_prefill_cache(k: jax.Array, v: jax.Array, cfg: ModelConfig,
                       kind: str, layout: Optional[ChunkLayout],
                       n_cache: int, managed: bool,

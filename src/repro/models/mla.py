@@ -158,6 +158,66 @@ def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
     return shard(out, "batch", None, None), cache
 
 
+def mla_extend(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
+               managed: bool, pol: Optional[CachePolicy] = None
+               ) -> Tuple[jax.Array, dict]:
+    """Multi-token EXTEND of one occupied MLA slot (session reuse).
+
+    x: (1, S, d) delta tokens; t: (1,) current length. The delta's latents
+    are appended at rows ``[t, t + S)`` and the delta queries attend over
+    the whole latent cache in the NON-absorbed prefill formulation —
+    per-head keys/values are reconstructed from the cached latents
+    (``k_nope = c_kv @ w_uk``, ``v = c_kv @ w_uv``, both position-free, so
+    the reconstruction is the exact prefill math and greedy continuations
+    match the re-prefill oracle). Decompression is acceptable here because
+    extend is a prefill-class operation (once per turn, not per token); the
+    per-token decode path stays absorbed. The policy state extends through
+    ``CachePolicy.extend`` over the latent rows (one logical kv head).
+    """
+    B, S, _ = x.shape
+    assert B == 1, "extend_slot extends one slot at a time"
+    H = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    tt = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    t0 = tt[0]
+    d_pos = t0 + jnp.arange(S, dtype=jnp.int32)             # (S,) absolute
+
+    q_nope, q_rope = _queries(p, x, d_pos[None], cfg)       # (1,S,H,·)
+    c_kv, k_rope = _latents(p, x, d_pos[None], cfg)
+    lat_t = jnp.concatenate([c_kv, k_rope], -1)             # (1,S,kvl+rd)
+    latent = jax.vmap(
+        lambda c, r, a: jax.lax.dynamic_update_slice_in_dim(c, r, a, 0))(
+        cache["latent"], lat_t, tt)
+    _, _, lat_ctx, _ = kv_axes()
+    latent = shard(latent, kv_axes()[0], lat_ctx, None)
+    cache = dict(cache, latent=latent)
+    N = latent.shape[1]
+
+    ckv_all = latent[..., :kvl]                             # (1, N, kvl)
+    kr_all = latent[..., kvl:]                              # (1, N, rd)
+    k_nope = (ckv_all @ p["w_uk"]).reshape(B, N, H, nd)
+    v_all = (ckv_all @ p["w_uv"]).reshape(B, N, H, vd)
+    q = jnp.concatenate([q_nope, q_rope], -1).transpose(0, 2, 1, 3)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None], (B, N, H, rd))],
+        -1).transpose(0, 2, 1, 3)
+    v = v_all.transpose(0, 2, 1, 3)
+    # rows >= t + S are zero latents at k_pos > every q_pos: causally masked
+    out = flash_attention(q, k, v, q_pos=d_pos,
+                          k_pos=jnp.arange(N, dtype=jnp.int32),
+                          causal=True, scale=1.0 / (nd + rd) ** 0.5)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * vd) @ p["wo"]
+
+    if managed and pol is None:
+        pol = policy_for(cfg.lychee)
+    if managed and pol is not None and pol.stateful and \
+            "policy_state" in cache:
+        cache = dict(cache, policy_state=pol.extend_batched(
+            cache["policy_state"], latent[:, None], tt, S))
+    return shard(out, "batch", None, None), cache
+
+
 def mla_prefill_cache(latent: jax.Array, cfg: ModelConfig,
                       layout: Optional[ChunkLayout], n_cache: int,
                       managed: bool, pol: Optional[CachePolicy] = None

@@ -635,6 +635,129 @@ def reset_slot(state: dict, slot) -> dict:
     return _per_part(state, z)
 
 
+# ---------------------------------------------------------------------------
+# Session reuse: multi-token extend of an occupied slot
+# ---------------------------------------------------------------------------
+# Block kinds whose decode state supports in-place multi-token extension.
+# SSM kinds would need a sequential recurrence over the delta (their prefill
+# has no prefix-state entry point) and enc/dec frontends are excluded from
+# streaming admission anyway. MoE FFN kinds (swa_moe / mla_moe) are ALSO
+# excluded: ``moe_apply``'s expert capacity is sequence-length dependent
+# (C = S*k/E*capacity_factor), so a delta-length extend forward can drop /
+# route tokens differently than the full-history prefill would — greedy
+# extend output would silently diverge from the re-prefill oracle.
+# Sessions on all excluded architectures fall back to re-prefilling the
+# concatenated history (the engine checks ``can_extend``).
+EXTEND_KINDS = ("attn", "attn_local", "shared_attn", "mla")
+
+
+def can_extend(cfg: ModelConfig) -> bool:
+    """True when every decode block of ``cfg`` supports ``extend_slot``."""
+    if cfg.is_encdec or cfg.n_patches:
+        return False
+    return all(k in EXTEND_KINDS for k in cfg.prelude + cfg.pattern)
+
+
+def block_extend(bp: dict, kind: str, x: jax.Array, t, cache: Any,
+                 cfg: ModelConfig, managed: bool,
+                 pol=None) -> Tuple[jax.Array, Any]:
+    """Multi-token analogue of ``block_decode``: x (1, S, d) delta hidden
+    states against an occupied slot's cache at length ``t``. The MoE kinds
+    are implemented for completeness but gated out of ``EXTEND_KINDS``
+    (capacity drops are sequence-length dependent — see above)."""
+    if kind in ("attn", "attn_local", "swa_moe", "shared_attn"):
+        akind = "attn" if kind == "shared_attn" else kind
+        h, cache = A.gqa_extend(bp["attn"], rmsnorm(bp["norm1"], x), t,
+                                cache, cfg, akind, managed, pol=pol)
+        x = x + h
+        if kind == "swa_moe":
+            h, _ = MOE.moe_apply(bp["moe"], rmsnorm(bp["norm2"], x), cfg)
+            x = x + h
+        else:
+            x = x + mlp_apply(bp["mlp"], rmsnorm(bp["norm2"], x))
+        return x, cache
+    if kind in MLA_KINDS:
+        from repro.models.mla import mla_extend
+        h, cache = mla_extend(bp["attn"], rmsnorm(bp["norm1"], x), t, cache,
+                              cfg, managed, pol=pol)
+        x = x + h
+        if kind == "mla":
+            x = x + mlp_apply(bp["mlp"], rmsnorm(bp["norm2"], x))
+        else:
+            h, _ = MOE.moe_apply(bp["moe"], rmsnorm(bp["norm2"], x), cfg)
+            x = x + h
+        return x, cache
+    raise ValueError(f"block kind {kind!r} does not support extend "
+                     f"(see model.EXTEND_KINDS)")
+
+
+def extend(params: dict, tokens: jax.Array, cfg: ModelConfig, state: dict
+           ) -> Tuple[jax.Array, dict]:
+    """Append a turn's delta tokens to ONE session's decode state.
+
+    tokens: (1, S) — the delta (the previous turn's final sampled token,
+    whose KV was never appended, plus the new user prompt); state: a
+    single-slot (B=1) decode state, e.g. from ``slice_slot``. The delta
+    runs a prefill-exact forward against the existing caches (every block's
+    K/V rows for ``[0, t)`` are REUSED — this is the lazy-update streaming
+    story of the paper applied across turns) and each managed layer's
+    policy state is extended through ``CachePolicy.extend`` instead of
+    rebuilt. Returns (last-position logits (1, V), updated state with
+    ``t + S``).
+    """
+    assert tokens.shape[0] == 1, "extend is a per-slot primitive"
+    S = tokens.shape[1]
+    t0 = jnp.broadcast_to(jnp.asarray(state["t"], jnp.int32), (1,))
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    x = shard(x, "batch", None, None)
+    pol = policy_for(cfg.lychee)          # resolved once, threaded down
+
+    new_prelude = []
+    for bp, kind, cache in zip(params["prelude"], cfg.prelude,
+                               state["prelude"]):
+        bp = _shared_params(params, kind, bp)
+        x, cache = block_extend(bp, kind, x, t0, cache, cfg, False)
+        new_prelude.append(cache)
+
+    def group_step(x, xs):
+        gp, caches = xs
+        new = []
+        for pos_i, kind in enumerate(cfg.pattern):
+            bp = _shared_params(params, kind, gp[pos_i])
+            managed = _policy_managed(cfg, kind, scanned=True)
+            x, c = block_extend(bp, kind, x, t0, caches[pos_i], cfg, managed,
+                                pol=pol if managed else None)
+            new.append(c)
+        return x, tuple(new)
+
+    x, new_groups = jax.lax.scan(group_step, x,
+                                 (params["pattern"], state["groups"]))
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params["embed"], x[:, -1:], cfg.final_softcap)[:, 0]
+    new_state = {"prelude": new_prelude, "groups": new_groups,
+                 "t": t0 + S}
+    return logits, new_state
+
+
+def extend_slot(params: dict, tokens: jax.Array, cfg: ModelConfig,
+                state: dict, slot) -> Tuple[jax.Array, dict]:
+    """Append a turn's delta into an OCCUPIED slot of a live batched state
+    — the multi-turn admission primitive, sibling of ``prefill_into_slot``.
+
+    Where ``prefill_into_slot`` builds a fresh state from the full prompt
+    (O(T^2) attention + index rebuild), ``extend_slot`` reuses the slot's
+    existing KV rows and index: it slices the slot (B=1), runs
+    :func:`extend` over the delta at the slot's current ``t``, and splices
+    the result back. tokens: (1, S). Returns (last-position logits (1, V),
+    updated batched state). ``slot`` may be a traced scalar — one jit
+    specialisation per delta length, not per slot.
+    """
+    assert tokens.shape[0] == 1, "extend_slot extends one slot at a time"
+    sub = slice_slot(state, slot)
+    logits, sub = extend(params, tokens, cfg, sub)
+    return logits, write_slot(state, sub, slot)
+
+
 def prefill_into_slot(params: dict, tokens: jax.Array, cfg: ModelConfig,
                       n_cache: int, state: dict, slot,
                       extras: Optional[dict] = None

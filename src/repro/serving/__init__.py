@@ -1,7 +1,11 @@
 from repro.serving.engine import (Engine, GenerateResult, ServeResult,
                                   serve_step)
-from repro.serving.sampler import SamplerConfig, sample
-from repro.serving.scheduler import Request, Scheduler, make_trace
+from repro.serving.sampler import (SamplerConfig, SamplerParams, sample,
+                                   slot_keys)
+from repro.serving.scheduler import (Request, Scheduler, Session, Turn,
+                                     make_session_trace, make_trace)
 
 __all__ = ["Engine", "GenerateResult", "Request", "SamplerConfig",
-           "Scheduler", "ServeResult", "make_trace", "sample", "serve_step"]
+           "SamplerParams", "Scheduler", "ServeResult", "Session", "Turn",
+           "make_session_trace", "make_trace", "sample", "serve_step",
+           "slot_keys"]

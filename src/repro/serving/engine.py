@@ -1,40 +1,61 @@
-"""Serving engine: static batched generate + continuous-batching serve.
+"""Serving engine: static batched generate + session-centric continuous
+batching.
 
 Two execution models over the same pure model functions:
 
 * ``generate`` — the classic fixed batch: B prompts of one length prefill
   together, decode proceeds lock-step until every slot finishes. Simple,
   but a finished slot idles until the whole batch drains.
-* ``serve`` — **continuous batching**: a :class:`~repro.serving.scheduler.
-  Scheduler` feeds a FIFO request trace into ``B`` persistent decode slots.
-  When a slot frees, the next request is admitted by a single-sequence
-  prefill at its natural length whose KV caches, cache-policy selection
-  state, recent-buffer bookkeeping and position counter are spliced into
-  that slot (``model.prefill_into_slot``) while the other slots keep
-  decoding unperturbed. The per-slot policy state makes this cheap: all
-  decode state is per-(layer, batch-element), so admission is one
-  ``dynamic_update_slice`` per leaf.
+* ``serve`` — **continuous batching over sessions**: a :class:`~repro.
+  serving.scheduler.Scheduler` feeds a FIFO trace of :class:`~repro.
+  serving.scheduler.Session` objects (multi-turn conversations; single-turn
+  sessions are the old requests) into ``B`` persistent decode slots. When a
+  slot frees, the next session is admitted by a single-sequence prefill at
+  its natural length whose KV caches, cache-policy selection state and
+  position counter are spliced into that slot (``model.prefill_into_slot``)
+  while the other slots keep decoding unperturbed. When a TURN finishes and
+  the session has more turns, the slot is NOT released: the next turn's
+  prompt delta is appended onto the slot's live KV rows and index by
+  ``model.extend_slot`` — every :class:`~repro.core.policy.CachePolicy`
+  extends through its streaming-update path (lychee lazy-grafts dynamic
+  chunks, quest extends tail pages, clusterkv assigns to nearest
+  centroids) — instead of re-prefilling the whole history. That reuse is
+  the paper's "efficient streaming generation" claim applied across turns;
+  ``benchmarks/session_reuse.py`` measures the turn-2 TTFT win and
+  architectures without an extend path (SSM hybrids — ``model.can_extend``)
+  transparently fall back to re-prefilling the concatenated history.
 
-The KV selection strategy of policy-managed layers is pluggable
-(:mod:`repro.core.policy`): pass ``policy="lychee" | "quest" | "clusterkv"
-| "streaming" | "dense"`` to run any registered :class:`CachePolicy`
-through the identical prefill/decode/serve machinery — the apples-to-apples
-§5.1 comparison surface (``benchmarks/policy_e2e.py``).
+Sampling is per-slot and fused: each turn carries its own
+:class:`~repro.serving.sampler.SamplerParams`, the engine keeps (B,)
+temperature/top-k/top-p vectors, and the jitted decode step derives each
+slot's PRNG key as ``fold_in(fold_in(base_key, uid), step)`` and samples
+on-device — one dispatch and one (B,)-int host transfer per token even for
+batches mixing greedy and temperature-0.9 requests (host-side sampling
+happens only once per turn, on the prefill/extend logits). Because the key
+depends only on (seed, session uid, per-session sample counter), sampled
+outputs are independent of co-scheduled sessions, slot assignment and
+admission order — the greedy serve==solo bit-identity invariant extended to
+``temperature > 0``.
+
+Per-turn stopping: an engine-level ``eos_id`` (or per-turn override) ends a
+turn, and each turn may carry ``stop`` token sequences — matched on the
+host against the sampled tail; a matched suffix is trimmed from the turn's
+public ``tokens`` (the raw ``sampled`` list keeps it, because those tokens
+live in the KV cache and in the next turn's history). ``on_token(uid,
+token)`` streams every sampled token as it is produced.
 
 Scheduler contract (who owns what):
 
-* the scheduler owns WHICH request runs in which slot and when (FIFO order,
+* the scheduler owns WHICH session runs in which slot and when (FIFO order,
   arrival gating, lifecycle timestamps); it never touches device state;
-* the engine owns the device state and the admission *policy*: continuous
-  mode admits into any free slot, static mode only admits when all slots
-  are drained (the lock-step baseline measured by
+* the engine owns the device state, turn transitions, and the admission
+  *policy*: continuous mode admits into any free slot, static mode only
+  admits when all slots are drained (the lock-step baseline measured by
   ``benchmarks/throughput.py``);
-* per-request greedy outputs are independent of co-scheduled requests
-  (decode is per-slot vmapped; prefill is per-request at natural length),
-  so continuous and static modes produce bit-identical greedy tokens —
-  the invariant the throughput benchmark checks. (MoE archs route per
-  token independently at decode, so this holds there too; capacity drops
-  only arise in training-time batched dispatch.)
+* greedy outputs per session are independent of co-scheduled sessions
+  (decode is per-slot vmapped; prefill/extend are per-session at natural
+  length), so continuous and static modes produce bit-identical greedy
+  tokens — the invariant the throughput benchmark checks.
 
 ``serve_step`` is the pure function the decode dry-run shapes
 (``decode_32k`` / ``long_500k``) lower: one new token against a seq_len KV
@@ -46,7 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -56,8 +77,8 @@ from repro.configs.base import ModelConfig
 from repro.core.policy import policy_for
 from repro.core.types import usable_rows
 from repro.models import model as MD
-from repro.serving.sampler import SamplerConfig, sample
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.sampler import (SamplerParams, sample, slot_keys)
+from repro.serving.scheduler import Scheduler, Session, Turn
 
 
 def serve_step(params, token, state, cfg: ModelConfig):
@@ -76,14 +97,18 @@ class GenerateResult:
 
 @dataclasses.dataclass
 class ServeResult:
-    """Aggregate metrics of one trace replay (per-request detail rides on
-    the Request objects themselves)."""
+    """Aggregate metrics of one trace replay (per-session/turn detail rides
+    on the Session objects themselves)."""
 
     mode: str                     # "continuous" | "static"
-    requests: Dict[int, Request]  # uid -> finished request (tokens filled)
+    requests: Dict[int, Session]  # uid -> finished session (tokens filled)
     wall_s: float
     decode_s: float               # wall-clock inside lock-step decode only
                                   # (admission prefills + scheduling excluded)
+    idle_s: float                 # open-loop wait for the next arrival while
+                                  # every slot was empty (excluded from
+                                  # tokens_per_s — idle is the trace's, not
+                                  # the engine's)
     n_steps: int                  # batched decode steps executed
     total_new_tokens: int
     tokens_per_s: float
@@ -112,6 +137,12 @@ class Engine:
         self.usable = usable_rows(n_cache, cfg.lychee)
         self.eos_id = eos_id
         self.policy = policy_for(cfg.lychee).name
+        # multi-turn KV/index reuse needs an extend path through every
+        # decode block; SSM hybrids fall back to re-prefilling the history
+        self.can_extend = MD.can_extend(cfg)
+        # debug counters (reset per serve): host-side eager samples should
+        # number one per TURN (prefill/extend logits), never per token
+        self.last_host_samples = 0
 
         donate = (2,) if donate_state else ()
         self._prefill = jax.jit(
@@ -128,15 +159,28 @@ class Engine:
             logits, ns = serve_step(p, tok, st, cfg)
             return jnp.argmax(logits, -1).astype(jnp.int32), ns
 
+        def _sampled_step(p, tok, st, base, uid, step, temp, top_k, top_p):
+            # fully fused per-slot sampling: logits never leave the device,
+            # each slot's key is fold_in(fold_in(base, uid), step) — a pure
+            # function of (seed, request, request-local counter), so co-
+            # scheduling cannot perturb sampled outputs
+            logits, ns = serve_step(p, tok, st, cfg)
+            keys = slot_keys(base, uid, step)
+            return sample(keys, logits, temp, top_k, top_p), ns
+
         self._step_greedy = jax.jit(_greedy_step, donate_argnums=donate)
+        self._step_sampled = jax.jit(_sampled_step, donate_argnums=donate)
         self._prefill_slot = jax.jit(
             lambda p, tk, st, slot: MD.prefill_into_slot(
                 p, tk, cfg, n_cache, st, slot),
             donate_argnums=donate)
+        self._extend_slot = jax.jit(
+            lambda p, tk, st, slot: MD.extend_slot(p, tk, cfg, st, slot),
+            donate_argnums=donate)
 
     # ------------------------------------------------------------------
     def generate(self, prompts: np.ndarray, max_new: int,
-                 sampler: SamplerConfig = SamplerConfig(),
+                 sampler: SamplerParams = SamplerParams(),
                  extras: Optional[dict] = None, seed: int = 0
                  ) -> GenerateResult:
         """prompts: (B, S) int32 (right-padded prompts share one layout)."""
@@ -144,7 +188,11 @@ class Engine:
         assert S + max_new <= self.usable, \
             "cache too small (tail cache_slack rows are reserved)"
         extras = extras or {}
-        key = jax.random.key(seed)
+        base = jax.random.key(seed)
+        uid_a = jnp.arange(B, dtype=jnp.int32)
+        temp = jnp.full((B,), sampler.temperature, jnp.float32)
+        top_k = jnp.full((B,), sampler.top_k, jnp.int32)
+        top_p = jnp.full((B,), sampler.top_p, jnp.float32)
 
         t0 = time.perf_counter()
         logits, state = self._prefill(self.params, jnp.asarray(prompts),
@@ -159,7 +207,8 @@ class Engine:
         out = np.full((B, max_new), pad, np.int32)
         done = np.zeros((B,), bool)
         ngen = np.zeros((B,), np.int64)
-        tok = sample(key, logits, sampler)
+        tok = sample(slot_keys(base, uid_a, jnp.zeros((B,), jnp.int32)),
+                     logits, temp, top_k, top_p)
         for i in range(max_new):
             # finished slots keep decoding lock-step, but their sampled
             # tokens are garbage — pad them so ``tokens`` is trustworthy
@@ -170,12 +219,14 @@ class Engine:
                 done |= tok_np == self.eos_id
                 if done.all():
                     break
-            key, sub = jax.random.split(key)
             if greedy:
                 tok, state = self._step_greedy(self.params, tok, state)
             else:
-                logits, state = self._step(self.params, tok, state)
-                tok = sample(sub, logits, sampler)
+                # one fused dispatch per token: row r of step i+1 samples
+                # with key fold_in(fold_in(base, r), i + 1)
+                tok, state = self._step_sampled(
+                    self.params, tok, state, base, uid_a,
+                    jnp.full((B,), i + 1, jnp.int32), temp, top_k, top_p)
         jax.block_until_ready(tok)
         t2 = time.perf_counter()
         n_steps = int(ngen.max()) or 1
@@ -184,7 +235,7 @@ class Engine:
                               tpot_ms=1e3 * (t2 - t1) / n_steps)
 
     # ------------------------------------------------------------------
-    # Continuous batching
+    # Continuous batching over sessions
     # ------------------------------------------------------------------
     def _zero_state(self, n_slots: int):
         """All-slots-empty decode state (valid: every mask False, t=0)."""
@@ -195,54 +246,185 @@ class Engine:
             self.params, dummy)
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
 
-    def serve(self, requests: Sequence[Request], *, n_slots: int,
+    def serve(self, requests: Sequence[Session], *, n_slots: int,
               mode: str = "continuous",
-              sampler: SamplerConfig = SamplerConfig(),
-              seed: int = 0, verbose: bool = False) -> ServeResult:
-        """Replay a request trace through the slot scheduler.
+              sampler: SamplerParams = SamplerParams(),
+              seed: int = 0, verbose: bool = False,
+              on_token: Optional[Callable[[int, int], None]] = None,
+              reuse: str = "extend") -> ServeResult:
+        """Replay a session trace through the slot scheduler.
 
         mode="continuous": a freed slot immediately admits the next pending
-        request (prefill splice) while other slots keep decoding.
+        session (prefill splice) while other slots keep decoding.
         mode="static": admission only when ALL slots are free — lock-step
         waves, the static-batching baseline.
 
-        Request objects are mutated in place (lifecycle timestamps +
+        ``sampler`` is the default for turns without their own
+        :class:`SamplerParams`; ``seed`` anchors the per-request RNG
+        (fold_in(fold_in(key(seed), uid), step)). ``on_token(uid, token)``
+        is invoked for every sampled token as it is produced (streaming).
+        ``reuse`` picks the multi-turn admission primitive: "extend"
+        (default) appends each later turn's delta onto the slot's live KV
+        rows and index via ``model.extend_slot`` — automatic fallback to
+        re-prefill on architectures without an extend path — while
+        "reprefill" always rebuilds from the concatenated history (the
+        baseline ``benchmarks/session_reuse.py`` compares against).
+
+        Session objects are mutated in place (lifecycle timestamps +
         generated tokens); pass fresh copies to compare modes. Greedy
-        outputs per request are identical across modes and to
-        ``generate`` of the request alone (see module docstring).
+        outputs per session are identical across modes, across ``reuse``
+        choices (up to policy-state graft scheduling) and to ``generate``
+        of the session alone; sampled outputs are identical across
+        co-scheduling/admission permutations (see module docstring).
         """
         assert mode in ("continuous", "static"), mode
+        assert reuse in ("extend", "reprefill"), reuse
         assert not (self.cfg.is_encdec or self.cfg.n_patches), \
             "streaming admission serves text-only requests"
-        for r in requests:
-            assert r.prompt_len + r.max_new <= self.usable, \
-                f"req {r.uid}: cache too small (tail cache_slack reserved)"
+        for s in requests:
+            assert s.total_len() <= self.usable, \
+                f"session {s.uid}: cache too small (tail cache_slack " \
+                f"reserved; total prompt+gen across turns must fit)"
+            assert all(t.max_new >= 1 for t in s.turns), \
+                f"session {s.uid}: every turn generates at least one " \
+                f"token (its first sample IS its generation; max_new=0 " \
+                f"would emit a token the total_len() guard never counted)"
+        use_extend = reuse == "extend" and self.can_extend
 
         sched = Scheduler(n_slots)
         sched.submit_all(requests)
         state = self._zero_state(n_slots)
+        base = jax.random.key(seed)
         cur = np.zeros((n_slots,), np.int32)
         active = np.zeros((n_slots,), bool)
         remaining = np.zeros((n_slots,), np.int64)
-        key = jax.random.key(seed)
+        uid = np.zeros((n_slots,), np.int32)
+        stepc = np.zeros((n_slots,), np.int32)   # per-session sample counter
+        temp = np.zeros((n_slots,), np.float32)
+        top_k = np.zeros((n_slots,), np.int32)
+        top_p = np.ones((n_slots,), np.float32)
+        # an all-greedy trace keeps the leaner argmax-fused step
+        all_greedy = sampler.temperature <= 0.0 and all(
+            (t.sampling is None or t.sampling.temperature <= 0.0)
+            for s in requests for t in s.turns)
         n_steps = 0
         decode_s = 0.0
+        idle_s = 0.0
+        self.last_host_samples = 0
+        # uid/temperature/top-k/top-p only change at turn transitions —
+        # cache their device copies so the hot loop uploads just the token
+        # vector and the per-slot sample counter each step
+        slots_dirty = True
+        dev_slots = None
         t0 = time.perf_counter()
 
         def now() -> float:
             return time.perf_counter() - t0
 
-        def retire(slot: int, req: Request, tok: int) -> bool:
-            if remaining[slot] <= 0 or \
-                    (self.eos_id is not None and tok == self.eos_id):
-                sched.finish(slot, now())
-                active[slot] = False
-                cur[slot] = 0
-                if verbose:
-                    print(f"[serve:{mode}] t={now():7.3f}s finish "
-                          f"req{req.uid} ({len(req.tokens)} tok)")
-                return True
-            return False
+        def begin_turn(slot: int, sess: Session) -> jax.Array:
+            """Run this turn's admission primitive; returns its last-
+            position logits (1, V). Turn 0 prefills into the freed slot;
+            later turns extend the occupied slot (or re-prefill the
+            concatenated history when extension is unavailable/disabled).
+            The delta always leads with the previous turn's final sampled
+            token — it was never fed back, so its KV row is still absent.
+            """
+            nonlocal state, slots_dirty
+            slots_dirty = True
+            turn = sess.turns[sess.cur]
+            turn.started_s = now()
+            remaining[slot] = turn.max_new
+            sp = turn.sampling if turn.sampling is not None else sampler
+            temp[slot] = sp.temperature
+            top_k[slot] = sp.top_k
+            top_p[slot] = sp.top_p
+            if sess.cur == 0:
+                logits, state = self._prefill_slot(
+                    self.params, jnp.asarray(turn.prompt[None]), state,
+                    jnp.int32(slot))
+            elif use_extend:
+                prev = sess.turns[sess.cur - 1]
+                delta = np.concatenate([
+                    np.asarray(prev.sampled[-1:], np.int32),
+                    np.asarray(turn.prompt, np.int32)])
+                logits, state = self._extend_slot(
+                    self.params, jnp.asarray(delta[None]), state,
+                    jnp.int32(slot))
+            else:
+                hist = sess.history_tokens(sess.cur)
+                logits, state = self._prefill_slot(
+                    self.params, jnp.asarray(hist[None]), state,
+                    jnp.int32(slot))
+            if verbose:
+                kind = ("admit" if sess.cur == 0 else
+                        "extend" if use_extend else "reprefill")
+                print(f"[serve:{mode}] t={now():7.3f}s {kind} "
+                      f"sess{sess.uid} turn {sess.cur + 1}/{sess.n_turns} "
+                      f"(S={turn.prompt_len}, gen={turn.max_new}) "
+                      f"-> slot {slot}")
+            return logits
+
+        def first_token(slot: int, turn: Turn, logits) -> int:
+            """Sample this turn's first token from the prefill/extend
+            logits (host-side — once per TURN, not per token) with the same
+            (uid, step) key the fused loop would use."""
+            keys = slot_keys(base, jnp.asarray([uid[slot]], jnp.int32),
+                             jnp.asarray([stepc[slot]], jnp.int32))
+            tok = int(np.asarray(sample(
+                keys, logits, temp[slot:slot + 1], top_k[slot:slot + 1],
+                top_p[slot:slot + 1]))[0])
+            self.last_host_samples += 1
+            stepc[slot] += 1
+            cur[slot] = tok
+            return tok
+
+        def emit(slot: int, sess: Session, turn: Turn, tok: int) -> bool:
+            """Record one sampled token; True when it ends the turn
+            (budget, EOS, or a stop-sequence match — the matched suffix is
+            trimmed from the public ``tokens`` but stays in ``sampled``:
+            those tokens are in the KV cache and the next turn's history).
+            """
+            turn.sampled.append(tok)
+            turn.tokens.append(tok)
+            if turn.first_token_s is None:
+                turn.first_token_s = now()
+            if on_token is not None:
+                on_token(sess.uid, tok)
+            remaining[slot] -= 1
+            eos = turn.eos_id if turn.eos_id is not None else self.eos_id
+            done = remaining[slot] <= 0 or (eos is not None and tok == eos)
+            for seq in turn.stop:
+                L = len(seq)
+                if L and len(turn.sampled) >= L and \
+                        tuple(turn.sampled[-L:]) == tuple(seq):
+                    del turn.tokens[-L:]
+                    done = True
+                    break
+            if done:
+                turn.finished_s = now()
+            return done
+
+        def advance(slot: int) -> None:
+            """Current turn ended: start the next turn in place (the slot —
+            and its KV/index — is retained) or retire the session."""
+            sess = sched.slot_of(slot)
+            while True:
+                sess.cur += 1
+                if sess.cur >= sess.n_turns:
+                    sched.finish(slot, now())
+                    active[slot] = False
+                    cur[slot] = 0
+                    if verbose:
+                        ntok = sum(len(t.tokens) for t in sess.turns)
+                        print(f"[serve:{mode}] t={now():7.3f}s finish "
+                              f"sess{sess.uid} ({ntok} tok, "
+                              f"{sess.n_turns} turns)")
+                    return
+                turn = sess.turns[sess.cur]
+                logits = begin_turn(slot, sess)
+                if not emit(slot, sess, turn, first_token(slot, turn,
+                                                          logits)):
+                    return
 
         while not sched.all_done:
             # ---- admission phase --------------------------------------
@@ -250,62 +432,67 @@ class Engine:
                 for slot in sched.free_slots():
                     if sched.next_ready(now()) is None:
                         break
-                    req = sched.admit(slot, now())
-                    logits, state = self._prefill_slot(
-                        self.params, jnp.asarray(req.prompt[None]), state,
-                        jnp.int32(slot))
-                    key, sub = jax.random.split(key)
-                    tok0 = int(np.asarray(sample(sub, logits, sampler))[0])
-                    req.tokens.append(tok0)
-                    req.first_token_s = now()
-                    cur[slot] = tok0
+                    sess = sched.admit(slot, now())
+                    sess.cur = 0
+                    uid[slot] = sess.uid
+                    stepc[slot] = 0
                     active[slot] = True
-                    remaining[slot] = req.max_new - 1
-                    if verbose:
-                        print(f"[serve:{mode}] t={now():7.3f}s admit "
-                              f"req{req.uid} (S={req.prompt_len}, "
-                              f"gen={req.max_new}) -> slot {slot}")
-                    retire(slot, req, tok0)
+                    turn = sess.turns[0]
+                    logits = begin_turn(slot, sess)
+                    if emit(slot, sess, turn, first_token(slot, turn,
+                                                          logits)):
+                        advance(slot)
             if not active.any():
                 if sched.pending:
-                    # open-loop trace: head not arrived yet — idle briefly
+                    # open-loop trace: nothing can happen before the FIFO
+                    # head arrives — sleep until exactly then (no 10 ms
+                    # busy-poll) and book the wait as trace idleness, not
+                    # engine time
                     wait = (sched.next_arrival_s() or 0.0) - now()
-                    time.sleep(min(max(wait, 0.0), 0.01))
+                    if wait > 0:
+                        time.sleep(wait)
+                        idle_s += wait
                 continue
 
             # ---- one lock-step decode over the live slots --------------
             t_step = time.perf_counter()
-            key, sub = jax.random.split(key)
-            if sampler.temperature <= 0.0:
+            if all_greedy:
                 tok_d, state = self._step_greedy(self.params,
                                                  jnp.asarray(cur), state)
-                tok = np.asarray(tok_d)
             else:
-                logits, state = self._step(self.params, jnp.asarray(cur),
-                                           state)
-                tok = np.asarray(sample(sub, logits, sampler))
+                if slots_dirty:
+                    dev_slots = (jnp.asarray(uid), jnp.asarray(temp),
+                                 jnp.asarray(top_k), jnp.asarray(top_p))
+                    slots_dirty = False
+                d_uid, d_temp, d_top_k, d_top_p = dev_slots
+                tok_d, state = self._step_sampled(
+                    self.params, jnp.asarray(cur), state, base,
+                    d_uid, jnp.asarray(stepc), d_temp, d_top_k, d_top_p)
+            tok = np.asarray(tok_d)
             n_steps += 1
             decode_s += time.perf_counter() - t_step
             for slot in range(n_slots):
                 if not active[slot]:
                     continue
-                req = sched.slot_of(slot)
+                sess = sched.slot_of(slot)
+                turn = sess.turns[sess.cur]
                 tk = int(tok[slot])
-                req.tokens.append(tk)
-                remaining[slot] -= 1
+                stepc[slot] += 1
                 cur[slot] = tk
-                retire(slot, req, tk)
+                if emit(slot, sess, turn, tk):
+                    advance(slot)
 
         jax.block_until_ready(state["t"])
         wall = now()
         done = sched.finished
-        total = sum(len(r.tokens) for r in done.values())
-        lats = np.asarray([r.latency_s for r in done.values()])
-        ttfts = np.asarray([r.ttft_s for r in done.values()])
+        total = sum(len(t.tokens) for s in done.values() for t in s.turns)
+        lats = np.asarray([s.latency_s for s in done.values()])
+        ttfts = np.asarray([s.ttft_s for s in done.values()])
+        busy = max(wall - idle_s, 1e-9)
         return ServeResult(
             mode=mode, requests=done, wall_s=wall, decode_s=decode_s,
-            n_steps=n_steps, total_new_tokens=total,
-            tokens_per_s=total / wall if wall > 0 else 0.0,
+            idle_s=idle_s, n_steps=n_steps, total_new_tokens=total,
+            tokens_per_s=total / busy,
             p50_latency_s=float(np.percentile(lats, 50)) if len(lats) else 0.0,
             p99_latency_s=float(np.percentile(lats, 99)) if len(lats) else 0.0,
             mean_ttft_s=float(ttfts.mean()) if len(ttfts) else 0.0)

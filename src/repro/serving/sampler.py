@@ -1,4 +1,27 @@
-"""Token sampling: greedy / temperature / top-k / nucleus."""
+"""Per-slot vectorized token sampling: greedy / temperature / top-k / top-p.
+
+The sampler is a pure function of ``(keys, logits, temp, top_k, top_p)``
+where every parameter is a length-``B`` vector — one entry per serving slot
+— so a greedy request and a temperature-0.9/top-p-0.9 request can share one
+decode batch and the whole thing traces into the engine's single jitted
+decode step (one dispatch and one (B,)-int host transfer per token; no
+eager host-side sampling in the hot loop).
+
+Per-request determinism rides on :func:`request_key`: slot keys are derived
+as ``fold_in(fold_in(base_key, uid), step)`` — a pure function of the serve
+seed, the request id and the request's own sample counter — so sampled
+outputs are independent of co-scheduled requests, slot assignment and
+admission order (the ``serve == serve`` invariant tests/test_session.py
+checks), extending the greedy bit-identity contract to ``temperature > 0``.
+
+Row semantics (all applied per slot):
+
+* ``temp <= 0``  -> argmax (greedy); the categorical draw for that row is
+  discarded via ``jnp.where``, so greedy rows cost nothing extra at trace
+  level and stay bit-identical to ``jnp.argmax``;
+* ``top_k == 0`` -> top-k filtering disabled for that row;
+* ``top_p >= 1`` -> nucleus filtering disabled for that row.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -10,26 +33,79 @@ _NEG = -1e30
 
 
 @dataclasses.dataclass(frozen=True)
-class SamplerConfig:
-    temperature: float = 0.0      # 0 -> greedy
+class SamplerParams:
+    """Per-request sampling spec (a Turn carries one of these)."""
+
+    temperature: float = 0.0      # <= 0 -> greedy
     top_k: int = 0                # 0 -> disabled
-    top_p: float = 1.0            # 1 -> disabled
+    top_p: float = 1.0            # >= 1 -> disabled
 
 
-def sample(key, logits: jax.Array, sc: SamplerConfig) -> jax.Array:
-    """logits: (B, V) -> (B,) int32."""
-    if sc.temperature <= 0.0:
-        return jnp.argmax(logits, -1).astype(jnp.int32)
-    logits = logits / sc.temperature
-    if sc.top_k:
-        kth = jax.lax.top_k(logits, sc.top_k)[0][..., -1:]
-        logits = jnp.where(logits < kth, _NEG, logits)
-    if sc.top_p < 1.0:
-        sorted_l = jnp.sort(logits, -1)[..., ::-1]
-        probs = jax.nn.softmax(sorted_l, -1)
-        csum = jnp.cumsum(probs, -1)
-        # smallest set with cumulative prob >= top_p
-        cutoff_idx = jnp.sum(csum < sc.top_p, -1, keepdims=True)
-        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx, -1)
-        logits = jnp.where(logits < cutoff, _NEG, logits)
-    return jax.random.categorical(key, logits, -1).astype(jnp.int32)
+# Back-compat alias: the pre-session API called the (identical) global
+# sampling spec SamplerConfig.
+SamplerConfig = SamplerParams
+
+
+def request_key(base_key, uid, step):
+    """Deterministic per-request sampling key: fold the request uid and the
+    request's own sample counter into the serve-level base key. uid/step may
+    be traced scalars (the engine vmaps this over the slot axis inside the
+    jitted decode step)."""
+    return jax.random.fold_in(jax.random.fold_in(base_key, uid), step)
+
+
+def slot_keys(base_key, uid: jax.Array, step: jax.Array) -> jax.Array:
+    """(B,) batch of :func:`request_key` — one key per serving slot."""
+    return jax.vmap(lambda u, s: request_key(base_key, u, s))(uid, step)
+
+
+def top_k_mask(logits: jax.Array, k: jax.Array) -> jax.Array:
+    """Per-row top-k keep mask. logits: (B, V); k: (B,) int32, 0 = keep all.
+
+    Keeps the k highest logits of each row (ties at the k-th value are all
+    kept — with continuous logits that is exactly k entries).
+    """
+    V = logits.shape[-1]
+    sorted_desc = jnp.sort(logits, -1)[..., ::-1]
+    kk = jnp.where(k > 0, jnp.clip(k, 1, V), V)
+    kth = jnp.take_along_axis(sorted_desc, (kk - 1)[:, None], -1)  # (B, 1)
+    return logits >= kth
+
+
+def top_p_mask(logits: jax.Array, p: jax.Array) -> jax.Array:
+    """Per-row nucleus keep mask. logits: (B, V); p: (B,), >= 1 = keep all.
+
+    Keeps the smallest set of rows' logits whose softmax mass reaches ``p``
+    — the set always contains the row argmax, so a sample exists even for
+    tiny ``p``.
+    """
+    sorted_desc = jnp.sort(logits, -1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_desc, -1)
+    csum = jnp.cumsum(probs, -1)
+    # smallest prefix with cumulative prob >= p (index of its last element)
+    cutoff_idx = jnp.sum(csum < jnp.clip(p, 0.0, 1.0)[:, None], -1,
+                         keepdims=True)
+    cutoff = jnp.take_along_axis(sorted_desc, cutoff_idx, -1)      # (B, 1)
+    return logits >= cutoff
+
+
+def sample(keys: jax.Array, logits: jax.Array, temp: jax.Array,
+           top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Per-slot vectorized sampling. keys: (B,) PRNG keys; logits: (B, V);
+    temp/top_k/top_p: (B,) per-slot parameters (scalars broadcast).
+    Returns (B,) int32 tokens.
+    """
+    B, V = logits.shape
+    temp = jnp.broadcast_to(jnp.asarray(temp, jnp.float32), (B,))
+    top_k = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (B,))
+    top_p = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (B,))
+
+    greedy_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temp, 1e-6)[:, None]
+    # top-k is scale-invariant; top-p is defined over the TEMPERED dist
+    keep = top_k_mask(scaled, top_k) & top_p_mask(scaled, top_p)
+    masked = jnp.where(keep, scaled, _NEG)
+    sampled = jax.vmap(
+        lambda k, l: jax.random.categorical(k, l, -1))(keys, masked)
+    return jnp.where(temp <= 0.0, greedy_tok,
+                     sampled.astype(jnp.int32)).astype(jnp.int32)

@@ -1,51 +1,126 @@
-"""Request scheduler for the continuous-batching engine.
+"""Session scheduler for the continuous-batching engine.
 
-The scheduler is pure host-side bookkeeping — it never touches device
-state. It owns:
+The scheduling unit is a **Session** — one multi-turn conversation. Each
+:class:`Turn` carries its own prompt *delta* (only the tokens new in that
+turn), generation budget, stop spec and :class:`~repro.serving.sampler.
+SamplerParams`, so heterogeneous sampling coexists inside one decode batch.
+A session occupies one decode slot from admission until its LAST turn
+finishes: turn boundaries never release the slot, which is what lets the
+engine append the next turn's delta onto the slot's live KV cache and index
+(``model.extend_slot``) instead of re-prefilling the whole history — the
+paper's lazy-update streaming story applied across turns.
 
-* a FIFO **request queue** (arrival-time gated, so a Poisson trace replays
+The scheduler itself is pure host-side bookkeeping — it never touches
+device state. It owns:
+
+* a FIFO **session queue** (arrival-time gated, so a Poisson trace replays
   faithfully in wall-clock time);
-* the **slot table**: which request occupies which of the engine's ``B``
-  decode slots, plus per-slot admit/finish timestamps;
-* per-request **lifecycle records** (queued -> running -> finished) with the
-  timing fields the latency percentiles are computed from.
+* the **slot table**: which session occupies which of the engine's ``B``
+  decode slots;
+* per-session/turn **lifecycle records** (queued -> running -> finished)
+  with the timing fields latency/TTFT percentiles are computed from.
 
 The engine drives it: ``next_ready`` + ``admit`` when a slot frees,
-``finish`` when a slot's request completes. Admission *policy* (continuous
-vs static waves) lives in the engine — the scheduler only answers "who is
+``finish`` when a session's final turn completes. Turn *transitions* are
+engine-internal (the slot is retained). Admission policy (continuous vs
+static waves) lives in the engine — the scheduler only answers "who is
 next" and "what is free".
+
+``Request(uid, prompt, max_new, ...)`` remains as a factory building a
+single-turn Session, so single-shot traces (and the pre-session benchmarks)
+read exactly as before.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.serving.sampler import SamplerParams
+
 
 @dataclasses.dataclass
-class Request:
-    """One generation request in a serving trace."""
+class Turn:
+    """One turn of a session: a prompt delta plus its generation spec.
 
-    uid: int
-    prompt: np.ndarray            # (S,) int32
+    ``prompt`` holds ONLY this turn's new tokens; the session history
+    (earlier prompts + everything sampled, including tokens later trimmed
+    by a stop match) is implicit in the slot's KV cache.
+    """
+
+    prompt: np.ndarray                 # (S,) int32 delta tokens
     max_new: int
-    arrival_s: float = 0.0        # offset from trace start (0 = offline)
+    sampling: Optional[SamplerParams] = None   # None -> serve() default
+    stop: Tuple[Tuple[int, ...], ...] = ()     # stop token sequences
+    eos_id: Optional[int] = None       # per-turn EOS override (None -> engine)
 
-    # lifecycle (filled by the scheduler / engine) ------------------------
-    admitted_s: Optional[float] = None
+    # lifecycle (filled by the engine) ------------------------------------
+    started_s: Optional[float] = None  # prefill/extend for this turn began
     first_token_s: Optional[float] = None
     finished_s: Optional[float] = None
     tokens: List[int] = dataclasses.field(default_factory=list)
+    # every sampled token, pre-stop-trim — the exact device-side history
+    # (``tokens`` may drop a matched stop suffix; the KV cache cannot)
+    sampled: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
 
     @property
+    def ttft_s(self) -> Optional[float]:
+        """First token relative to the turn's own start (for turn >= 2 this
+        is the extend-vs-reprefill number ``benchmarks/session_reuse.py``
+        measures)."""
+        if self.first_token_s is None or self.started_s is None:
+            return None
+        return self.first_token_s - self.started_s
+
+
+@dataclasses.dataclass
+class Session:
+    """One conversation in a serving trace (single-turn == old Request)."""
+
+    uid: int
+    turns: List[Turn]
+    arrival_s: float = 0.0        # offset from trace start (0 = offline)
+
+    # lifecycle (filled by the scheduler / engine) ------------------------
+    admitted_s: Optional[float] = None
+    finished_s: Optional[float] = None
+    cur: int = 0                  # index of the active turn
+
+    # -- compat / convenience views --------------------------------------
+    @property
+    def prompt(self) -> np.ndarray:
+        return self.turns[0].prompt
+
+    @property
+    def prompt_len(self) -> int:
+        return self.turns[0].prompt_len
+
+    @property
+    def max_new(self) -> int:
+        return self.turns[0].max_new
+
+    @property
+    def tokens(self) -> List[int]:
+        """Generated tokens across all turns (stop-trimmed), flattened."""
+        return [tk for t in self.turns for tk in t.tokens]
+
+    @property
+    def first_token_s(self) -> Optional[float]:
+        return self.turns[0].first_token_s
+
+    @property
+    def n_turns(self) -> int:
+        return len(self.turns)
+
+    @property
     def latency_s(self) -> Optional[float]:
-        """Queueing + prefill + decode: finish relative to arrival."""
+        """Queueing + all turns: finish relative to arrival."""
         if self.finished_s is None:
             return None
         return self.finished_s - self.arrival_s
@@ -56,25 +131,53 @@ class Request:
             return None
         return self.first_token_s - self.arrival_s
 
+    def total_len(self) -> int:
+        """Cache rows the session needs: every delta + every budget (the
+        engine admits only sessions with ``total_len() <= usable_rows``)."""
+        return sum(t.prompt_len + t.max_new for t in self.turns)
+
+    def history_tokens(self, upto: int) -> np.ndarray:
+        """Device-side history BEFORE turn ``upto``'s generation: deltas
+        interleaved with raw sampled tokens of turns ``< upto``, plus turn
+        ``upto``'s own delta — exactly the concatenation the re-prefill
+        fallback/oracle feeds a fresh slot."""
+        parts: List[np.ndarray] = []
+        for t in self.turns[:upto]:
+            parts.append(np.asarray(t.prompt, np.int32))
+            parts.append(np.asarray(t.sampled, np.int32))
+        parts.append(np.asarray(self.turns[upto].prompt, np.int32))
+        return np.concatenate(parts) if parts else np.zeros((0,), np.int32)
+
+
+def Request(uid: int, prompt: np.ndarray, max_new: int,
+            arrival_s: float = 0.0,
+            sampling: Optional[SamplerParams] = None,
+            stop: Tuple[Tuple[int, ...], ...] = ()) -> Session:
+    """Single-turn Session factory — the pre-session ``Request`` surface."""
+    return Session(uid=uid, arrival_s=arrival_s,
+                   turns=[Turn(prompt=np.asarray(prompt, np.int32),
+                               max_new=max_new, sampling=sampling,
+                               stop=tuple(tuple(s) for s in stop))])
+
 
 class Scheduler:
-    """FIFO queue + slot table for a fixed-capacity decode batch."""
+    """FIFO session queue + slot table for a fixed-capacity decode batch."""
 
     def __init__(self, n_slots: int):
         assert n_slots >= 1
         self.n_slots = n_slots
-        self._queue: Deque[Request] = deque()
-        self._slots: List[Optional[Request]] = [None] * n_slots
-        self.finished: Dict[int, Request] = {}
+        self._queue: Deque[Session] = deque()
+        self._slots: List[Optional[Session]] = [None] * n_slots
+        self.finished: Dict[int, Session] = {}
         self.n_admitted = 0
 
     # -- queue -------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self._queue.append(req)
+    def submit(self, sess: Session) -> None:
+        self._queue.append(sess)
 
-    def submit_all(self, reqs: Sequence[Request]) -> None:
-        for r in sorted(reqs, key=lambda r: r.arrival_s):
-            self.submit(r)
+    def submit_all(self, sessions: Sequence[Session]) -> None:
+        for s in sorted(sessions, key=lambda s: s.arrival_s):
+            self.submit(s)
 
     @property
     def pending(self) -> int:
@@ -91,35 +194,35 @@ class Scheduler:
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s is None]
 
-    def slot_of(self, slot: int) -> Optional[Request]:
+    def slot_of(self, slot: int) -> Optional[Session]:
         return self._slots[slot]
 
     def next_arrival_s(self) -> Optional[float]:
         return self._queue[0].arrival_s if self._queue else None
 
-    def next_ready(self, now_s: float) -> Optional[Request]:
+    def next_ready(self, now_s: float) -> Optional[Session]:
         """Peek the FIFO head if it has arrived by ``now_s``."""
         if self._queue and self._queue[0].arrival_s <= now_s:
             return self._queue[0]
         return None
 
     # -- slot lifecycle ------------------------------------------------------
-    def admit(self, slot: int, now_s: float) -> Request:
-        """Pop the FIFO head into ``slot``."""
+    def admit(self, slot: int, now_s: float) -> Session:
+        """Pop the FIFO head into ``slot`` (held until its LAST turn)."""
         assert self._slots[slot] is None, f"slot {slot} busy"
-        req = self._queue.popleft()
-        req.admitted_s = now_s
-        self._slots[slot] = req
+        sess = self._queue.popleft()
+        sess.admitted_s = now_s
+        self._slots[slot] = sess
         self.n_admitted += 1
-        return req
+        return sess
 
-    def finish(self, slot: int, now_s: float) -> Request:
-        req = self._slots[slot]
-        assert req is not None, f"slot {slot} already free"
-        req.finished_s = now_s
+    def finish(self, slot: int, now_s: float) -> Session:
+        sess = self._slots[slot]
+        assert sess is not None, f"slot {slot} already free"
+        sess.finished_s = now_s
         self._slots[slot] = None
-        self.finished[req.uid] = req
-        return req
+        self.finished[sess.uid] = sess
+        return sess
 
 
 # ---------------------------------------------------------------------------
@@ -128,8 +231,9 @@ class Scheduler:
 def make_trace(rng: np.random.Generator, n_requests: int, vocab: int,
                prompt_lens: Sequence[int] = (64, 256, 1024),
                gen_lens: Sequence[int] = (8, 64),
-               rate_rps: float = 0.0) -> List[Request]:
-    """Synthesise a mixed-length request trace.
+               rate_rps: float = 0.0) -> List[Session]:
+    """Synthesise a mixed-length SINGLE-turn trace (the classic benchmark
+    driver).
 
     Prompt lengths and generation budgets are drawn uniformly from the given
     choices; ``rate_rps > 0`` spaces arrivals by exponential gaps (a Poisson
@@ -148,3 +252,37 @@ def make_trace(rng: np.random.Generator, n_requests: int, vocab: int,
             max_new=int(rng.choice(list(gen_lens))),
             arrival_s=float(arrivals[i])))
     return reqs
+
+
+def make_session_trace(rng: np.random.Generator, n_sessions: int, vocab: int,
+                       n_turns: int = 2,
+                       first_lens: Sequence[int] = (256, 1024),
+                       delta_lens: Sequence[int] = (32, 128),
+                       gen_lens: Sequence[int] = (8, 64),
+                       temperatures: Sequence[float] = (0.0, 0.8),
+                       rate_rps: float = 0.0) -> List[Session]:
+    """Synthesise a MULTI-turn chat trace with heterogeneous sampling.
+
+    Turn 1 draws from ``first_lens`` (the long system-prompt/history), later
+    turns from ``delta_lens`` (short follow-ups — the regime where KV/index
+    reuse pays). Each turn draws its own temperature from ``temperatures``
+    (0.0 entries make greedy turns), so mixed greedy/sampled batches arise
+    naturally.
+    """
+    gaps = (rng.exponential(1.0 / rate_rps, size=n_sessions)
+            if rate_rps > 0 else np.zeros(n_sessions))
+    arrivals = np.cumsum(gaps)
+    sessions = []
+    for i in range(n_sessions):
+        turns = []
+        for j in range(n_turns):
+            S = int(rng.choice(list(first_lens if j == 0 else delta_lens)))
+            temp = float(rng.choice(list(temperatures)))
+            turns.append(Turn(
+                prompt=rng.integers(0, vocab, size=(S,)).astype(np.int32),
+                max_new=int(rng.choice(list(gen_lens))),
+                sampling=SamplerParams(temperature=temp,
+                                       top_k=50 if temp > 0 else 0)))
+        sessions.append(Session(uid=i, turns=turns,
+                                arrival_s=float(arrivals[i])))
+    return sessions

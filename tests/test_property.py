@@ -12,6 +12,11 @@ These sweep randomized shapes/contents far beyond the fixed unit tests:
   decode safe).
 * MoE dispatch: per-(row, expert) capacity respected; combine weights
   nonnegative and ≤1; dropped tokens only when over capacity.
+* Per-slot vectorized sampler: top-k keeps exactly k logits live, the
+  top-p mask always contains the row argmax, ``temperature <= 0`` equals
+  argmax, and vectorized per-slot parameters match per-row scalar calls
+  (row independence — the property that lets mixed greedy/sampled batches
+  share one dispatch).
 """
 import jax
 import jax.numpy as jnp
@@ -29,6 +34,7 @@ from repro.core import (build_index, chunk_sequence, spherical_kmeans,
                         synthetic_delimiter_table)
 from repro.core.pooling import l2_normalize
 from repro.core.update import lazy_update
+from repro.serving.sampler import sample, slot_keys, top_k_mask, top_p_mask
 
 SETTINGS = dict(max_examples=20, deadline=None)
 
@@ -191,3 +197,104 @@ def test_moe_dispatch_capacity(s, e, k, seed):
     for row in range(e):
         toks = tt[row][real[row]]
         assert len(set(toks.tolist())) == len(toks)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot vectorized sampler invariants
+# ---------------------------------------------------------------------------
+def _rand_logits(rng, b, v):
+    """Logits with distinct values per row (ties are measure-zero but a
+    shrunk hypothesis example must not manufacture them)."""
+    base = rng.standard_normal((b, v)).astype(np.float32)
+    jitter = rng.permuted(np.arange(b * v).reshape(b, v), axis=1)
+    return jnp.asarray(base + 1e-4 * jitter, jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(min_value=1, max_value=6),
+    v=st.integers(min_value=4, max_value=128),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sampler_topk_keeps_exactly_k(b, v, seed):
+    rng = np.random.default_rng(seed)
+    logits = _rand_logits(rng, b, v)
+    ks = rng.integers(0, v + 1, size=(b,))          # 0 = disabled
+    mask = np.asarray(top_k_mask(logits, jnp.asarray(ks, jnp.int32)))
+    for r in range(b):
+        expect = v if ks[r] == 0 else min(int(ks[r]), v)
+        assert mask[r].sum() == expect
+        # the kept set is the top-k by value
+        order = np.argsort(np.asarray(logits)[r])[::-1]
+        assert mask[r][order[:expect]].all()
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(min_value=1, max_value=6),
+    v=st.integers(min_value=4, max_value=128),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sampler_topp_mask_contains_argmax_and_covers_p(b, v, seed):
+    rng = np.random.default_rng(seed)
+    logits = _rand_logits(rng, b, v)
+    ps = rng.uniform(0.0, 1.0, size=(b,)).astype(np.float32)
+    mask = np.asarray(top_p_mask(logits, jnp.asarray(ps)))
+    ln = np.asarray(logits)
+    probs = np.exp(ln - ln.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    for r in range(b):
+        assert mask[r][ln[r].argmax()], "nucleus must contain the argmax"
+        # kept mass reaches p, and is minimal (dropping the smallest kept
+        # logit would fall below p)
+        kept = probs[r][mask[r]]
+        assert kept.sum() >= ps[r] - 1e-5
+        if mask[r].sum() > 1:
+            assert kept.sum() - kept.min() < ps[r] + 1e-5
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(min_value=1, max_value=6),
+    v=st.integers(min_value=4, max_value=128),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sampler_zero_temperature_is_argmax(b, v, seed):
+    rng = np.random.default_rng(seed)
+    logits = _rand_logits(rng, b, v)
+    keys = slot_keys(jax.random.key(seed % 997),
+                     jnp.arange(b, dtype=jnp.int32),
+                     jnp.zeros((b,), jnp.int32))
+    for temp in (0.0, -1.0):
+        tok = sample(keys, logits, jnp.full((b,), temp, jnp.float32),
+                     jnp.asarray(rng.integers(0, v, size=(b,)), jnp.int32),
+                     jnp.asarray(rng.uniform(0.1, 1.0, size=(b,)),
+                                 jnp.float32))
+        np.testing.assert_array_equal(
+            np.asarray(tok), np.asarray(jnp.argmax(logits, -1)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(min_value=2, max_value=5),
+    v=st.integers(min_value=8, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sampler_vectorized_matches_per_row_scalar_calls(b, v, seed):
+    """Row independence: sampling a (B, V) batch with per-slot parameter
+    vectors equals B separate single-row calls with the same keys — the
+    invariant that makes co-scheduled sampled requests deterministic."""
+    rng = np.random.default_rng(seed)
+    logits = _rand_logits(rng, b, v)
+    temp = jnp.asarray(rng.uniform(0.0, 1.5, size=(b,)), jnp.float32)
+    top_k = jnp.asarray(rng.integers(0, v, size=(b,)), jnp.int32)
+    top_p = jnp.asarray(rng.uniform(0.2, 1.0, size=(b,)), jnp.float32)
+    keys = slot_keys(jax.random.key(seed % 991),
+                     jnp.arange(b, dtype=jnp.int32),
+                     jnp.asarray(rng.integers(0, 100, size=(b,)), jnp.int32))
+    batched = np.asarray(sample(keys, logits, temp, top_k, top_p))
+    for r in range(b):
+        solo = np.asarray(sample(keys[r:r + 1], logits[r:r + 1],
+                                 temp[r:r + 1], top_k[r:r + 1],
+                                 top_p[r:r + 1]))
+        assert batched[r] == solo[0]

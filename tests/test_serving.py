@@ -10,7 +10,7 @@ import pytest
 
 from repro.configs.base import LycheeConfig, get_config
 from repro.models import model as MD
-from repro.serving import Engine, SamplerConfig, sample
+from repro.serving import Engine, SamplerParams, sample, slot_keys
 from repro.training.optimizer import lr_schedule
 from repro.training.train_step import make_train_step
 
@@ -52,18 +52,29 @@ def test_engine_kernel_path_matches_ref_path():
 
 
 def test_sampler_modes():
-    key = jax.random.key(0)
+    B = 4
+    keys = slot_keys(jax.random.key(0), jnp.arange(B, dtype=jnp.int32),
+                     jnp.zeros((B,), jnp.int32))
     logits = jnp.asarray(np.random.default_rng(0)
-                         .standard_normal((4, 50)), jnp.float32)
-    greedy = sample(key, logits, SamplerConfig(temperature=0.0))
+                         .standard_normal((B, 50)), jnp.float32)
+    greedy = sample(keys, logits, jnp.zeros((B,)), jnp.zeros((B,), jnp.int32),
+                    jnp.ones((B,)))
     np.testing.assert_array_equal(np.asarray(greedy),
                                   np.asarray(jnp.argmax(logits, -1)))
-    for sc in (SamplerConfig(temperature=1.0, top_k=10),
-               SamplerConfig(temperature=0.7, top_p=0.9),
-               SamplerConfig(temperature=1.3, top_k=5, top_p=0.95)):
-        t = sample(key, logits, sc)
-        assert t.shape == (4,)
+    for sc in (SamplerParams(temperature=1.0, top_k=10),
+               SamplerParams(temperature=0.7, top_p=0.9),
+               SamplerParams(temperature=1.3, top_k=5, top_p=0.95)):
+        t = sample(keys, logits, jnp.full((B,), sc.temperature),
+                   jnp.full((B,), sc.top_k, jnp.int32),
+                   jnp.full((B,), sc.top_p))
+        assert t.shape == (B,)
         assert ((np.asarray(t) >= 0) & (np.asarray(t) < 50)).all()
+    # per-slot heterogeneous params in ONE call: greedy rows stay argmax
+    mixed = sample(keys, logits, jnp.asarray([0.0, 0.9, 0.0, 1.2]),
+                   jnp.asarray([0, 10, 0, 5], jnp.int32),
+                   jnp.asarray([1.0, 0.9, 1.0, 0.95]))
+    am = np.asarray(jnp.argmax(logits, -1))
+    assert np.asarray(mixed)[0] == am[0] and np.asarray(mixed)[2] == am[2]
 
 
 def test_checkpoint_roundtrip(tmp_path):

@@ -1,0 +1,412 @@
+"""Session-centric serving API tests.
+
+The invariants that make multi-turn KV/index reuse safe:
+
+* for EVERY registered cache policy, a turn-2 greedy continuation via
+  ``extend_slot`` (KV rows + policy state reused, index extended through
+  the streaming-update path) is token-identical to re-prefilling the
+  concatenated history into a fresh slot AND to ``generate`` over that
+  history — the extend-vs-rebuild oracle;
+* multi-turn sessions hold their slot across turns, recycle correctly when
+  sessions outnumber slots, and interleave with single-turn traffic;
+* per-request sampling is deterministic in (seed, uid, step) only: sampled
+  outputs are independent of co-scheduled sessions / slot count / admission
+  order (the greedy serve==solo invariant extended to temperature > 0);
+* mixed greedy/sampled batches run ONE jitted dispatch per token — host-
+  side eager sampling happens once per turn (prefill/extend logits), never
+  in the decode loop;
+* per-turn stop sequences end the turn and are trimmed from the public
+  token list (but stay in the device-side history);
+* ``on_token`` streams every sampled token;
+* open-loop idle waits sleep until the next arrival exactly and are booked
+  to ``ServeResult.idle_s``, not to throughput.
+"""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import LycheeConfig, get_config
+from repro.core.policy import list_policies
+from repro.models import model as MD
+from repro.serving import (Engine, Request, SamplerParams, Session, Turn,
+                           make_session_trace)
+
+N_CACHE = 192
+
+
+def _cfg(policy="lychee", **lychee_kw):
+    """Total-coverage retrieval config: the budget covers every chunk /
+    page / cluster at the test's sequence lengths, so selection differences
+    between a rebuilt and an extended policy state cannot change the active
+    set — greedy outputs must then be token-identical between the two."""
+    kw = dict(policy=policy, enabled=policy != "dense", budget=512, sink=4,
+              buffer_size=32, max_coarse=8, top_kg=8, full_attn_layers=0,
+              chunk_cap=32, ckv_cap_factor=8)
+    kw.update(lychee_kw)
+    return get_config("granite-3-8b", reduced=True).replace(
+        dtype="float32", lychee=LycheeConfig(**kw))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return MD.init_model(jax.random.key(0), _cfg())
+
+
+def _two_turn_session(cfg, uid=0, s1=48, s2=16, gen1=6, gen2=8, seed=3,
+                      sampling=None):
+    rng = np.random.default_rng(seed)
+    return Session(uid=uid, turns=[
+        Turn(prompt=rng.integers(0, cfg.vocab, size=(s1,)).astype(np.int32),
+             max_new=gen1, sampling=sampling),
+        Turn(prompt=rng.integers(0, cfg.vocab, size=(s2,)).astype(np.int32),
+             max_new=gen2, sampling=sampling)])
+
+
+# ---------------------------------------------------------------------------
+# Tentpole correctness: extend == re-prefill oracle, per policy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", sorted(list_policies()))
+def test_turn2_extend_matches_reprefill_oracle(params, policy):
+    cfg = _cfg(policy)
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    assert engine.can_extend
+
+    r_ext = engine.serve([_two_turn_session(cfg)], n_slots=2,
+                         reuse="extend")
+    r_rep = engine.serve([_two_turn_session(cfg)], n_slots=2,
+                         reuse="reprefill")
+    s_ext, s_rep = r_ext.requests[0], r_rep.requests[0]
+    # turn 1 is the same prefill in both paths
+    assert s_ext.turns[0].tokens == s_rep.turns[0].tokens
+    # turn 2: streamed-extended state vs rebuilt state — token-identical
+    assert s_ext.turns[1].tokens == s_rep.turns[1].tokens, \
+        f"[{policy}] extend diverged from re-prefill"
+
+    # ... and both equal generate() over the concatenated device history
+    ref = _two_turn_session(cfg)
+    hist = np.concatenate([
+        ref.turns[0].prompt,
+        np.asarray(s_ext.turns[0].sampled, np.int32),
+        ref.turns[1].prompt])
+    oracle = engine.generate(hist[None], s_ext.turns[1].max_new)
+    assert s_ext.turns[1].tokens == oracle.tokens[0].tolist(), \
+        f"[{policy}] extend diverged from the generate oracle"
+
+
+def test_extend_slot_reuses_rows_and_advances_t(params):
+    """extend_slot appends the delta at the slot's current t and leaves the
+    history rows (and the OTHER slot's whole state) bit-identical."""
+    cfg = _cfg()
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(2, 48)).astype(np.int32)
+    _, state = MD.prefill(params, jnp.asarray(prompts), cfg, N_CACHE)
+    delta = rng.integers(0, cfg.vocab, size=(1, 16)).astype(np.int32)
+    _, state2 = MD.extend_slot(params, jnp.asarray(delta), cfg, state, 0)
+    assert np.asarray(state2["t"]).tolist() == [48 + 16, 48]
+    # slot 1 untouched
+    for a, b in zip(jax.tree.leaves(MD.slice_slot(state, 1)),
+                    jax.tree.leaves(MD.slice_slot(state2, 1))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # slot 0's history rows untouched, delta rows written
+    k_old = np.asarray(state["groups"][0]["k"])[0, 0]    # (Hkv, N, dh)
+    k_new = np.asarray(state2["groups"][0]["k"])[0, 0]
+    np.testing.assert_array_equal(k_new[:, :48], k_old[:, :48])
+    assert np.abs(k_new[:, 48:64]).sum() > 0, "delta rows must be written"
+
+
+def _arch_cfg(arch, **model_kw):
+    ly = LycheeConfig(budget=512, sink=4, buffer_size=32, max_coarse=8,
+                      top_kg=8, full_attn_layers=0, chunk_cap=32)
+    return get_config(arch, reduced=True).replace(
+        dtype="float32", lychee=ly, **model_kw)
+
+
+@pytest.mark.parametrize("arch,model_kw", [
+    ("gemma2-27b", {}),                    # attn_local: ring-buffer extend
+    ("deepseek-v3-671b", {"pattern": ("mla",)}),   # latent-cache extend
+])
+def test_turn2_extend_oracle_other_block_kinds(arch, model_kw):
+    """The novel extend paths beyond plain GQA: the sliding-window ring
+    buffer (reconstructed ring positions + windowed flash over ring+delta)
+    and MLA (per-head K/V rebuilt from cached latents). Dense-FFN configs
+    only — MoE capacity is sequence-length dependent (see EXTEND_KINDS)."""
+    cfg = _arch_cfg(arch, **model_kw)
+    assert MD.can_extend(cfg)
+    params = MD.init_model(jax.random.key(2), cfg)
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    r_ext = engine.serve([_two_turn_session(cfg)], n_slots=1,
+                         reuse="extend")
+    r_rep = engine.serve([_two_turn_session(cfg)], n_slots=1,
+                         reuse="reprefill")
+    assert [t.tokens for t in r_ext.requests[0].turns] == \
+        [t.tokens for t in r_rep.requests[0].turns], \
+        f"[{arch}] extend diverged from re-prefill"
+
+
+def test_moe_arch_falls_back_to_reprefill_and_matches_oracle():
+    """MoE FFN capacity depends on the forward's sequence length, so a
+    delta-length extend can drop tokens differently than the full-history
+    prefill — those archs must NOT advertise extend and must still be
+    oracle-correct through the re-prefill fallback."""
+    cfg = _arch_cfg("mixtral-8x22b")
+    assert not MD.can_extend(cfg)
+    params = MD.init_model(jax.random.key(3), cfg)
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    assert not engine.can_extend
+    res = engine.serve([_two_turn_session(cfg)], n_slots=1,
+                       reuse="extend")          # silent reprefill fallback
+    sess = res.requests[0]
+    hist = np.concatenate([sess.turns[0].prompt,
+                           np.asarray(sess.turns[0].sampled, np.int32),
+                           sess.turns[1].prompt])
+    oracle = engine.generate(hist[None], sess.turns[1].max_new)
+    assert sess.turns[1].tokens == oracle.tokens[0].tolist()
+
+
+# ---------------------------------------------------------------------------
+# Multi-turn lifecycle
+# ---------------------------------------------------------------------------
+def test_sessions_recycle_slots_and_finish_all_turns(params):
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    trace = make_session_trace(np.random.default_rng(1), 5, cfg.vocab,
+                               n_turns=2, first_lens=(24, 48),
+                               delta_lens=(8, 16), gen_lens=(3, 6),
+                               temperatures=(0.0,))
+    res = engine.serve(copy.deepcopy(trace), n_slots=2)
+    assert len(res.requests) == 5
+    for ref in trace:
+        sess = res.requests[ref.uid]
+        assert sess.n_turns == 2
+        for j, turn in enumerate(sess.turns):
+            assert len(turn.tokens) == ref.turns[j].max_new
+            assert turn.started_s is not None
+            assert turn.ttft_s is not None and turn.ttft_s >= 0
+        assert sess.finished_s is not None
+        # total_new_tokens counts every turn
+    assert res.total_new_tokens == sum(
+        t.max_new for s in trace for t in s.turns)
+
+
+def test_multi_turn_greedy_independent_of_coscheduling(params):
+    """A session's greedy turns are identical whether it shares the batch
+    with other sessions or runs alone (the serve==solo invariant, now
+    across turn boundaries)."""
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    mk = lambda: [_two_turn_session(cfg, uid=0, seed=5),
+                  _two_turn_session(cfg, uid=1, seed=6, s1=24, s2=8)]
+    both = engine.serve(mk(), n_slots=2)
+    solo = engine.serve([mk()[0]], n_slots=1)
+    assert [t.tokens for t in both.requests[0].turns] == \
+        [t.tokens for t in solo.requests[0].turns]
+
+
+def test_eos_ends_turn_but_not_session(params):
+    cfg = _cfg()
+    probe_engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    probe = probe_engine.serve([_two_turn_session(cfg)], n_slots=1)
+    eos = probe.requests[0].turns[0].tokens[1]   # 2nd greedy token of turn 1
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False,
+                    eos_id=int(eos))
+    res = engine.serve([_two_turn_session(cfg)], n_slots=1)
+    sess = res.requests[0]
+    t1 = sess.turns[0].tokens
+    assert t1 == probe.requests[0].turns[0].tokens[:len(t1)]
+    assert t1[-1] == eos and len(t1) <= 2 + 1
+    assert len(sess.turns[1].tokens) >= 1, "turn 2 must still run"
+
+
+# ---------------------------------------------------------------------------
+# Per-request sampling / RNG
+# ---------------------------------------------------------------------------
+def _mixed_trace(cfg, n=4, gen=5):
+    out = []
+    for i in range(n):
+        sp = SamplerParams(temperature=0.9 if i % 2 else 0.0, top_k=20,
+                           top_p=0.95)
+        out.append(Request(
+            uid=i, prompt=np.random.default_rng(10 + i).integers(
+                0, cfg.vocab, size=(16 + 8 * i,)).astype(np.int32),
+            max_new=gen, sampling=sp))
+    return out
+
+
+def test_sampled_outputs_independent_of_coscheduling(params):
+    """fold_in(base, uid, step) keys: sampled tokens must not change with
+    slot count, admission order, or co-scheduled requests."""
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    trace = _mixed_trace(cfg)
+    r2 = engine.serve(copy.deepcopy(trace), n_slots=2, seed=42)
+    r3 = engine.serve(copy.deepcopy(trace), n_slots=3, seed=42)
+    r1 = engine.serve(copy.deepcopy(trace), n_slots=1, seed=42)
+    shuffled = copy.deepcopy(trace)[::-1]
+    r4 = engine.serve(shuffled, n_slots=2, seed=42)
+    for i in range(len(trace)):
+        assert r2.requests[i].tokens == r3.requests[i].tokens
+        assert r2.requests[i].tokens == r1.requests[i].tokens
+        assert r2.requests[i].tokens == r4.requests[i].tokens
+    # different seed -> different samples for the temperature>0 requests
+    r5 = engine.serve(copy.deepcopy(trace), n_slots=2, seed=43)
+    assert any(r5.requests[i].tokens != r2.requests[i].tokens
+               for i in (1, 3)), "seed must drive the sampled requests"
+    # greedy rows are seed-independent
+    for i in (0, 2):
+        assert r5.requests[i].tokens == r2.requests[i].tokens
+
+
+def test_mixed_batch_single_dispatch_per_token(params):
+    """A batch mixing greedy and sampled requests must run exactly ONE
+    jitted dispatch per decode token, with host-side sampling only at turn
+    starts (prefill/extend logits)."""
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    trace = _mixed_trace(cfg)
+    calls = {"sampled": 0, "greedy": 0}
+    orig_s, orig_g = engine._step_sampled, engine._step_greedy
+
+    def spy_s(*a, **k):
+        calls["sampled"] += 1
+        return orig_s(*a, **k)
+
+    def spy_g(*a, **k):
+        calls["greedy"] += 1
+        return orig_g(*a, **k)
+
+    engine._step_sampled, engine._step_greedy = spy_s, spy_g
+    try:
+        res = engine.serve(copy.deepcopy(trace), n_slots=2, seed=0)
+    finally:
+        engine._step_sampled, engine._step_greedy = orig_s, orig_g
+    assert calls["greedy"] == 0, "mixed batch must use the fused sampler"
+    assert calls["sampled"] == res.n_steps, \
+        "exactly one jitted dispatch per lock-step token"
+    assert engine.last_host_samples == sum(s.n_turns for s in trace), \
+        "host sampling only on per-turn admission logits"
+
+
+def test_all_greedy_trace_keeps_argmax_fused_step(params):
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    trace = [Request(uid=0, prompt=np.random.default_rng(0).integers(
+        0, cfg.vocab, size=(24,)).astype(np.int32), max_new=4)]
+    calls = {"sampled": 0}
+    orig = engine._step_sampled
+    engine._step_sampled = lambda *a, **k: (calls.__setitem__(
+        "sampled", calls["sampled"] + 1) or orig(*a, **k))
+    try:
+        engine.serve(trace, n_slots=1)
+    finally:
+        engine._step_sampled = orig
+    assert calls["sampled"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Stop sequences / streaming / idle accounting
+# ---------------------------------------------------------------------------
+def test_stop_sequence_trims_output_and_ends_turn(params):
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    probe = engine.serve([_two_turn_session(cfg, gen1=6)], n_slots=1)
+    toks = probe.requests[0].turns[0].tokens
+    stop = (toks[1], toks[2])
+    # expected greedy trajectory under the stop rule (greedy tokens repeat
+    # on random weights, so the match may land before position 3)
+    exp_sampled = []
+    for tk in toks:
+        exp_sampled.append(tk)
+        if len(exp_sampled) >= 2 and tuple(exp_sampled[-2:]) == stop:
+            break
+    sess = _two_turn_session(cfg, gen1=6)
+    sess.turns[0].stop = (stop,)
+    res = engine.serve([sess], n_slots=1)
+    turn = res.requests[0].turns[0]
+    assert turn.sampled == exp_sampled, "raw history keeps the stop tokens"
+    assert turn.tokens == exp_sampled[:-2], \
+        "matched stop suffix must be trimmed from the public tokens"
+    assert len(res.requests[0].turns[1].tokens) == sess.turns[1].max_new, \
+        "turn 2 must still run after a stop match"
+
+
+def test_on_token_streams_every_sampled_token(params):
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    trace = make_session_trace(np.random.default_rng(2), 3, cfg.vocab,
+                               n_turns=2, first_lens=(16, 24),
+                               delta_lens=(8,), gen_lens=(3, 5),
+                               temperatures=(0.0, 0.7))
+    streamed = []
+    res = engine.serve(copy.deepcopy(trace), n_slots=2,
+                       on_token=lambda uid, tok: streamed.append((uid, tok)))
+    expect = [(s.uid, tok) for s in res.requests.values()
+              for t in s.turns for tok in t.sampled]
+    assert sorted(streamed) == sorted(expect)
+    # per-uid order is generation order
+    for s in res.requests.values():
+        mine = [tok for uid, tok in streamed if uid == s.uid]
+        assert mine == [tok for t in s.turns for tok in t.sampled]
+
+
+def test_open_loop_idle_is_slept_and_excluded_from_throughput(params):
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    rng = np.random.default_rng(4)
+    trace = [
+        Request(uid=0, prompt=rng.integers(0, cfg.vocab, size=(16,))
+                .astype(np.int32), max_new=2, arrival_s=0.0),
+        Request(uid=1, prompt=rng.integers(0, cfg.vocab, size=(16,))
+                .astype(np.int32), max_new=2, arrival_s=0.6),
+    ]
+    # warm the jit so request 0 finishes well before request 1 arrives
+    engine.serve(copy.deepcopy(trace[:1]), n_slots=1)
+    res = engine.serve(copy.deepcopy(trace), n_slots=1)
+    assert len(res.requests) == 2
+    assert res.idle_s > 0.2, "the gap to arrival #2 must be booked as idle"
+    assert res.wall_s > res.idle_s
+    busy_tps = res.total_new_tokens / (res.wall_s - res.idle_s)
+    assert res.tokens_per_s == pytest.approx(busy_tps, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fallback + compat
+# ---------------------------------------------------------------------------
+def test_ssm_arch_falls_back_to_reprefill():
+    cfg = get_config("zamba2-2.7b", reduced=True).replace(dtype="float32")
+    assert not MD.can_extend(cfg)
+    params = MD.init_model(jax.random.key(1), cfg)
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    assert not engine.can_extend
+    rng = np.random.default_rng(0)
+    sess = Session(uid=0, turns=[
+        Turn(prompt=rng.integers(0, cfg.vocab, size=(24,)).astype(np.int32),
+             max_new=3),
+        Turn(prompt=rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32),
+             max_new=3)])
+    res = engine.serve([sess], n_slots=1, reuse="extend")   # silent fallback
+    assert all(len(t.tokens) == 3 for t in res.requests[0].turns)
+
+
+def test_session_total_len_admission_guard(params):
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    big = Session(uid=0, turns=[
+        Turn(prompt=np.zeros((150,), np.int32), max_new=8),
+        Turn(prompt=np.zeros((30,), np.int32), max_new=8)])
+    with pytest.raises(AssertionError, match="cache too small"):
+        engine.serve([big], n_slots=1)
+
+
+def test_zero_budget_turn_rejected(params):
+    """max_new=0 would sample a token the total_len() guard never counted
+    (potentially into the reserved cache_slack tail) — refused up front."""
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    bad = Session(uid=0, turns=[
+        Turn(prompt=np.zeros((8,), np.int32), max_new=2),
+        Turn(prompt=np.zeros((4,), np.int32), max_new=0)])
+    with pytest.raises(AssertionError, match="at least one"):
+        engine.serve([bad], n_slots=1)
