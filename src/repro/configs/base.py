@@ -75,6 +75,48 @@ class LycheeConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Serving-engine admission knobs (chunked prefill + shape bucketing).
+
+    ``prefill_chunk`` splits every admission/extend prompt into fixed-size
+    chunks fed through the delta-forward path with one batched decode step
+    interleaved between chunks, so live decode slots never stall longer
+    than one chunk forward (``0`` restores monolithic admission). Chunked
+    admission requires an extend path through every decode block
+    (``models.model.can_extend``); SSM hybrids / MoE-FFN / enc-dec archs
+    fall back to monolithic prefill automatically.
+
+    ``chunk_state`` picks how a chunk-admitted slot's cache-policy
+    selection state is produced:
+
+    * ``"rebuild"`` (default) — KV streams in chunk by chunk, then ONE
+      monolithic build over the cached keys reproduces exactly the state a
+      monolithic admission would have built: chunked greedy outputs are
+      token-identical to monolithic admission for every policy at any
+      retrieval budget.
+    * ``"stream"`` — each chunk extends the state through the policy's
+      streaming path (``CachePolicy.extend``: lychee lazy-grafts, quest
+      tail pages, clusterkv centroid assignment). No end-of-admission
+      build at all; the state follows the same trajectory per-token decode
+      would have (quest is exactly the monolithic state; the k-means
+      policies match the monolithic-build oracle whenever the budget
+      covers the active set).
+
+    ``bucket_prompts`` pads prompts/deltas to power-of-two length buckets
+    with a valid-length mask, so admission and ``generate`` compile
+    O(log max_len) shapes instead of one per distinct prompt length.
+    """
+
+    prefill_chunk: int = 512      # admission chunk size; 0 = monolithic
+    chunk_state: str = "rebuild"  # "rebuild" | "stream" (see above)
+    bucket_prompts: bool = True   # pow2 prompt-length bucketing + n_tokens
+    min_bucket: int = 16          # smallest pad bucket
+
+    def replace(self, **kw) -> "ServingConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
     arch_type: str                 # dense|moe|ssm|hybrid|vlm|audio
@@ -141,6 +183,7 @@ class ModelConfig:
     opt_state_dtype: str = "float32"   # bf16 for the very large archs
 
     lychee: LycheeConfig = dataclasses.field(default_factory=LycheeConfig)
+    serving: ServingConfig = dataclasses.field(default_factory=ServingConfig)
 
     # ------------------------------------------------------------------
     @property

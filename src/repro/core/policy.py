@@ -118,14 +118,30 @@ class CachePolicy:
         capacities of an ``n_cache``-token cache (slot-splice uniformity)."""
         return None
 
-    def build_batched(self, keys: jax.Array, layout, n_cache: int):
+    def build_batched(self, keys: jax.Array, layout, n_cache: int,
+                      n_tokens=None):
         """vmap ``build`` over a leading batch dim of ``keys`` (B, H, S, d),
         threading the (batched) layout only for policies that consume it —
-        the one call site cache builders need."""
+        the one call site cache builders need. ``n_tokens`` (scalar, shared
+        by all rows; traced ok) marks right-padded prompts: positions >=
+        n_tokens are ignored by the build (the prompt-length-bucketing
+        contract)."""
         if self.needs_layout:
-            return jax.vmap(lambda kb, lay: self.build(kb, lay, n_cache))(
-                keys, layout)
-        return jax.vmap(lambda kb: self.build(kb, None, n_cache))(keys)
+            return jax.vmap(lambda kb, lay: self.build(
+                kb, lay, n_cache, n_tokens=n_tokens))(keys, layout)
+        return jax.vmap(lambda kb: self.build(
+            kb, None, n_cache, n_tokens=n_tokens))(keys)
+
+    def empty_batched(self, B: int, N: int, H: int, d: int,
+                      dtype=jnp.float32):
+        """(B,)-batched :meth:`empty` — the placeholder state a chunked
+        admission carries before its end-of-admission monolithic build
+        (``serving.chunk_state == "rebuild"``)."""
+        state = self.empty(N, H, d, dtype)
+        if state is None:
+            return None
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (B,) + l.shape), state)
 
     def select(self, state, probe: jax.Array, t) -> Tuple[jax.Array,
                                                           jax.Array]:
@@ -166,19 +182,27 @@ class CachePolicy:
         ``fori_loop`` — per-token updates are cheap and the loop keeps the
         HLO O(1) in the delta length — and is exactly the trajectory a
         decoded session would have followed, so a subsequent decode behaves
-        identically to one that streamed those tokens.
+        identically to one that streamed those tokens. ``n_new`` may be a
+        TRACED scalar (a right-padded chunk's valid length under prompt
+        bucketing): the replay then folds only the valid rows.
         """
-        if not self.has_update or state is None or n_new == 0:
+        if not self.has_update or state is None:
+            return state
+        if isinstance(n_new, int) and n_new == 0:
             return state
         t0 = jnp.asarray(t0, jnp.int32)
         return jax.lax.fori_loop(
-            0, n_new, lambda i, s: self.update(s, keys, t0 + 1 + i), state)
+            0, jnp.asarray(n_new, jnp.int32),
+            lambda i, s: self.update(s, keys, t0 + 1 + i), state)
 
     def extend_batched(self, state, keys: jax.Array, t0: jax.Array,
-                       n_new: int):
+                       n_new):
         """vmap :meth:`extend` over the slot axis. keys: (B, H, N, d);
-        t0: (B,) per-slot lengths before the delta."""
-        if not self.has_update or state is None or n_new == 0:
+        t0: (B,) per-slot lengths before the delta; n_new: scalar shared by
+        every slot (traced ok)."""
+        if not self.has_update or state is None:
+            return state
+        if isinstance(n_new, int) and n_new == 0:
             return state
         return jax.vmap(lambda s, k, t: self.extend(s, k, t, n_new))(
             state, keys, jnp.asarray(t0, jnp.int32))

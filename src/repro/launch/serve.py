@@ -70,6 +70,19 @@ def main():
                          "later turns reuse the slot's KV via extend_slot)")
     ap.add_argument("--stream-tokens", action="store_true",
                     help="print tokens as they are sampled (on_token)")
+    ap.add_argument("--prefill-chunk", type=int, default=512,
+                    help="chunked-admission chunk size: long prompts "
+                         "prefill in chunks with one batched decode step "
+                         "interleaved between chunks, so live slots never "
+                         "stall longer than one chunk forward (0 = "
+                         "monolithic admission; non-extendable archs "
+                         "fall back automatically)")
+    ap.add_argument("--chunk-state", default="rebuild",
+                    choices=("rebuild", "stream"),
+                    help="policy state of a chunk-admitted slot: 'rebuild' "
+                         "= one end-of-admission monolithic build (token-"
+                         "identical to monolithic admission), 'stream' = "
+                         "per-chunk CachePolicy.extend")
     ap.add_argument("--prompt-lens", type=int, nargs="+",
                     default=[64, 256, 1024])
     ap.add_argument("--seed", type=int, default=0)
@@ -81,6 +94,8 @@ def main():
                           max_coarse=32, top_kg=8, full_attn_layers=0)
     cfg = get_config(args.arch, reduced=args.reduced).replace(
         dtype="float32", lychee=lychee)
+    cfg = cfg.replace(serving=cfg.serving.replace(
+        prefill_chunk=args.prefill_chunk, chunk_state=args.chunk_state))
     rng = np.random.default_rng(args.seed)
     params = MD.init_model(jax.random.key(0), cfg)
     mode = "full" if policy == "dense" else \
@@ -116,7 +131,9 @@ def main():
               f"{res.tokens_per_s:.1f} tok/s over {res.n_steps} steps")
         print(f"  latency p50 {res.p50_latency_s:.2f}s  "
               f"p99 {res.p99_latency_s:.2f}s  "
-              f"mean TTFT {res.mean_ttft_s:.2f}s")
+              f"mean TTFT {res.mean_ttft_s:.2f}s  "
+              f"TPOT {res.mean_tpot_ms:.1f}ms  "
+              f"ITL p99 {res.p99_itl_ms:.1f}ms / max {res.max_itl_ms:.1f}ms")
         for uid in sorted(res.requests)[:4]:
             s = res.requests[uid]
             per_turn = " | ".join(

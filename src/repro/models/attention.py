@@ -134,9 +134,16 @@ def _project_qkv(p, x, positions, cfg, rope: bool = True):
 
 
 def gqa_forward(p: dict, x: jax.Array, positions: jax.Array,
-                cfg: ModelConfig, kind: str, rope: bool = True) -> Tuple:
+                cfg: ModelConfig, kind: str, rope: bool = True,
+                n_tokens=None) -> Tuple:
     """Full-sequence forward. Returns (out (B,S,d), k, v) — k/v (B,Hkv,S,dh)
-    post-RoPE, ready for caching/indexing."""
+    post-RoPE, ready for caching/indexing.
+
+    ``n_tokens`` (scalar, traced ok) marks a right-padded prompt: key rows
+    at positions >= n_tokens are masked out of the attention (their K/V and
+    output rows are garbage the caller must ignore — under causal masking
+    they cannot contaminate the valid rows, so the valid-row outputs are
+    bit-identical to the unpadded forward)."""
     dh = cfg.resolved_head_dim
     q, k, v = _project_qkv(p, x, positions, cfg, rope)
     q = shard(q, "batch", "model", None, None)
@@ -144,7 +151,11 @@ def gqa_forward(p: dict, x: jax.Array, positions: jax.Array,
     v = shard(v, "batch", "model", None, None)
     causal = kind != "enc_attn"
     window = cfg.window if kind in ("attn_local", "swa_moe") else 0
-    out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
+    k_pos = positions
+    if n_tokens is not None:
+        n = jnp.asarray(n_tokens, jnp.int32)
+        k_pos = jnp.where(jnp.arange(positions.shape[-1]) < n, positions, -1)
+    out = flash_attention(q, k, v, q_pos=positions, k_pos=k_pos,
                           causal=causal, window=window,
                           scale=1.0 / dh ** 0.5, softcap=cfg.attn_softcap)
     B, Hq, S, _ = out.shape
@@ -245,7 +256,8 @@ def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
 
 def gqa_extend(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
                kind: str, managed: bool, rope: bool = True,
-               pol: Optional[CachePolicy] = None) -> Tuple:
+               pol: Optional[CachePolicy] = None, n_tokens=None,
+               update_policy: bool = True) -> Tuple:
     """Multi-token EXTEND of one occupied slot — the session-reuse
     primitive between ``gqa_forward`` (prefill from scratch) and
     ``gqa_decode`` (one token).
@@ -265,12 +277,21 @@ def gqa_extend(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
     Single-slot contract: extend operates on a ``slice_slot`` view (B=1) so
     per-slot positions reduce to one traced scalar and flash attention's
     shared position vectors apply. Returns (out (1, S, d_model), cache).
+
+    ``n_tokens`` (scalar, traced ok) marks a right-padded delta (prompt
+    bucketing / chunked admission): rows >= n_tokens are garbage — their
+    cache rows land at positions >= t + n_tokens where causal masking (and
+    the next chunk's overwrite) neutralises them, the ring scatter drops
+    them, and the policy extension folds only the valid rows.
+    ``update_policy=False`` skips the policy-state extension entirely (the
+    chunked-admission "rebuild" mode builds the state once at the end).
     """
     B, S, _ = x.shape
     assert B == 1, "extend_slot extends one slot at a time"
     dh = cfg.resolved_head_dim
     tt = _slot_t(t, B)
     t0 = tt[0]                                              # traced scalar
+    n_valid = None if n_tokens is None else jnp.asarray(n_tokens, jnp.int32)
     d_pos = t0 + jnp.arange(S, dtype=jnp.int32)             # (S,) absolute
     q, k_t, v_t = _project_qkv(p, x, d_pos[None], cfg, rope)  # (1,H,S,dh)
     scale = 1.0 / dh ** 0.5
@@ -286,17 +307,29 @@ def gqa_extend(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
         ring_pos = jnp.where(ring_pos >= 0, ring_pos, -1)
         k_comb = jnp.concatenate([cache["k"], k_t], axis=2)
         v_comb = jnp.concatenate([cache["v"], v_t], axis=2)
+        d_kpos = d_pos if n_valid is None else \
+            jnp.where(jnp.arange(S) < n_valid, d_pos, -1)
         out = flash_attention(q, k_comb, v_comb, q_pos=d_pos,
-                              k_pos=jnp.concatenate([ring_pos, d_pos]),
+                              k_pos=jnp.concatenate([ring_pos, d_kpos]),
                               causal=True, window=cfg.window, scale=scale,
                               softcap=cfg.attn_softcap)
-        # fold the delta into the ring: only the last min(S, W) rows can
-        # survive, so slot indices are distinct and one scatter suffices
-        lo = max(0, S - W)
-        slots = jnp.mod(d_pos[lo:], W)
-        cache = dict(cache,
-                     k=cache["k"].at[:, :, slots].set(k_t[:, :, lo:]),
-                     v=cache["v"].at[:, :, slots].set(v_t[:, :, lo:]))
+        if n_valid is None:
+            # fold the delta into the ring: only the last min(S, W) rows
+            # can survive, so slot indices are distinct, one scatter does
+            lo = max(0, S - W)
+            slots = jnp.mod(d_pos[lo:], W)
+            cache = dict(cache,
+                         k=cache["k"].at[:, :, slots].set(k_t[:, :, lo:]),
+                         v=cache["v"].at[:, :, slots].set(v_t[:, :, lo:]))
+        else:
+            # padded delta: only rows [max(0, n - W), n) survive in the
+            # ring; everything else scatters out of range and is dropped
+            i = jnp.arange(S, dtype=jnp.int32)
+            keep = (i < n_valid) & (i >= n_valid - W)
+            slots = jnp.where(keep, jnp.mod(d_pos, W), W)
+            cache = dict(cache,
+                         k=cache["k"].at[:, :, slots].set(k_t, mode="drop"),
+                         v=cache["v"].at[:, :, slots].set(v_t, mode="drop"))
     else:
         k_c = jax.vmap(
             lambda c, r, a: jax.lax.dynamic_update_slice_in_dim(c, r, a, 1))(
@@ -316,10 +349,11 @@ def gqa_extend(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
                               softcap=cfg.attn_softcap)
         if managed and pol is None:
             pol = policy_for(cfg.lychee)
-        if managed and pol is not None and pol.stateful and \
-                "policy_state" in cache:
+        if update_policy and managed and pol is not None and \
+                pol.stateful and "policy_state" in cache:
             cache = dict(cache, policy_state=pol.extend_batched(
-                cache["policy_state"], k_c, tt, S))
+                cache["policy_state"], k_c, tt,
+                S if n_valid is None else n_valid))
 
     Hq = out.shape[1]
     out = out.transpose(0, 2, 1, 3).reshape(B, S, Hq * out.shape[-1])
@@ -330,7 +364,8 @@ def gqa_extend(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
 def gqa_prefill_cache(k: jax.Array, v: jax.Array, cfg: ModelConfig,
                       kind: str, layout: Optional[ChunkLayout],
                       n_cache: int, managed: bool,
-                      pol: Optional[CachePolicy] = None) -> dict:
+                      pol: Optional[CachePolicy] = None, n_tokens=None,
+                      build_policy: bool = True) -> dict:
     """Build the decode cache (and the policy's selection state) after a
     prefill forward.
 
@@ -338,17 +373,31 @@ def gqa_prefill_cache(k: jax.Array, v: jax.Array, cfg: ModelConfig,
     cache_slack`` rows are the Pallas kernel's reserved DMA-overrun region:
     the engine never writes them (``usable_rows``), so any span DMA of up
     to ``span_len`` rows starting below ``t`` stays in bounds with no
-    per-step cache copy."""
+    per-step cache copy.
+
+    ``n_tokens`` (scalar, traced ok) marks a right-padded prompt: the ring
+    buffer keeps only the valid window and the policy build masks the pad
+    rows. ``build_policy=False`` installs the policy's EMPTY state instead
+    of building it — the chunked-admission "rebuild" mode defers the build
+    to one end-of-admission pass over the cached keys."""
     B, Hkv, S, dh = k.shape
     local = kind in ("attn_local", "swa_moe") and cfg.window
     if local:
         W = min(cfg.window, n_cache)
-        lo = max(0, S - W)
         ring_k = jnp.zeros((B, Hkv, W, dh), k.dtype)
         ring_v = jnp.zeros((B, Hkv, W, dh), v.dtype)
-        slots = jnp.arange(lo, S, dtype=jnp.int32) % W
-        ring_k = ring_k.at[:, :, slots].set(k[:, :, lo:])
-        ring_v = ring_v.at[:, :, slots].set(v[:, :, lo:])
+        if n_tokens is None:
+            lo = max(0, S - W)
+            slots = jnp.arange(lo, S, dtype=jnp.int32) % W
+            ring_k = ring_k.at[:, :, slots].set(k[:, :, lo:])
+            ring_v = ring_v.at[:, :, slots].set(v[:, :, lo:])
+        else:
+            n = jnp.asarray(n_tokens, jnp.int32)
+            pos = jnp.arange(S, dtype=jnp.int32)
+            keep = (pos < n) & (pos >= n - W)
+            slots = jnp.where(keep, pos % W, W)      # W -> dropped scatter
+            ring_k = ring_k.at[:, :, slots].set(k, mode="drop")
+            ring_v = ring_v.at[:, :, slots].set(v, mode="drop")
         return {"k": ring_k, "v": ring_v}
     pad = n_cache - S
     k_c = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
@@ -358,13 +407,17 @@ def gqa_prefill_cache(k: jax.Array, v: jax.Array, cfg: ModelConfig,
     cache = {"k": k_c, "v": v_c}
     if managed and pol is None:
         pol = policy_for(cfg.lychee)
-    if managed and pol is not None and pol.stateful and \
-            not (pol.needs_layout and layout is None):
+    if managed and pol is not None and pol.stateful:
         # layout is batched (leading B dim) — vmap over (keys, layout) pairs.
         # The state is padded to the CACHE capacity (not the prompt length)
         # so every serving slot carries identical leaf shapes and a freed
         # slot can be respliced with any request's state.
-        cache["policy_state"] = pol.build_batched(k, layout, n_cache)
+        if not build_policy:
+            cache["policy_state"] = pol.empty_batched(B, n_cache, Hkv, dh,
+                                                      k.dtype)
+        elif not (pol.needs_layout and layout is None):
+            cache["policy_state"] = pol.build_batched(k, layout, n_cache,
+                                                      n_tokens=n_tokens)
     return cache
 
 

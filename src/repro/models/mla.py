@@ -69,9 +69,13 @@ def _latents(p, x, positions, cfg):
 
 
 def mla_forward(p: dict, x: jax.Array, positions: jax.Array,
-                cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+                cfg: ModelConfig, n_tokens=None
+                ) -> Tuple[jax.Array, jax.Array]:
     """Full-sequence forward (train/prefill). Returns (out, latent (B,S,576))
-    where latent = concat(c_kv, k_rope) — the decode cache row."""
+    where latent = concat(c_kv, k_rope) — the decode cache row. ``n_tokens``
+    (scalar, traced ok) masks right-padded prompt rows out of the attention
+    (prompt-length bucketing; pad outputs/latents are garbage the caller
+    ignores or overwrites)."""
     B, S, _ = x.shape
     H = cfg.n_heads
     nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -87,7 +91,11 @@ def mla_forward(p: dict, x: jax.Array, positions: jax.Array,
     v = v.transpose(0, 2, 1, 3)
     q = shard(q, "batch", "model", None, None)
     k = shard(k, "batch", "model", None, None)
-    out = flash_attention(q, k, v, q_pos=positions, k_pos=positions,
+    k_pos = positions
+    if n_tokens is not None:
+        n = jnp.asarray(n_tokens, jnp.int32)
+        k_pos = jnp.where(jnp.arange(positions.shape[-1]) < n, positions, -1)
+    out = flash_attention(q, k, v, q_pos=positions, k_pos=k_pos,
                           causal=True, scale=1.0 / (nd + rd) ** 0.5)
     out = out.transpose(0, 2, 1, 3).reshape(B, S, H * vd) @ p["wo"]
     latent = jnp.concatenate([c_kv, k_rope], -1)
@@ -159,7 +167,8 @@ def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
 
 
 def mla_extend(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
-               managed: bool, pol: Optional[CachePolicy] = None
+               managed: bool, pol: Optional[CachePolicy] = None,
+               n_tokens=None, update_policy: bool = True
                ) -> Tuple[jax.Array, dict]:
     """Multi-token EXTEND of one occupied MLA slot (session reuse).
 
@@ -173,6 +182,12 @@ def mla_extend(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
     extend is a prefill-class operation (once per turn, not per token); the
     per-token decode path stays absorbed. The policy state extends through
     ``CachePolicy.extend`` over the latent rows (one logical kv head).
+
+    ``n_tokens`` (scalar, traced ok) marks a right-padded delta: garbage
+    rows land at positions >= t + n_tokens (causally masked, overwritten
+    by the next chunk) and the policy folds only the valid rows.
+    ``update_policy=False`` skips the policy extension (chunked-admission
+    "rebuild" mode).
     """
     B, S, _ = x.shape
     assert B == 1, "extend_slot extends one slot at a time"
@@ -211,21 +226,23 @@ def mla_extend(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
 
     if managed and pol is None:
         pol = policy_for(cfg.lychee)
-    if managed and pol is not None and pol.stateful and \
+    if update_policy and managed and pol is not None and pol.stateful and \
             "policy_state" in cache:
         cache = dict(cache, policy_state=pol.extend_batched(
-            cache["policy_state"], latent[:, None], tt, S))
+            cache["policy_state"], latent[:, None], tt,
+            S if n_tokens is None else jnp.asarray(n_tokens, jnp.int32)))
     return shard(out, "batch", None, None), cache
 
 
 def mla_prefill_cache(latent: jax.Array, cfg: ModelConfig,
                       layout: Optional[ChunkLayout], n_cache: int,
-                      managed: bool, pol: Optional[CachePolicy] = None
-                      ) -> dict:
+                      managed: bool, pol: Optional[CachePolicy] = None,
+                      n_tokens=None, build_policy: bool = True) -> dict:
     """latent: (B, S, kvl+rd). The cache policy treats the latent cache as a
     single logical kv head of width 576. The tail ``core.types.cache_slack``
     rows are the kernel's reserved DMA-overrun region (never written —
-    ``usable_rows``)."""
+    ``usable_rows``). ``n_tokens``/``build_policy`` follow
+    :func:`repro.models.attention.gqa_prefill_cache`."""
     B, S, D = latent.shape
     pad = n_cache - S
     lat = jnp.pad(latent, ((0, 0), (0, pad), (0, 0)))
@@ -233,10 +250,13 @@ def mla_prefill_cache(latent: jax.Array, cfg: ModelConfig,
     cache = {"latent": lat}
     if managed and pol is None:
         pol = policy_for(cfg.lychee)
-    if managed and pol is not None and pol.stateful and \
-            not (pol.needs_layout and layout is None):
+    if managed and pol is not None and pol.stateful:
         # layout is batched (leading B dim); latent cache = 1 logical kv
         # head. Padded to cache capacity for uniform serving-slot shapes.
-        cache["policy_state"] = pol.build_batched(latent[:, None], layout,
-                                                  n_cache)
+        if not build_policy:
+            cache["policy_state"] = pol.empty_batched(B, n_cache, 1, D,
+                                                      latent.dtype)
+        elif not (pol.needs_layout and layout is None):
+            cache["policy_state"] = pol.build_batched(
+                latent[:, None], layout, n_cache, n_tokens=n_tokens)
     return cache

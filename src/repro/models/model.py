@@ -106,19 +106,23 @@ def _shared_params(params, kind, bp):
 
 # --- full-sequence (train / prefill) ----------------------------------------
 def block_forward(bp: dict, kind: str, x: jax.Array, positions: jax.Array,
-                  cfg: ModelConfig, enc_out: Optional[jax.Array] = None
-                  ) -> Tuple[jax.Array, jax.Array, Any]:
+                  cfg: ModelConfig, enc_out: Optional[jax.Array] = None,
+                  n_tokens=None) -> Tuple[jax.Array, jax.Array, Any]:
     """Returns (x_out, aux_loss, cache_material).
 
     cache_material feeds ``make_cache``: (k, v) post-RoPE for attention
     kinds, latent for MLA, recurrent state for SSM kinds, plus (enc_k,
     enc_v) for cross blocks. During pure training callers drop it.
+
+    ``n_tokens`` (scalar, traced ok) marks a right-padded prompt for the
+    attention kinds that support exact masking (prompt-length bucketing —
+    see :func:`prefill`); training callers never pass it.
     """
     aux = jnp.zeros((), jnp.float32)
     if kind in ("attn", "attn_local", "enc_attn", "shared_attn"):
         akind = "attn" if kind == "shared_attn" else kind
         h, k, v = A.gqa_forward(bp["attn"], rmsnorm(bp["norm1"], x),
-                                positions, cfg, akind)
+                                positions, cfg, akind, n_tokens=n_tokens)
         x = x + h
         x = x + mlp_apply(bp["mlp"], rmsnorm(bp["norm2"], x))
         return x, aux, {"k": k, "v": v}
@@ -131,7 +135,8 @@ def block_forward(bp: dict, kind: str, x: jax.Array, positions: jax.Array,
     if kind in MLA_KINDS:
         from repro.models.mla import mla_forward
         h, latent = mla_forward(bp["attn"], rmsnorm(bp["norm1"], x),
-                                positions, cfg)
+                                positions, cfg,
+                                n_tokens=n_tokens if kind == "mla" else None)
         x = x + h
         if kind == "mla":
             x = x + mlp_apply(bp["mlp"], rmsnorm(bp["norm2"], x))
@@ -163,19 +168,24 @@ def block_make_cache(bp: dict, kind: str, material, x: jax.Array,
                      cfg: ModelConfig, layout: Optional[ChunkLayout],
                      n_cache: int, managed: bool,
                      enc_out: Optional[jax.Array] = None,
-                     pol=None) -> Any:
+                     pol=None, n_tokens=None,
+                     build_policy: bool = True) -> Any:
     """Turn forward material into the decode cache for this block.
     ``managed`` marks layers whose cache is run through the configured
     :class:`~repro.core.policy.CachePolicy` (``pol``, resolved once by the
     caller). KV/latent caches keep exactly ``n_cache`` rows; the LAST
     ``core.types.cache_slack`` of them are the Pallas kernel's reserved
     DMA-overrun region and must never be written (``usable_rows`` — the
-    engine enforces this at admission)."""
+    engine enforces this at admission). ``n_tokens`` marks a right-padded
+    prompt; ``build_policy=False`` installs the policy's empty state (the
+    chunked-admission rebuild mode builds it once at the end)."""
     if kind in ("attn", "attn_local", "enc_attn", "shared_attn", "swa_moe",
                 "dec_cross"):
         akind = "attn" if kind in ("shared_attn", "dec_cross") else kind
         cache = A.gqa_prefill_cache(material["k"], material["v"], cfg, akind,
-                                    layout, n_cache, managed, pol=pol)
+                                    layout, n_cache, managed, pol=pol,
+                                    n_tokens=n_tokens,
+                                    build_policy=build_policy)
         if kind == "dec_cross":
             ek, ev = A.cross_kv(bp["cross"], enc_out, cfg)
             cache["enc_k"], cache["enc_v"] = ek, ev
@@ -183,7 +193,8 @@ def block_make_cache(bp: dict, kind: str, material, x: jax.Array,
     if kind in MLA_KINDS:
         from repro.models.mla import mla_prefill_cache
         return mla_prefill_cache(material["latent"], cfg, layout, n_cache,
-                                 managed, pol=pol)
+                                 managed, pol=pol, n_tokens=n_tokens,
+                                 build_policy=build_policy)
     if kind == "mamba":
         return M2.mamba2_prefill_state(bp["mixer"], rmsnorm(bp["norm1"], x),
                                        cfg)
@@ -451,11 +462,12 @@ def _policy_managed(cfg: ModelConfig, kind: str, scanned: bool) -> bool:
 
 
 def make_layout(tokens: jax.Array, cfg: ModelConfig, table=None,
-                extras: Optional[dict] = None) -> ChunkLayout:
+                extras: Optional[dict] = None, n_tokens=None) -> ChunkLayout:
     """Structure-aware chunk layout for one batch of prompts. The delimiter
     table is tokenizer-specific; the synthetic table is the default for
     in-repo data. VLM patch positions are treated as a leading structural
-    span (they precede text)."""
+    span (they precede text). ``n_tokens`` (scalar, shared by all rows)
+    marks right-padded prompts — chunking stops at the valid length."""
     if table is None:
         table = jnp.asarray(synthetic_delimiter_table(cfg.vocab))
     ly = cfg.lychee
@@ -463,14 +475,28 @@ def make_layout(tokens: jax.Array, cfg: ModelConfig, table=None,
         # prepend pseudo-tokens for the patch span (delimiter-free)
         pad = jnp.zeros((tokens.shape[0], cfg.n_patches), tokens.dtype)
         tokens = jnp.concatenate([pad, tokens], axis=1)
-    return jax.vmap(lambda tk: chunk_sequence(tk, table, ly))(tokens)
+    return jax.vmap(
+        lambda tk: chunk_sequence(tk, table, ly, n_tokens=n_tokens))(tokens)
 
 
 def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
             n_cache: int, extras: Optional[dict] = None,
-            layout: Optional[ChunkLayout] = None
-            ) -> Tuple[jax.Array, dict]:
+            layout: Optional[ChunkLayout] = None, n_tokens=None,
+            build_policy: bool = True) -> Tuple[jax.Array, dict]:
     """Process the prompt; return (last-position logits (B,V), state).
+
+    ``n_tokens`` (scalar, traced ok — one jit shape serves every prompt
+    length in a pad bucket) marks right-padded prompts: every attention
+    masks rows >= n_tokens, the policy build/chunk layout stop at the
+    valid length, the returned logits come from position ``n_tokens - 1``
+    and ``state["t"] = n_tokens``. Pad rows leave garbage K/V at positions
+    >= n_tokens, which every decode-time consumer masks by ``t`` (and
+    decode/extend appends overwrite) — valid-row numerics are identical to
+    the unpadded prefill. Only architectures whose every block is exactly
+    maskable support this (``can_extend``: no SSM recurrence over pad
+    rows, no sequence-length-dependent MoE capacity, no enc-dec/VLM
+    frontends). ``build_policy=False`` installs empty policy states (the
+    chunked-admission rebuild mode).
 
     state = {"prelude": [cache...], "groups": stacked caches, "t": (B,)}.
 
@@ -488,6 +514,10 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
     construction — no per-step cache copy, and row counts (hence context-
     dim shard splits and index capacities) unchanged.
     """
+    if n_tokens is not None:
+        assert can_extend(cfg), \
+            f"{cfg.name}: masked (bucketed) prefill needs every block to " \
+            f"be exactly maskable (see model.EXTEND_KINDS)"
     x = embed_inputs(params, tokens, cfg, extras)
     B, S, _ = x.shape
     positions = jnp.arange(S, dtype=jnp.int32)
@@ -495,35 +525,47 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
         else None
     pol = policy_for(cfg.lychee)          # resolved once, threaded down
     needs_layout = pol.needs_layout
-    if layout is None and needs_layout and cfg.uses_attention:
-        layout = make_layout(tokens, cfg, extras=extras)
+    if layout is None and needs_layout and cfg.uses_attention and \
+            build_policy:
+        layout = make_layout(tokens, cfg, extras=extras, n_tokens=n_tokens)
 
     prelude_caches = []
     for bp, kind in zip(params["prelude"], cfg.prelude):
         bp = _shared_params(params, kind, bp)
         x_in = x
-        x, _, mat = block_forward(bp, kind, x, positions, cfg, enc_out)
+        x, _, mat = block_forward(bp, kind, x, positions, cfg, enc_out,
+                                  n_tokens=n_tokens)
         prelude_caches.append(block_make_cache(
-            bp, kind, mat, x_in, cfg, None, n_cache, False, enc_out))
+            bp, kind, mat, x_in, cfg, None, n_cache, False, enc_out,
+            n_tokens=n_tokens))
 
     def group_step(x, gp):
         caches = []
         for pos_i, kind in enumerate(cfg.pattern):
             bp = _shared_params(params, kind, gp[pos_i])
             x_in = x
-            x, _, mat = block_forward(bp, kind, x, positions, cfg, enc_out)
+            x, _, mat = block_forward(bp, kind, x, positions, cfg, enc_out,
+                                      n_tokens=n_tokens)
             managed = _policy_managed(cfg, kind, scanned=True)
             caches.append(block_make_cache(
                 bp, kind, mat, x_in, cfg,
                 layout if managed and needs_layout else None,
-                n_cache, managed, enc_out, pol=pol if managed else None))
+                n_cache, managed, enc_out, pol=pol if managed else None,
+                n_tokens=n_tokens, build_policy=build_policy))
         return x, tuple(caches)
 
     x, group_caches = jax.lax.scan(group_step, x, params["pattern"])
     x = rmsnorm(params["final_norm"], x)
-    logits = unembed(params["embed"], x[:, -1:], cfg.final_softcap)[:, 0]
+    if n_tokens is None:
+        x_last = x[:, -1:]
+        t_fill = jnp.full((B,), S, jnp.int32)
+    else:
+        n = jnp.asarray(n_tokens, jnp.int32)
+        x_last = jax.lax.dynamic_slice_in_dim(x, n - 1, 1, axis=1)
+        t_fill = jnp.full((B,), 0, jnp.int32) + n
+    logits = unembed(params["embed"], x_last, cfg.final_softcap)[:, 0]
     state = {"prelude": prelude_caches, "groups": group_caches,
-             "t": jnp.full((B,), S, jnp.int32)}
+             "t": t_fill}
     return logits, state
 
 
@@ -660,15 +702,21 @@ def can_extend(cfg: ModelConfig) -> bool:
 
 def block_extend(bp: dict, kind: str, x: jax.Array, t, cache: Any,
                  cfg: ModelConfig, managed: bool,
-                 pol=None) -> Tuple[jax.Array, Any]:
+                 pol=None, n_tokens=None,
+                 update_policy: bool = True) -> Tuple[jax.Array, Any]:
     """Multi-token analogue of ``block_decode``: x (1, S, d) delta hidden
     states against an occupied slot's cache at length ``t``. The MoE kinds
     are implemented for completeness but gated out of ``EXTEND_KINDS``
-    (capacity drops are sequence-length dependent — see above)."""
+    (capacity drops are sequence-length dependent — see above).
+    ``n_tokens`` marks a right-padded delta (chunked admission / prompt
+    bucketing); ``update_policy=False`` skips the policy-state extension
+    (the rebuild mode's deferred build)."""
     if kind in ("attn", "attn_local", "swa_moe", "shared_attn"):
         akind = "attn" if kind == "shared_attn" else kind
         h, cache = A.gqa_extend(bp["attn"], rmsnorm(bp["norm1"], x), t,
-                                cache, cfg, akind, managed, pol=pol)
+                                cache, cfg, akind, managed, pol=pol,
+                                n_tokens=n_tokens,
+                                update_policy=update_policy)
         x = x + h
         if kind == "swa_moe":
             h, _ = MOE.moe_apply(bp["moe"], rmsnorm(bp["norm2"], x), cfg)
@@ -679,7 +727,8 @@ def block_extend(bp: dict, kind: str, x: jax.Array, t, cache: Any,
     if kind in MLA_KINDS:
         from repro.models.mla import mla_extend
         h, cache = mla_extend(bp["attn"], rmsnorm(bp["norm1"], x), t, cache,
-                              cfg, managed, pol=pol)
+                              cfg, managed, pol=pol, n_tokens=n_tokens,
+                              update_policy=update_policy)
         x = x + h
         if kind == "mla":
             x = x + mlp_apply(bp["mlp"], rmsnorm(bp["norm2"], x))
@@ -691,7 +740,8 @@ def block_extend(bp: dict, kind: str, x: jax.Array, t, cache: Any,
                      f"(see model.EXTEND_KINDS)")
 
 
-def extend(params: dict, tokens: jax.Array, cfg: ModelConfig, state: dict
+def extend(params: dict, tokens: jax.Array, cfg: ModelConfig, state: dict,
+           n_tokens=None, update_policy: bool = True
            ) -> Tuple[jax.Array, dict]:
     """Append a turn's delta tokens to ONE session's decode state.
 
@@ -704,9 +754,16 @@ def extend(params: dict, tokens: jax.Array, cfg: ModelConfig, state: dict
     policy state is extended through ``CachePolicy.extend`` instead of
     rebuilt. Returns (last-position logits (1, V), updated state with
     ``t + S``).
+
+    ``n_tokens`` (scalar, traced ok) marks a right-padded delta — the
+    prompt-bucketing / chunked-admission form: only the first ``n_tokens``
+    rows are real, the logits come from row ``n_tokens - 1`` and ``t``
+    advances by ``n_tokens``. ``update_policy=False`` skips the policy
+    extension (rebuild mode).
     """
     assert tokens.shape[0] == 1, "extend is a per-slot primitive"
     S = tokens.shape[1]
+    n = None if n_tokens is None else jnp.asarray(n_tokens, jnp.int32)
     t0 = jnp.broadcast_to(jnp.asarray(state["t"], jnp.int32), (1,))
     x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
     x = shard(x, "batch", None, None)
@@ -716,7 +773,8 @@ def extend(params: dict, tokens: jax.Array, cfg: ModelConfig, state: dict
     for bp, kind, cache in zip(params["prelude"], cfg.prelude,
                                state["prelude"]):
         bp = _shared_params(params, kind, bp)
-        x, cache = block_extend(bp, kind, x, t0, cache, cfg, False)
+        x, cache = block_extend(bp, kind, x, t0, cache, cfg, False,
+                                n_tokens=n, update_policy=update_policy)
         new_prelude.append(cache)
 
     def group_step(x, xs):
@@ -726,21 +784,29 @@ def extend(params: dict, tokens: jax.Array, cfg: ModelConfig, state: dict
             bp = _shared_params(params, kind, gp[pos_i])
             managed = _policy_managed(cfg, kind, scanned=True)
             x, c = block_extend(bp, kind, x, t0, caches[pos_i], cfg, managed,
-                                pol=pol if managed else None)
+                                pol=pol if managed else None, n_tokens=n,
+                                update_policy=update_policy)
             new.append(c)
         return x, tuple(new)
 
     x, new_groups = jax.lax.scan(group_step, x,
                                  (params["pattern"], state["groups"]))
     x = rmsnorm(params["final_norm"], x)
-    logits = unembed(params["embed"], x[:, -1:], cfg.final_softcap)[:, 0]
+    if n is None:
+        x_last = x[:, -1:]
+        t_new = t0 + S
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(x, n - 1, 1, axis=1)
+        t_new = t0 + n
+    logits = unembed(params["embed"], x_last, cfg.final_softcap)[:, 0]
     new_state = {"prelude": new_prelude, "groups": new_groups,
-                 "t": t0 + S}
+                 "t": t_new}
     return logits, new_state
 
 
 def extend_slot(params: dict, tokens: jax.Array, cfg: ModelConfig,
-                state: dict, slot) -> Tuple[jax.Array, dict]:
+                state: dict, slot, n_tokens=None,
+                update_policy: bool = True) -> Tuple[jax.Array, dict]:
     """Append a turn's delta into an OCCUPIED slot of a live batched state
     — the multi-turn admission primitive, sibling of ``prefill_into_slot``.
 
@@ -750,26 +816,108 @@ def extend_slot(params: dict, tokens: jax.Array, cfg: ModelConfig,
     :func:`extend` over the delta at the slot's current ``t``, and splices
     the result back. tokens: (1, S). Returns (last-position logits (1, V),
     updated batched state). ``slot`` may be a traced scalar — one jit
-    specialisation per delta length, not per slot.
+    specialisation per delta length (per delta BUCKET with ``n_tokens``),
+    not per slot.
     """
     assert tokens.shape[0] == 1, "extend_slot extends one slot at a time"
     sub = slice_slot(state, slot)
-    logits, sub = extend(params, tokens, cfg, sub)
+    logits, sub = extend(params, tokens, cfg, sub, n_tokens=n_tokens,
+                         update_policy=update_policy)
     return logits, write_slot(state, sub, slot)
 
 
 def prefill_into_slot(params: dict, tokens: jax.Array, cfg: ModelConfig,
                       n_cache: int, state: dict, slot,
-                      extras: Optional[dict] = None
-                      ) -> Tuple[jax.Array, dict]:
+                      extras: Optional[dict] = None, n_tokens=None,
+                      build_policy: bool = True) -> Tuple[jax.Array, dict]:
     """Admit one request into a freed slot of a live batched decode state.
 
     tokens: (1, S) — a single-sequence prefill at the request's natural
     length (no cross-request padding, so its logits match the request served
     alone); the resulting caches/index/position are spliced into ``slot``.
     Returns (last-position logits (1, V), updated state). ``slot`` may be a
-    traced scalar — one jit specialisation per prompt length, not per slot.
+    traced scalar — one jit specialisation per prompt length, not per slot
+    (per prompt BUCKET with ``n_tokens`` — the pow2 bucketing the engine
+    applies on pad-safe architectures).
     """
     assert tokens.shape[0] == 1, "prefill_into_slot admits one request"
-    logits, sub = prefill(params, tokens, cfg, n_cache, extras=extras)
+    logits, sub = prefill(params, tokens, cfg, n_cache, extras=extras,
+                          n_tokens=n_tokens, build_policy=build_policy)
     return logits, write_slot(state, sub, slot)
+
+
+def rebuild_slot_policy(params: dict, tokens: jax.Array, cfg: ModelConfig,
+                        n_cache: int, state: dict, slot, n_tokens=None
+                        ) -> dict:
+    """Monolithic policy-state build for ONE chunk-admitted slot — the
+    end-of-admission pass of ``serving.chunk_state == "rebuild"``.
+
+    tokens: (1, Sp) — the admitted prompt, right-padded to the SAME bucket
+    a monolithic (bucketed) admission would use; ``n_tokens`` its valid
+    length. The slot's first ``Sp`` cached key/latent rows — written chunk
+    by chunk, numerically the prefill rows — are fed through the exact
+    ``CachePolicy.build`` path a monolithic prefill runs (same keys, same
+    chunk layout, same padding to ``n_cache``), so the resulting selection
+    state is the monolithic-build oracle's state and chunked admission
+    stays token-identical to monolithic admission for EVERY policy at any
+    retrieval budget. Only the managed layers' ``policy_state`` leaves are
+    touched. ``slot`` may be a traced scalar.
+    """
+    assert tokens.shape[0] == 1, "rebuild_slot_policy rebuilds one slot"
+    pol = policy_for(cfg.lychee)
+    if not pol.stateful:
+        return state
+    Sp = tokens.shape[1]
+    slot = jnp.asarray(slot, jnp.int32)
+    layout = None
+    if pol.needs_layout:
+        layout = make_layout(tokens, cfg, n_tokens=n_tokens)   # B=1 batched
+    new_groups = []
+    for pos_i, kind in enumerate(cfg.pattern):
+        cache = state["groups"][pos_i]
+        if not _policy_managed(cfg, kind, scanned=True) or \
+                not isinstance(cache, dict) or "policy_state" not in cache:
+            new_groups.append(cache)
+            continue
+        if kind in MLA_KINDS:
+            rows = jax.lax.dynamic_slice_in_dim(
+                cache["latent"], slot, 1, 1)[:, :, :Sp]       # (G,1,Sp,D)
+            keys = rows[:, :, None]                           # 1 logical head
+        else:
+            keys = jax.lax.dynamic_slice_in_dim(
+                cache["k"], slot, 1, 1)[:, :, :, :Sp]         # (G,1,H,Sp,d)
+        built = jax.vmap(lambda kg: pol.build_batched(
+            kg, layout, n_cache, n_tokens=n_tokens))(keys)    # (G,1,...)
+        merged = jax.tree.map(
+            lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, 1),
+            cache["policy_state"], built)
+        new_groups.append(dict(cache, policy_state=merged))
+    return dict(state, groups=tuple(new_groups))
+
+
+def mask_step_slots(old_state: dict, new_state: dict, keep: jax.Array
+                    ) -> dict:
+    """Discard a decode step's POLICY/POSITION side effects on masked slots.
+
+    ``keep``: (B,) bool — True slots keep the step's full effects; False
+    slots (mid-admission "prefilling" slots and empty slots, during the
+    chunk-interleaved decode steps) revert ``t`` and every managed layer's
+    ``policy_state`` to their pre-step values. Their K/V caches are NOT
+    reverted: the step's single garbage row at the slot's ``t`` is
+    overwritten by the admission's next chunk append (which starts exactly
+    there), so reverting the cheap leaves suffices — no O(cache) copy in
+    the interleaved hot path.
+    """
+    keep = jnp.asarray(keep, bool)
+    groups = []
+    for oc, nc in zip(old_state["groups"], new_state["groups"]):
+        if isinstance(nc, dict) and "policy_state" in nc:
+            sel = jax.tree.map(
+                lambda o, n_: jnp.where(
+                    keep.reshape((1, -1) + (1,) * (n_.ndim - 2)), n_, o),
+                oc["policy_state"], nc["policy_state"])
+            nc = dict(nc, policy_state=sel)
+        groups.append(nc)
+    t = jnp.where(keep, new_state["t"], old_state["t"])
+    return dict(new_state, groups=tuple(groups), t=t)

@@ -44,6 +44,32 @@ public ``tokens`` (the raw ``sampled`` list keeps it, because those tokens
 live in the KV cache and in the next turn's history). ``on_token(uid,
 token)`` streams every sampled token as it is produced.
 
+Admission is a **chunked-prefill state machine** (the serving-layer
+counterpart of the compiled decode path): each admission/extend prompt is
+split into fixed-size chunks (``cfg.serving.prefill_chunk``), the first
+chunk prefills into the slot and the remaining chunks stream through the
+delta-forward path (``model.extend_slot``), with ONE batched decode step
+interleaved between chunks — so live decode slots never stall longer than
+one chunk forward plus (in the default ``chunk_state="rebuild"`` mode) one
+end-of-admission policy build, instead of the entire long-prompt prefill.
+Token-budget contract: a MULTI-chunk admission contributes at most one
+``prefill_chunk``-token chunk (or its deferred policy build) per engine
+iteration, FIFO across in-flight admissions, alongside one batched decode
+step (``B`` tokens); single-chunk admissions and turn transitions — each
+itself at most one chunk of work — run to completion at admission time,
+exactly like the pre-chunking engine, so a burst of K simultaneous short
+arrivals still costs K (bounded) chunk forwards before the next decode
+step. Slots therefore have three phases: idle, *prefilling* (an
+``_AdmitJob`` feeds chunks), decoding.
+Interleaved decode steps carry an active-slot mask: a mid-admission slot's
+``t``/policy-state side effects are discarded (``model.mask_step_slots``)
+and its single garbage KV row is overwritten by the next chunk append.
+Architectures without an extend path (``model.can_extend`` False: SSM
+hybrids, MoE FFN, enc-dec/VLM) fall back to monolithic admission exactly
+as before. Prompts and deltas are padded to power-of-two length buckets
+with a valid-length mask (``n_tokens``), so admission and ``generate``
+compile O(log max_len) shapes instead of one per distinct prompt length.
+
 Scheduler contract (who owns what):
 
 * the scheduler owns WHICH session runs in which slot and when (FIFO order,
@@ -115,6 +141,31 @@ class ServeResult:
     p50_latency_s: float
     p99_latency_s: float
     mean_ttft_s: float
+    # streaming smoothness (fed by Turn.token_times_s): mean per-turn TPOT
+    # and the p99/max inter-token gap across ALL turns — the gap on a busy
+    # slot while a long prompt admits is the stall the chunked-prefill
+    # state machine bounds (benchmarks/interference.py).
+    mean_tpot_ms: float = 0.0
+    p99_itl_ms: float = 0.0
+    max_itl_ms: float = 0.0
+
+
+@dataclasses.dataclass
+class _AdmitJob:
+    """Host-side record of one in-flight chunked admission (a slot in the
+    "prefilling" phase). ``tokens`` is the FULL stream this admission must
+    feed (turn-0 prompt, extend delta led by the previous turn's final
+    sampled token, or the re-prefill history); ``pos`` counts fed tokens."""
+
+    slot: int
+    sess: Session
+    tokens: np.ndarray
+    fresh: bool                   # True -> first piece overwrites the slot
+    base_t: int                   # slot length before this job (0 if fresh)
+    seq: int                      # admission order (FIFO chunk scheduling)
+    pos: int = 0
+    multi: bool = False           # >1 piece (rebuild mode defers the build)
+    logits: object = None         # last piece's (1, V) logits
 
 
 class Engine:
@@ -140,12 +191,28 @@ class Engine:
         # multi-turn KV/index reuse needs an extend path through every
         # decode block; SSM hybrids fall back to re-prefilling the history
         self.can_extend = MD.can_extend(cfg)
+        # the same block property makes right-padded (masked) prefills
+        # exact, which is what prompt-length bucketing and chunked
+        # admission ride on
+        self.can_pad = self.can_extend
+        # stateless policies (dense, streaming) have nothing to rebuild —
+        # their chunked admissions skip the deferred-build leg entirely
+        self.policy_stateful = policy_for(cfg.lychee).stateful
+        sv = cfg.serving
+        self.prefill_chunk = int(sv.prefill_chunk)
+        self.chunk_state = sv.chunk_state
+        assert self.chunk_state in ("rebuild", "stream"), self.chunk_state
+        self.chunked = self.prefill_chunk > 0 and self.can_extend
         # debug counters (reset per serve): host-side eager samples should
         # number one per TURN (prefill/extend logits), never per token
         self.last_host_samples = 0
+        # eval_shape of the all-slots-empty state, cached per n_slots so
+        # repeated serve() calls on one Engine skip the re-trace
+        self._zero_shapes: Dict[int, object] = {}
 
         donate = (2,) if donate_state else ()
-        self._prefill = jax.jit(
+        donate3 = (3,) if donate_state else ()
+        self._prefill_nat = jax.jit(
             lambda p, tk, extras: MD.prefill(p, tk, cfg, n_cache,
                                              extras=extras))
         self._step = jax.jit(
@@ -168,8 +235,26 @@ class Engine:
             keys = slot_keys(base, uid, step)
             return sample(keys, logits, temp, top_k, top_p), ns
 
+        def _greedy_step_masked(p, tok, st, keep):
+            # the chunk-interleaved variant: slots mid-admission (and idle
+            # slots) discard the step's t/policy-state side effects
+            logits, ns = serve_step(p, tok, st, cfg)
+            ns = MD.mask_step_slots(st, ns, keep)
+            return jnp.argmax(logits, -1).astype(jnp.int32), ns
+
+        def _sampled_step_masked(p, tok, st, keep, base, uid, step, temp,
+                                 top_k, top_p):
+            logits, ns = serve_step(p, tok, st, cfg)
+            ns = MD.mask_step_slots(st, ns, keep)
+            keys = slot_keys(base, uid, step)
+            return sample(keys, logits, temp, top_k, top_p), ns
+
         self._step_greedy = jax.jit(_greedy_step, donate_argnums=donate)
         self._step_sampled = jax.jit(_sampled_step, donate_argnums=donate)
+        self._step_greedy_m = jax.jit(_greedy_step_masked,
+                                      donate_argnums=donate)
+        self._step_sampled_m = jax.jit(_sampled_step_masked,
+                                       donate_argnums=donate)
         self._prefill_slot = jax.jit(
             lambda p, tk, st, slot: MD.prefill_into_slot(
                 p, tk, cfg, n_cache, st, slot),
@@ -177,6 +262,43 @@ class Engine:
         self._extend_slot = jax.jit(
             lambda p, tk, st, slot: MD.extend_slot(p, tk, cfg, st, slot),
             donate_argnums=donate)
+        if self.can_pad:
+            # bucketed (valid-length-masked) admission family: one compile
+            # per pad bucket, not per distinct prompt length
+            self._prefill = jax.jit(
+                lambda p, tk, n, extras: MD.prefill(
+                    p, tk, cfg, n_cache, extras=extras, n_tokens=n))
+            self._prefill_slot_b = jax.jit(
+                lambda p, tk, n, st, slot: MD.prefill_into_slot(
+                    p, tk, cfg, n_cache, st, slot, n_tokens=n),
+                donate_argnums=donate3)
+            self._prefill_slot_nb = jax.jit(
+                lambda p, tk, n, st, slot: MD.prefill_into_slot(
+                    p, tk, cfg, n_cache, st, slot, n_tokens=n,
+                    build_policy=False),
+                donate_argnums=donate3)
+            self._extend_slot_u = jax.jit(
+                lambda p, tk, n, st, slot: MD.extend_slot(
+                    p, tk, cfg, st, slot, n_tokens=n),
+                donate_argnums=donate3)
+            self._extend_slot_nu = jax.jit(
+                lambda p, tk, n, st, slot: MD.extend_slot(
+                    p, tk, cfg, st, slot, n_tokens=n, update_policy=False),
+                donate_argnums=donate3)
+            self._rebuild_slot = jax.jit(
+                lambda p, tk, n, st, slot: MD.rebuild_slot_policy(
+                    p, tk, cfg, n_cache, st, slot, n_tokens=n),
+                donate_argnums=donate3)
+
+    def _pad_shape(self, n: int, cap: int) -> int:
+        """Power-of-two pad bucket for a valid length ``n``, clamped to
+        ``cap`` (so pad rows never spill into the reserved cache tail)."""
+        n = int(n)
+        if not self.cfg.serving.bucket_prompts:
+            return n
+        b = max(int(self.cfg.serving.min_bucket),
+                1 << max(0, n - 1).bit_length())
+        return max(n, min(b, int(cap)))
 
     # ------------------------------------------------------------------
     def generate(self, prompts: np.ndarray, max_new: int,
@@ -195,8 +317,17 @@ class Engine:
         top_p = jnp.full((B,), sampler.top_p, jnp.float32)
 
         t0 = time.perf_counter()
-        logits, state = self._prefill(self.params, jnp.asarray(prompts),
-                                      extras)
+        if self.can_pad:
+            # pow2 prompt-length bucketing: pad + n_tokens mask, one jit
+            # trace per bucket instead of one per distinct prompt length
+            Sp = self._pad_shape(S, self.usable)
+            padded = np.zeros((B, Sp), np.int32)
+            padded[:, :S] = prompts
+            logits, state = self._prefill(self.params, jnp.asarray(padded),
+                                          jnp.int32(S), extras)
+        else:
+            logits, state = self._prefill_nat(self.params,
+                                              jnp.asarray(prompts), extras)
         logits.block_until_ready()
         t1 = time.perf_counter()
 
@@ -238,12 +369,18 @@ class Engine:
     # Continuous batching over sessions
     # ------------------------------------------------------------------
     def _zero_state(self, n_slots: int):
-        """All-slots-empty decode state (valid: every mask False, t=0)."""
-        dummy = jax.ShapeDtypeStruct(
-            (n_slots, max(8, self.cfg.lychee.min_chunk)), jnp.int32)
-        shapes = jax.eval_shape(
-            lambda p, tk: MD.prefill(p, tk, self.cfg, self.n_cache)[1],
-            self.params, dummy)
+        """All-slots-empty decode state (valid: every mask False, t=0).
+        The ``eval_shape`` trace is cached per ``n_slots``, so repeated
+        ``serve()`` calls on one Engine only re-allocate the zero buffers
+        (they must be fresh — the decode step donates them)."""
+        shapes = self._zero_shapes.get(n_slots)
+        if shapes is None:
+            dummy = jax.ShapeDtypeStruct(
+                (n_slots, max(8, self.cfg.lychee.min_chunk)), jnp.int32)
+            shapes = jax.eval_shape(
+                lambda p, tk: MD.prefill(p, tk, self.cfg, self.n_cache)[1],
+                self.params, dummy)
+            self._zero_shapes[n_slots] = shapes
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
 
     def serve(self, requests: Sequence[Session], *, n_slots: int,
@@ -303,6 +440,9 @@ class Engine:
         temp = np.zeros((n_slots,), np.float32)
         top_k = np.zeros((n_slots,), np.int32)
         top_p = np.ones((n_slots,), np.float32)
+        slot_t = np.zeros((n_slots,), np.int64)  # host mirror of device t
+        jobs: Dict[int, _AdmitJob] = {}          # slot -> in-flight admission
+        job_seq = 0
         # an all-greedy trace keeps the leaner argmax-fused step
         all_greedy = sampler.temperature <= 0.0 and all(
             (t.sampling is None or t.sampling.temperature <= 0.0)
@@ -311,6 +451,10 @@ class Engine:
         decode_s = 0.0
         idle_s = 0.0
         self.last_host_samples = 0
+        # static mode keeps its lock-step-wave timing: admissions drain all
+        # their chunks back to back (the throughput baseline); continuous
+        # mode interleaves one decode step per chunk
+        interleave = self.chunked and mode == "continuous"
         # uid/temperature/top-k/top-p only change at turn transitions —
         # cache their device copies so the hot loop uploads just the token
         # vector and the per-slot sample counter each step
@@ -321,15 +465,18 @@ class Engine:
         def now() -> float:
             return time.perf_counter() - t0
 
-        def begin_turn(slot: int, sess: Session) -> jax.Array:
-            """Run this turn's admission primitive; returns its last-
-            position logits (1, V). Turn 0 prefills into the freed slot;
-            later turns extend the occupied slot (or re-prefill the
-            concatenated history when extension is unavailable/disabled).
-            The delta always leads with the previous turn's final sampled
-            token — it was never fed back, so its KV row is still absent.
-            """
-            nonlocal state, slots_dirty
+        def n_pieces(total: int) -> int:
+            if not self.chunked:
+                return 1
+            return -(-total // self.prefill_chunk)
+
+        def begin_job(slot: int, sess: Session) -> None:
+            """Create this turn's admission job. Turn 0 (and the re-prefill
+            fallback) is ``fresh`` — its first piece overwrites the slot;
+            extend turns feed their delta (led by the previous turn's final
+            sampled token — it was never fed back, so its KV row is still
+            absent) onto the slot's live rows."""
+            nonlocal job_seq, slots_dirty
             slots_dirty = True
             turn = sess.turns[sess.cur]
             turn.started_s = now()
@@ -339,30 +486,126 @@ class Engine:
             top_k[slot] = sp.top_k
             top_p[slot] = sp.top_p
             if sess.cur == 0:
-                logits, state = self._prefill_slot(
-                    self.params, jnp.asarray(turn.prompt[None]), state,
-                    jnp.int32(slot))
+                toks, fresh = np.asarray(turn.prompt, np.int32), True
             elif use_extend:
                 prev = sess.turns[sess.cur - 1]
-                delta = np.concatenate([
+                toks = np.concatenate([
                     np.asarray(prev.sampled[-1:], np.int32),
                     np.asarray(turn.prompt, np.int32)])
-                logits, state = self._extend_slot(
-                    self.params, jnp.asarray(delta[None]), state,
-                    jnp.int32(slot))
+                fresh = False
             else:
-                hist = sess.history_tokens(sess.cur)
-                logits, state = self._prefill_slot(
-                    self.params, jnp.asarray(hist[None]), state,
-                    jnp.int32(slot))
+                toks, fresh = sess.history_tokens(sess.cur), True
+            active[slot] = False
+            jobs[slot] = _AdmitJob(
+                slot=slot, sess=sess, tokens=toks, fresh=fresh,
+                base_t=0 if fresh else int(slot_t[slot]), seq=job_seq,
+                multi=n_pieces(len(toks)) > 1)
+            job_seq += 1
             if verbose:
                 kind = ("admit" if sess.cur == 0 else
                         "extend" if use_extend else "reprefill")
-                print(f"[serve:{mode}] t={now():7.3f}s {kind} "
+                how = (f"{n_pieces(len(toks))}x{self.prefill_chunk}-chunked"
+                       if n_pieces(len(toks)) > 1 else "monolithic")
+                print(f"[serve:{mode}] t={now():7.3f}s {kind} ({how}) "
                       f"sess{sess.uid} turn {sess.cur + 1}/{sess.n_turns} "
                       f"(S={turn.prompt_len}, gen={turn.max_new}) "
                       f"-> slot {slot}")
-            return logits
+
+        def needs_rebuild(job: _AdmitJob) -> bool:
+            return job.fresh and job.multi and self.can_pad and \
+                self.chunk_state == "rebuild" and self.policy_stateful
+
+        def rebuild_leg(slot: int, job: _AdmitJob) -> None:
+            """ONE monolithic CachePolicy.build over the chunk-streamed
+            cache rows, at the exact bucket/shape a monolithic admission
+            would have used — the monolithic-build oracle, so chunked
+            greedy outputs are token-identical to monolithic admission at
+            any retrieval budget."""
+            nonlocal state
+            total = len(job.tokens)
+            Sp = self._pad_shape(total, self.usable)
+            buf = np.zeros((1, Sp), np.int32)
+            buf[0, :total] = job.tokens
+            state = self._rebuild_slot(
+                self.params, jnp.asarray(buf), jnp.int32(total), state,
+                jnp.int32(slot))
+
+        def job_piece(slot: int) -> bool:
+            """Run ONE bounded unit of the slot's admission per engine
+            iteration: a chunk forward, or (rebuild mode) the deferred
+            policy build as its own leg — so the worst interleaved stall is
+            max(chunk forward, policy build), never their sum. True when
+            the admission is complete — ``job.logits`` then holds the
+            admission logits of the full prompt."""
+            nonlocal state
+            job = jobs[slot]
+            total = len(job.tokens)
+            if job.pos >= total:
+                # all chunks fed; the deferred build is its own iteration
+                rebuild_leg(slot, job)
+                return True
+            left = total - job.pos
+            C = self.prefill_chunk if self.chunked else left
+            take = min(C, left)
+            last = take == left
+            piece = job.tokens[job.pos:job.pos + take]
+            t_cur = job.base_t + job.pos
+            dev_slot = jnp.int32(slot)
+            if not self.can_pad:
+                # monolithic natural-length admission (SSM/MoE/enc-dec)
+                logits, state = self._prefill_slot(
+                    self.params, jnp.asarray(piece[None]), state, dev_slot)
+            else:
+                # full chunks run at the one static chunk shape; the tail
+                # (or a short/monolithic prompt) pads to its pow2 bucket,
+                # clamped so pad rows never reach the reserved cache tail
+                shape = take if (self.chunked and
+                                 take == self.prefill_chunk) else \
+                    self._pad_shape(take, self.usable - t_cur)
+                buf = np.zeros((1, shape), np.int32)
+                buf[0, :take] = piece
+                tk, n = jnp.asarray(buf), jnp.int32(take)
+                if job.fresh and job.pos == 0:
+                    fn = self._prefill_slot_nb if needs_rebuild(job) \
+                        else self._prefill_slot_b
+                elif job.fresh and needs_rebuild(job):
+                    fn = self._extend_slot_nu
+                else:
+                    fn = self._extend_slot_u
+                logits, state = fn(self.params, tk, n, state, dev_slot)
+            job.pos += take
+            job.logits = logits
+            if not last:
+                return False
+            if needs_rebuild(job):
+                if interleave:
+                    return False        # build in its own iteration
+                rebuild_leg(slot, job)
+            return True
+
+        def complete_job(slot: int) -> None:
+            """Admission complete: mark the slot decoding and sample the
+            turn's first token from the last chunk's logits."""
+            job = jobs.pop(slot)
+            sess = job.sess
+            slot_t[slot] = job.base_t + len(job.tokens)
+            active[slot] = True
+            turn = sess.turns[sess.cur]
+            if emit(slot, sess, turn, first_token(slot, turn, job.logits)):
+                advance(slot)
+
+        def run_job(slot: int) -> None:
+            """Drain the slot's admission (and any follow-up turn jobs its
+            completion spawns) without interleaving — the monolithic-timing
+            path (static mode / single-piece jobs / chunking disabled). In
+            interleave mode a multi-piece job — including one spawned
+            mid-drain by an instantly-completing turn — is left to the
+            chunk phase, preserving the bounded-stall contract."""
+            while slot in jobs:
+                if interleave and jobs[slot].multi:
+                    return
+                if job_piece(slot):
+                    complete_job(slot)
 
         def first_token(slot: int, turn: Turn, logits) -> int:
             """Sample this turn's first token from the prefill/extend
@@ -386,6 +629,7 @@ class Engine:
             """
             turn.sampled.append(tok)
             turn.tokens.append(tok)
+            turn.token_times_s.append(now())
             if turn.first_token_s is None:
                 turn.first_token_s = now()
             if on_token is not None:
@@ -406,28 +650,27 @@ class Engine:
 
         def advance(slot: int) -> None:
             """Current turn ended: start the next turn in place (the slot —
-            and its KV/index — is retained) or retire the session."""
+            and its KV/index — is retained) or retire the session. A next
+            turn becomes an admission job; single-piece jobs run to
+            completion immediately (the pre-chunking timing), multi-piece
+            jobs interleave with decode in continuous mode."""
             sess = sched.slot_of(slot)
-            while True:
-                sess.cur += 1
-                if sess.cur >= sess.n_turns:
-                    sched.finish(slot, now())
-                    active[slot] = False
-                    cur[slot] = 0
-                    if verbose:
-                        ntok = sum(len(t.tokens) for t in sess.turns)
-                        print(f"[serve:{mode}] t={now():7.3f}s finish "
-                              f"sess{sess.uid} ({ntok} tok, "
-                              f"{sess.n_turns} turns)")
-                    return
-                turn = sess.turns[sess.cur]
-                logits = begin_turn(slot, sess)
-                if not emit(slot, sess, turn, first_token(slot, turn,
-                                                          logits)):
-                    return
+            sess.cur += 1
+            if sess.cur >= sess.n_turns:
+                sched.finish(slot, now())
+                active[slot] = False
+                cur[slot] = 0
+                if verbose:
+                    ntok = sum(len(t.tokens) for t in sess.turns)
+                    print(f"[serve:{mode}] t={now():7.3f}s finish "
+                          f"sess{sess.uid} ({ntok} tok, "
+                          f"{sess.n_turns} turns)")
+                return
+            begin_job(slot, sess)
+            run_job(slot)
 
         while not sched.all_done:
-            # ---- admission phase --------------------------------------
+            # ---- admission phase: bind arrivals to free slots ----------
             if mode == "continuous" or sched.active == 0:
                 for slot in sched.free_slots():
                     if sched.next_ready(now()) is None:
@@ -436,14 +679,18 @@ class Engine:
                     sess.cur = 0
                     uid[slot] = sess.uid
                     stepc[slot] = 0
-                    active[slot] = True
-                    turn = sess.turns[0]
-                    logits = begin_turn(slot, sess)
-                    if emit(slot, sess, turn, first_token(slot, turn,
-                                                          logits)):
-                        advance(slot)
+                    # single-piece jobs prefill + emit their first token
+                    # right here (the monolithic-timing path); multi-piece
+                    # jobs are left to the bounded chunk phase
+                    begin_job(slot, sess)
+                    run_job(slot)
+            # ---- one admission chunk (bounded: <= prefill_chunk toks) --
+            if jobs:
+                slot = min(jobs, key=lambda s: jobs[s].seq)
+                if job_piece(slot):
+                    complete_job(slot)
             if not active.any():
-                if sched.pending:
+                if not jobs and sched.pending:
                     # open-loop trace: nothing can happen before the FIFO
                     # head arrives — sleep until exactly then (no 10 ms
                     # busy-poll) and book the wait as trace idleness, not
@@ -455,24 +702,40 @@ class Engine:
                 continue
 
             # ---- one lock-step decode over the live slots --------------
+            # (with an in-flight admission the masked step discards the
+            # prefilling/idle slots' side effects — see mask_step_slots)
+            stepped = active.copy()
             t_step = time.perf_counter()
             if all_greedy:
-                tok_d, state = self._step_greedy(self.params,
-                                                 jnp.asarray(cur), state)
+                if jobs:
+                    tok_d, state = self._step_greedy_m(
+                        self.params, jnp.asarray(cur), state,
+                        jnp.asarray(stepped))
+                else:
+                    tok_d, state = self._step_greedy(
+                        self.params, jnp.asarray(cur), state)
             else:
                 if slots_dirty:
                     dev_slots = (jnp.asarray(uid), jnp.asarray(temp),
                                  jnp.asarray(top_k), jnp.asarray(top_p))
                     slots_dirty = False
                 d_uid, d_temp, d_top_k, d_top_p = dev_slots
-                tok_d, state = self._step_sampled(
-                    self.params, jnp.asarray(cur), state, base,
-                    d_uid, jnp.asarray(stepc), d_temp, d_top_k, d_top_p)
+                if jobs:
+                    tok_d, state = self._step_sampled_m(
+                        self.params, jnp.asarray(cur), state,
+                        jnp.asarray(stepped), base, d_uid,
+                        jnp.asarray(stepc), d_temp, d_top_k, d_top_p)
+                else:
+                    tok_d, state = self._step_sampled(
+                        self.params, jnp.asarray(cur), state, base,
+                        d_uid, jnp.asarray(stepc), d_temp, d_top_k,
+                        d_top_p)
             tok = np.asarray(tok_d)
             n_steps += 1
             decode_s += time.perf_counter() - t_step
+            slot_t[stepped] += 1          # mirrors the device-side t + 1
             for slot in range(n_slots):
-                if not active[slot]:
+                if not stepped[slot]:
                     continue
                 sess = sched.slot_of(slot)
                 turn = sess.turns[sess.cur]
@@ -488,6 +751,9 @@ class Engine:
         total = sum(len(t.tokens) for s in done.values() for t in s.turns)
         lats = np.asarray([s.latency_s for s in done.values()])
         ttfts = np.asarray([s.ttft_s for s in done.values()])
+        tpots = [t.tpot_ms for s in done.values() for t in s.turns
+                 if t.tpot_ms is not None]
+        gaps = [g for s in done.values() for t in s.turns for g in t.itl_ms]
         busy = max(wall - idle_s, 1e-9)
         return ServeResult(
             mode=mode, requests=done, wall_s=wall, decode_s=decode_s,
@@ -495,4 +761,7 @@ class Engine:
             tokens_per_s=total / busy,
             p50_latency_s=float(np.percentile(lats, 50)) if len(lats) else 0.0,
             p99_latency_s=float(np.percentile(lats, 99)) if len(lats) else 0.0,
-            mean_ttft_s=float(ttfts.mean()) if len(ttfts) else 0.0)
+            mean_ttft_s=float(ttfts.mean()) if len(ttfts) else 0.0,
+            mean_tpot_ms=float(np.mean(tpots)) if tpots else 0.0,
+            p99_itl_ms=float(np.percentile(gaps, 99)) if gaps else 0.0,
+            max_itl_ms=float(max(gaps)) if gaps else 0.0)

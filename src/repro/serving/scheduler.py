@@ -64,6 +64,12 @@ class Turn:
     # every sampled token, pre-stop-trim — the exact device-side history
     # (``tokens`` may drop a matched stop suffix; the KV cache cannot)
     sampled: List[int] = dataclasses.field(default_factory=list)
+    # wall-clock timestamp of EVERY sampled token (trace-relative seconds,
+    # parallel to ``sampled``) — the raw series TPOT and the inter-token-gap
+    # percentiles are derived from. The max/p99 gap on a busy slot is the
+    # stall metric ``benchmarks/interference.py`` uses to show chunked
+    # admission bounding long-prompt interference.
+    token_times_s: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def prompt_len(self) -> int:
@@ -77,6 +83,32 @@ class Turn:
         if self.first_token_s is None or self.started_s is None:
             return None
         return self.first_token_s - self.started_s
+
+    @property
+    def itl_ms(self) -> List[float]:
+        """Inter-token gaps (ms) between consecutive sampled tokens of this
+        turn — empty for single-token turns."""
+        ts = self.token_times_s
+        return [1e3 * (b - a) for a, b in zip(ts, ts[1:])]
+
+    @property
+    def tpot_ms(self) -> Optional[float]:
+        """Per-turn time-per-output-token: mean inter-token gap after the
+        first token (decode-only — TTFT is excluded by construction)."""
+        gaps = self.itl_ms
+        return sum(gaps) / len(gaps) if gaps else None
+
+    @property
+    def max_itl_ms(self) -> Optional[float]:
+        gaps = self.itl_ms
+        return max(gaps) if gaps else None
+
+    @property
+    def p99_itl_ms(self) -> Optional[float]:
+        gaps = self.itl_ms
+        if not gaps:
+            return None
+        return float(np.percentile(np.asarray(gaps), 99))
 
 
 @dataclasses.dataclass

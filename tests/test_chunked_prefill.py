@@ -1,0 +1,318 @@
+"""Chunked-prefill admission + prompt-length bucketing tests (PR 5).
+
+The invariants that make bounded-stall admission safe:
+
+* chunked admission (first chunk prefilled into the slot, remaining chunks
+  through the ``extend_slot`` delta-forward, one interleaved decode step
+  between chunks) produces greedy outputs TOKEN-IDENTICAL to monolithic
+  admission for every registered cache policy — in the default
+  ``chunk_state="rebuild"`` mode at ANY retrieval budget (the
+  end-of-admission build IS the monolithic build), and in ``"stream"``
+  mode under total-coverage retrieval (the PR-4 oracle regime);
+* the interleaved decode steps of the busy slots are bit-identical to the
+  un-interleaved schedule (the masked step discards mid-admission slots'
+  side effects);
+* ring-window (gemma2) and MLA latent extend paths chunk correctly; SSM
+  hybrids and MoE archs fall back to monolithic natural-length admission;
+* per-chunk streaming state extension follows the monolithic build exactly
+  where the math is order-free (quest page min/max);
+* masked (right-padded) prefill is exact on the valid rows;
+* pow2 prompt-length bucketing compiles O(buckets) admission/generate
+  shapes, not O(distinct prompt lengths), and ``_zero_state``'s
+  ``eval_shape`` is cached per ``n_slots``;
+* ``Turn``/``ServeResult`` expose per-turn TPOT and inter-token-gap
+  percentiles (the interference benchmark's stall metric).
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LycheeConfig, get_config
+from repro.core.policy import list_policies, make_policy
+from repro.models import model as MD
+from repro.serving import Engine, Request, Session, Turn
+
+N_CACHE = 192
+
+
+def _cfg(policy="lychee", chunk=16, chunk_state="rebuild", budget=64,
+         arch="granite-3-8b", **kw):
+    """Deliberately SPARSE retrieval (budget 64 over ~100-token contexts):
+    rebuild-mode identity must hold even when selection really selects."""
+    ly = LycheeConfig(policy=policy, enabled=policy != "dense",
+                      budget=budget, sink=4, buffer_size=16, max_coarse=8,
+                      top_kg=4, full_attn_layers=0, **kw)
+    cfg = get_config(arch, reduced=True).replace(dtype="float32", lychee=ly)
+    return cfg.replace(serving=cfg.serving.replace(
+        prefill_chunk=chunk, chunk_state=chunk_state))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return MD.init_model(jax.random.key(0), _cfg())
+
+
+def _trace(cfg, long_s=70, seed=0):
+    """One busy decoder admitted first, then a long multi-chunk admission —
+    the interference shape: the busy slot decodes THROUGH the admission."""
+    rng = np.random.default_rng(seed)
+    return [
+        Request(uid=0, prompt=rng.integers(0, cfg.vocab, size=(24,))
+                .astype(np.int32), max_new=24),
+        Request(uid=1, prompt=rng.integers(0, cfg.vocab, size=(long_s,))
+                .astype(np.int32), max_new=8),
+    ]
+
+
+def _tokens(res):
+    return {uid: [t.tokens for t in s.turns] for uid, s in
+            res.requests.items()}
+
+
+# ---------------------------------------------------------------------------
+# Tentpole identity: chunked admission == monolithic admission, per policy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", sorted(list_policies()))
+def test_chunked_admission_identical_to_monolithic(params, policy):
+    """Default (rebuild) mode at a genuinely sparse budget: the 70-token
+    prompt admits as 5 chunks of 16 with decode interleaved, and every
+    token of BOTH sessions must match monolithic admission and solo
+    ``generate``."""
+    chunked = Engine(_cfg(policy, chunk=16), params, n_cache=N_CACHE,
+                     donate_state=False)
+    mono = Engine(_cfg(policy, chunk=0), params, n_cache=N_CACHE,
+                  donate_state=False)
+    assert chunked.chunked and not mono.chunked
+    rc = chunked.serve(_trace(chunked.cfg), n_slots=2)
+    rm = mono.serve(_trace(mono.cfg), n_slots=2)
+    assert _tokens(rc) == _tokens(rm), \
+        f"[{policy}] chunked admission diverged from monolithic"
+    # ... and the long request equals generate() of its prompt alone
+    long_req = _trace(chunked.cfg)[1]
+    alone = chunked.generate(long_req.prompt[None], long_req.max_new)
+    assert rc.requests[1].tokens == alone.tokens[0].tolist(), \
+        f"[{policy}] chunked admission diverged from solo generate"
+
+
+def test_chunked_multiturn_extend_identical(params):
+    """A multi-chunk turn-2 delta (40 tokens, chunk 16) streams through
+    CachePolicy.extend piecewise — same per-token trajectory as the
+    monolithic extend, so outputs match exactly."""
+    rng = np.random.default_rng(3)
+    cfgc = _cfg(chunk=16)
+
+    def sess():
+        r = np.random.default_rng(3)
+        return Session(uid=0, turns=[
+            Turn(prompt=r.integers(0, cfgc.vocab, size=(48,))
+                 .astype(np.int32), max_new=5),
+            Turn(prompt=r.integers(0, cfgc.vocab, size=(40,))
+                 .astype(np.int32), max_new=6)])
+
+    chunked = Engine(cfgc, params, n_cache=N_CACHE, donate_state=False)
+    mono = Engine(_cfg(chunk=0), params, n_cache=N_CACHE,
+                  donate_state=False)
+    rc = chunked.serve([sess()], n_slots=1)
+    rm = mono.serve([sess()], n_slots=1)
+    assert _tokens(rc) == _tokens(rm)
+    del rng
+
+
+@pytest.mark.parametrize("arch,model_kw", [
+    ("gemma2-27b", {}),                            # ring-window extend
+    ("deepseek-v3-671b", {"pattern": ("mla",)}),   # MLA latent extend
+])
+def test_chunked_admission_other_block_kinds(arch, model_kw):
+    ly = LycheeConfig(budget=64, sink=4, buffer_size=16, max_coarse=8,
+                      top_kg=4, full_attn_layers=0)
+    base = get_config(arch, reduced=True).replace(
+        dtype="float32", lychee=ly, **model_kw)
+    params = MD.init_model(jax.random.key(2), base)
+    cfgs = {c: base.replace(serving=base.serving.replace(prefill_chunk=c))
+            for c in (16, 0)}
+    toks = {}
+    for c, cfg in cfgs.items():
+        eng = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+        assert eng.can_extend
+        toks[c] = _tokens(eng.serve(_trace(cfg), n_slots=2))
+    assert toks[16] == toks[0], f"[{arch}] chunked != monolithic"
+
+
+@pytest.mark.parametrize("policy", sorted(list_policies()))
+def test_stream_mode_matches_oracle_under_total_coverage(params, policy):
+    """chunk_state="stream": every chunk extends the policy state through
+    its streaming path (lychee lazy-grafts, quest tail pages, clusterkv
+    centroid assignment). Under total-coverage retrieval the selection
+    cannot differ from the monolithic build, so outputs must match — the
+    PR-4 monolithic-build-oracle regime applied per chunk."""
+    kw = dict(budget=512, chunk_cap=32, ckv_cap_factor=8)
+    stream = Engine(_cfg(policy, chunk=16, chunk_state="stream", **kw),
+                    params, n_cache=N_CACHE, donate_state=False)
+    mono = Engine(_cfg(policy, chunk=0, **kw), params, n_cache=N_CACHE,
+                  donate_state=False)
+    rc = stream.serve(_trace(stream.cfg), n_slots=2)
+    rm = mono.serve(_trace(mono.cfg), n_slots=2)
+    assert _tokens(rc) == _tokens(rm), \
+        f"[{policy}] streamed chunk state diverged from monolithic build"
+
+
+def test_quest_chunkwise_stream_equals_monolithic_build_bitwise():
+    """Page min/max extension is order-free, so feeding the keys chunk by
+    chunk through ``CachePolicy.extend`` must reproduce the monolithic
+    ``build`` state BITWISE — the strongest per-chunk streaming oracle."""
+    ly = LycheeConfig(policy="quest", quest_page=8)
+    pol = make_policy("quest", ly)
+    rng = np.random.default_rng(0)
+    H, S, d = 2, 70, 16
+    keys = jnp.asarray(rng.standard_normal((H, N_CACHE, d)), jnp.float32)
+    ref = pol.build(keys[:, :S], None, N_CACHE, n_tokens=S)
+    C = 16
+    st = pol.build(keys[:, :C], None, N_CACHE, n_tokens=C)
+    pos = C
+    while pos < S:
+        n = min(C, S - pos)
+        st = pol.extend(st, keys, jnp.int32(pos), jnp.int32(n))
+        pos += n
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(st)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Fallbacks + degenerate chunk sizes
+# ---------------------------------------------------------------------------
+def test_ssm_and_moe_fall_back_to_monolithic():
+    for arch in ("zamba2-2.7b", "mixtral-8x22b"):
+        cfg = get_config(arch, reduced=True).replace(dtype="float32")
+        cfg = cfg.replace(serving=cfg.serving.replace(prefill_chunk=16))
+        params = MD.init_model(jax.random.key(1), cfg)
+        eng = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+        assert not eng.chunked and not eng.can_pad
+        res = eng.serve(_trace(cfg, long_s=40), n_slots=2)
+        for req in _trace(cfg, long_s=40):
+            got = res.requests[req.uid]
+            alone = eng.generate(req.prompt[None], req.max_new)
+            assert got.tokens == alone.tokens[0].tolist(), \
+                f"[{arch}] monolithic fallback diverged from solo"
+
+
+def test_chunk_size_equals_prompt_len_degenerate(params):
+    """chunk == prompt length: a single full chunk (no tail, no rebuild) —
+    must equal monolithic admission trivially."""
+    chunked = Engine(_cfg(chunk=70), params, n_cache=N_CACHE,
+                     donate_state=False)
+    mono = Engine(_cfg(chunk=0), params, n_cache=N_CACHE,
+                  donate_state=False)
+    rc = chunked.serve(_trace(chunked.cfg, long_s=70), n_slots=2)
+    rm = mono.serve(_trace(mono.cfg, long_s=70), n_slots=2)
+    assert _tokens(rc) == _tokens(rm)
+
+
+# ---------------------------------------------------------------------------
+# Masked (right-padded) prefill exactness — model level
+# ---------------------------------------------------------------------------
+def test_masked_prefill_matches_natural_prefill(params):
+    cfg = _cfg()
+    rng = np.random.default_rng(7)
+    S, Sp = 52, 64
+    prompt = rng.integers(0, cfg.vocab, size=(1, S)).astype(np.int32)
+    padded = np.zeros((1, Sp), np.int32)
+    padded[:, :S] = prompt
+    ref_logits, ref_state = MD.prefill(params, jnp.asarray(prompt), cfg,
+                                       N_CACHE)
+    got_logits, got_state = MD.prefill(params, jnp.asarray(padded), cfg,
+                                       N_CACHE, n_tokens=jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(got_logits),
+                               np.asarray(ref_logits), atol=1e-5, rtol=1e-5)
+    assert np.asarray(got_state["t"]).tolist() == [S]
+    # valid cache rows identical; the policy state built on masked keys
+    # matches the natural build
+    k_ref = np.asarray(ref_state["groups"][0]["k"])[:, :, :, :S]
+    k_got = np.asarray(got_state["groups"][0]["k"])[:, :, :, :S]
+    np.testing.assert_allclose(k_got, k_ref, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Compile-count regression: O(buckets), not O(distinct lengths)
+# ---------------------------------------------------------------------------
+def test_admission_compiles_per_bucket_not_per_length(params):
+    cfg = _cfg(chunk=512)          # prompts below the chunk: bucketed 1-piece
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    rng = np.random.default_rng(9)
+    lens = [20, 28, 40, 52, 60, 100]       # buckets: 32, 32, 64, 64, 64, 128
+    trace = [Request(uid=i, prompt=rng.integers(
+        0, cfg.vocab, size=(s,)).astype(np.int32), max_new=2)
+        for i, s in enumerate(lens)]
+    engine.serve(copy.deepcopy(trace), n_slots=2)
+    n_buckets = len({engine._pad_shape(s, engine.usable) for s in lens})
+    assert n_buckets == 3
+    assert engine._prefill_slot_b._cache_size() == n_buckets, \
+        "admission must compile once per pow2 bucket"
+    # replaying the trace adds no compilations
+    engine.serve(copy.deepcopy(trace), n_slots=2)
+    assert engine._prefill_slot_b._cache_size() == n_buckets
+
+
+def test_generate_compiles_per_bucket(params):
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    rng = np.random.default_rng(11)
+    for s in (40, 52, 60):                 # one shared 64-bucket
+        engine.generate(rng.integers(0, cfg.vocab, size=(1, s))
+                        .astype(np.int32), 2)
+    assert engine._prefill._cache_size() == 1, \
+        "generate must reuse one trace per pad bucket"
+
+
+def test_chunked_admission_compiles_chunk_plus_tail_bucket(params):
+    """A long admission compiles exactly two extend shapes: the full-chunk
+    shape and the tail's pow2 bucket."""
+    cfg = _cfg(chunk=16)
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    rng = np.random.default_rng(13)
+    for i, s in enumerate((70, 86)):       # tails 6 (->16) and 6 (->16)
+        engine.serve([Request(uid=i, prompt=rng.integers(
+            0, cfg.vocab, size=(s,)).astype(np.int32), max_new=2)],
+            n_slots=1)
+    # chunk-shape extends (16) + one tail bucket (16, padded) = 1 shape
+    assert engine._extend_slot_nu._cache_size() <= 2
+
+
+def test_zero_state_eval_shape_cached_per_n_slots(params, monkeypatch):
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    calls = {"n": 0}
+    orig = jax.eval_shape
+
+    def spy(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(jax, "eval_shape", spy)
+    engine._zero_state(2)
+    engine._zero_state(2)
+    assert calls["n"] == 1, "_zero_state must cache eval_shape per n_slots"
+    engine._zero_state(3)
+    assert calls["n"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Streaming-smoothness metrics
+# ---------------------------------------------------------------------------
+def test_turn_tpot_and_itl_metrics(params):
+    cfg = _cfg()
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    res = engine.serve(_trace(cfg), n_slots=2)
+    for sess in res.requests.values():
+        for turn in sess.turns:
+            assert len(turn.token_times_s) == len(turn.sampled)
+            if len(turn.sampled) >= 2:
+                assert turn.tpot_ms is not None and turn.tpot_ms > 0
+                assert turn.max_itl_ms >= turn.p99_itl_ms > 0
+                assert all(g >= 0 for g in turn.itl_ms)
+            else:
+                assert turn.tpot_ms is None
+    assert res.mean_tpot_ms > 0
+    assert res.max_itl_ms >= res.p99_itl_ms > 0
