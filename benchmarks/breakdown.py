@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (build_lychee, coherent_keys, emit,
+from benchmarks.common import (coherent_keys, emit,
                                structured_tokens, timeit)
 from repro.configs.base import LycheeConfig
 from repro.core import (build_index, chunk_sequence, retrieve,

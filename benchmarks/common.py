@@ -17,8 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import LycheeConfig
-from repro.core import (build_index, chunk_sequence, fixed_chunking,
-                        retrieve, synthetic_delimiter_table)
+from repro.core import (build_index, chunk_sequence,
+                        synthetic_delimiter_table)
 
 
 def coherent_keys(rng, N: int, d: int, H: int = 1, n_modes: int = 32,

@@ -5,7 +5,6 @@ monotonically as centroids coarsen, while index construction gets cheaper
 (fewer centroids). Paper picks 2 as the engineering optimum."""
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ dominate (the paper reports 40.4% vs 33.6%).
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,18 @@
+"""Static hot-path analysis: jaxpr lint rules, Pallas kernel checks, and
+engine-level donation / sharding / compile-count audits.
+
+Entry points:
+
+* ``python -m repro.analysis --fail-on warning`` — the CI gate;
+* :func:`repro.analysis.runner.run_analysis` — programmatic runs;
+* :mod:`repro.analysis.walker` — the reusable jaxpr walker (tests import
+  ``all_eqns``/``walk`` from here instead of rolling their own).
+"""
+from repro.analysis.findings import (Finding, Report, Severity,  # noqa: F401
+                                     Suppression)
+from repro.analysis.rules import (RULES, Rule, RuleContext,  # noqa: F401
+                                  get_rule, register_rule,
+                                  run_jaxpr_rules)
+from repro.analysis import pallas_checks  # noqa: F401  (registers rules)
+from repro.analysis.walker import (EqnSite, all_eqns, find_eqns,  # noqa: F401
+                                   subjaxprs, walk)

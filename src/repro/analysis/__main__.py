@@ -1,0 +1,99 @@
+"""``python -m repro.analysis`` — the static hot-path analyzer CLI.
+
+Runs every registered rule and audit over the canned decode / extend /
+chunked-admission targets, writes JSON / markdown artifacts, and exits
+nonzero when any non-suppressed finding at or above ``--fail-on`` (or any
+analyzer error) is present.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import runner as RN
+from repro.analysis import targets as TG
+from repro.analysis.findings import Severity
+from repro.analysis.rules import RULES
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static hot-path analyzer: jaxpr lint + Pallas checks "
+                    "+ donation/sharding/compile audits")
+    p.add_argument("--fail-on", default="warning",
+                   choices=[s.name.lower() for s in Severity],
+                   help="minimum severity that fails the run "
+                        "(default: warning)")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write the JSON report here")
+    p.add_argument("--markdown", metavar="PATH", default=None,
+                   help="write the markdown report here")
+    p.add_argument("--archs", nargs="+", default=list(TG.ARCHS),
+                   choices=list(TG.ARCHS))
+    p.add_argument("--policies", nargs="+", default=list(TG.POLICIES),
+                   choices=list(TG.POLICIES))
+    p.add_argument("--rules", nargs="+", default=None,
+                   metavar="RULE",
+                   help=f"run only these rules (default: all). Known: "
+                        f"{sorted(RULES) + list(RN.AUDIT_RULES)}")
+    p.add_argument("--skip", nargs="+", default=[], metavar="PASS",
+                   help=f"skip whole passes; one of {RN.PASSES}")
+    p.add_argument("--vmem-limit-mb", type=float, default=16.0,
+                   help="per-core VMEM budget for the Pallas scratch check "
+                        "(default: 16)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule registry and exit")
+    p.add_argument("-v", "--verbose", action="store_true",
+                   help="print per-target progress")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for name, rule in sorted(RULES.items()):
+            print(f"{name:28s} [{rule.severity.name.lower():7s}] "
+                  f"{rule.doc}")
+        for name in RN.AUDIT_RULES:
+            print(f"{name:28s} [audit  ] standalone audit pass")
+        return 0
+
+    known = set(RULES) | set(RN.AUDIT_RULES)
+    if args.rules:
+        bad = set(args.rules) - known
+        if bad:
+            print(f"unknown rule(s) {sorted(bad)}; known: {sorted(known)}",
+                  file=sys.stderr)
+            return 2
+
+    fail_on = Severity.parse(args.fail_on)
+    report = RN.run_analysis(
+        archs=args.archs, policies=args.policies, rules=args.rules,
+        skip=args.skip,
+        vmem_limit_bytes=int(args.vmem_limit_mb * 2 ** 20),
+        verbose=args.verbose)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(report.to_json(fail_on))
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(report.to_markdown(fail_on))
+
+    c = report.counts()
+    for f in report.findings:
+        print(f)
+    for e in report.errors:
+        print(f"analyzer-error: {e}", file=sys.stderr)
+    active = report.active(fail_on)
+    print(f"repro.analysis: {len(report.targets)} targets, "
+          f"{len(report.rules)} rules — {c['error']} error / "
+          f"{c['warning']} warning / {c['note']} note / "
+          f"{c['suppressed']} suppressed; fail-on={fail_on.name.lower()} "
+          f"-> {'FAIL' if active or report.errors else 'OK'}")
+    return 1 if (active or report.errors) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

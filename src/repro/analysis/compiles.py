@@ -1,0 +1,89 @@
+"""Compile-count audit: PR 5's O(buckets) bucketing contract, machine-checked.
+
+The serving engine promises that admission and extend compile once per
+pow2 prompt-length *bucket*, never once per distinct prompt length — the
+difference between a handful of XLA compiles at serve start and an
+unbounded compile stall every time a new prompt length shows up.
+
+The audit replays two canned traces on a reduced-config engine (real
+execution, tiny weights, CPU-fast) and reads the jit caches back through
+``_cache_size()``:
+
+* six prompts across three pow2 buckets -> ``_prefill_slot_b`` must hold
+  exactly ``n_buckets`` entries, and a verbatim replay must add zero;
+* two long chunked admissions (chunk 16, tails both bucketing to 16) ->
+  ``_extend_slot_nu`` must hold at most 2 shapes (full chunk + one tail
+  bucket).
+"""
+from __future__ import annotations
+
+import copy
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.analysis.findings import Finding, Severity
+from repro.configs.base import LycheeConfig, get_config
+from repro.models import model as MD
+from repro.serving import Engine, Request
+
+N_CACHE = 192
+
+
+def _cfg(chunk: int):
+    ly = LycheeConfig(policy="lychee", enabled=True, budget=64, sink=4,
+                      buffer_size=16, max_coarse=8, top_kg=4,
+                      full_attn_layers=0)
+    cfg = get_config("granite-3-8b", reduced=True).replace(
+        dtype="float32", lychee=ly)
+    return cfg.replace(serving=cfg.serving.replace(prefill_chunk=chunk))
+
+
+def audit_compile_counts(*, target: str = "compiles[gqa/lychee]"
+                         ) -> List[Finding]:
+    out: List[Finding] = []
+    cfg = _cfg(chunk=512)
+    params = MD.init_model(jax.random.key(0), cfg)
+    engine = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    rng = np.random.default_rng(9)
+    lens = [20, 28, 40, 52, 60, 100]
+    trace = [Request(uid=i, prompt=rng.integers(
+        0, cfg.vocab, size=(s,)).astype(np.int32), max_new=2)
+        for i, s in enumerate(lens)]
+    engine.serve(copy.deepcopy(trace), n_slots=2)
+    n_buckets = len({engine._pad_shape(s, engine.usable) for s in lens})
+    got = engine._prefill_slot_b._cache_size()
+    if got > n_buckets:
+        out.append(Finding(
+            rule="compile-count", severity=Severity.ERROR, target=target,
+            location="_prefill_slot_b",
+            message=f"admission compiled {got} shapes for "
+                    f"{len(lens)} prompts spanning {n_buckets} pow2 "
+                    f"buckets — bucketing no longer bounds compiles"))
+    engine.serve(copy.deepcopy(trace), n_slots=2)
+    got2 = engine._prefill_slot_b._cache_size()
+    if got2 > got:
+        out.append(Finding(
+            rule="compile-count", severity=Severity.ERROR, target=target,
+            location="_prefill_slot_b",
+            message=f"replaying an identical trace added "
+                    f"{got2 - got} admission compiles — shapes are not "
+                    f"cache-stable across serves"))
+
+    cfg_c = _cfg(chunk=16)
+    chunked = Engine(cfg_c, params, n_cache=N_CACHE, donate_state=False)
+    rng = np.random.default_rng(13)
+    for i, s in enumerate((70, 86)):       # tails 6 and 6 -> one 16-bucket
+        chunked.serve([Request(uid=i, prompt=rng.integers(
+            0, cfg_c.vocab, size=(s,)).astype(np.int32), max_new=2)],
+            n_slots=1)
+    got = chunked._extend_slot_nu._cache_size()
+    if got > 2:
+        out.append(Finding(
+            rule="compile-count", severity=Severity.ERROR, target=target,
+            location="_extend_slot_nu",
+            message=f"chunked admission compiled {got} extend shapes; the "
+                    f"contract is <= 2 (full-chunk shape + one pow2 tail "
+                    f"bucket)"))
+    return out

@@ -1,0 +1,170 @@
+"""Finding / severity / report containers for the static hot-path analyzer.
+
+A :class:`Finding` is one rule violation at one location inside one analysis
+*target* (a traced jaxpr, a compiled engine function, a state pytree, ...).
+Findings carry the rule name, a severity, and a free-form location string so
+``--fail-on`` gating, JSON artifacts and the markdown report all read off the
+same objects.
+
+Suppressions are *explicit and reasoned*: a :class:`Suppression` matches
+(rule, target, substring) and MUST carry a reason string — a matched finding
+is kept in the report (marked suppressed) but never counts toward the exit
+code, so every intentional contract exception stays visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+from typing import Dict, List, Sequence
+
+
+class Severity(enum.IntEnum):
+    """Ordered so ``--fail-on warning`` means ``severity >= WARNING``."""
+
+    NOTE = 0
+    WARNING = 1
+    ERROR = 2
+
+    @classmethod
+    def parse(cls, name: str) -> "Severity":
+        try:
+            return cls[name.upper()]
+        except KeyError:
+            raise ValueError(
+                f"unknown severity {name!r}; use one of "
+                f"{[s.name.lower() for s in cls]}") from None
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str                     # registry name, e.g. "no-cache-materialization"
+    severity: Severity
+    target: str                   # e.g. "decode[gqa/lychee]"
+    message: str                  # what violated the contract
+    location: str = ""            # source line / eqn summary / leaf path
+    suppressed: bool = False
+    suppress_reason: str = ""
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["severity"] = self.severity.name.lower()
+        return d
+
+    def __str__(self) -> str:
+        sup = f" [suppressed: {self.suppress_reason}]" if self.suppressed \
+            else ""
+        loc = f" @ {self.location}" if self.location else ""
+        return (f"{self.severity.name.lower():7s} {self.rule} "
+                f"({self.target}): {self.message}{loc}{sup}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """An intentional, documented exception to a rule.
+
+    ``rule`` matches exactly; ``target``/``match`` are substring matches
+    against ``Finding.target`` and ``Finding.message + location`` (empty =
+    match everything). ``reason`` is mandatory — a suppression without a
+    why is a lie to the next reader.
+    """
+
+    rule: str
+    reason: str
+    target: str = ""
+    match: str = ""
+
+    def __post_init__(self):
+        assert self.reason.strip(), "suppressions must carry a reason"
+
+    def matches(self, f: Finding) -> bool:
+        return (f.rule == self.rule
+                and self.target in f.target
+                and self.match in (f.message + " " + f.location))
+
+
+@dataclasses.dataclass
+class Report:
+    """The analyzer's output: findings + the rule/target coverage that
+    produced them (so "zero findings" is distinguishable from "didn't
+    run")."""
+
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    targets: List[str] = dataclasses.field(default_factory=list)
+    rules: List[str] = dataclasses.field(default_factory=list)
+    errors: List[str] = dataclasses.field(default_factory=list)
+
+    def extend(self, findings: Sequence[Finding]) -> None:
+        self.findings.extend(findings)
+
+    def apply_suppressions(self, sups: Sequence[Suppression]) -> None:
+        for f in self.findings:
+            if f.suppressed:
+                continue
+            for s in sups:
+                if s.matches(f):
+                    f.suppressed = True
+                    f.suppress_reason = s.reason
+                    break
+
+    def active(self, fail_on: Severity = Severity.WARNING) -> List[Finding]:
+        """Findings that count toward the exit code."""
+        return [f for f in self.findings
+                if not f.suppressed and f.severity >= fail_on]
+
+    def counts(self) -> Dict[str, int]:
+        out = {s.name.lower(): 0 for s in Severity}
+        out["suppressed"] = 0
+        for f in self.findings:
+            if f.suppressed:
+                out["suppressed"] += 1
+            else:
+                out[f.severity.name.lower()] += 1
+        return out
+
+    # ------------------------------------------------------------------
+    def to_json(self, fail_on: Severity = Severity.WARNING) -> str:
+        return json.dumps({
+            "counts": self.counts(),
+            "fail_on": fail_on.name.lower(),
+            "failed": bool(self.active(fail_on)) or bool(self.errors),
+            "targets": self.targets,
+            "rules": self.rules,
+            "errors": self.errors,
+            "findings": [f.to_dict() for f in self.findings],
+        }, indent=2)
+
+    def to_markdown(self, fail_on: Severity = Severity.WARNING) -> str:
+        c = self.counts()
+        lines = ["# Static hot-path analysis", ""]
+        lines.append(
+            f"**{c['error']} error / {c['warning']} warning / "
+            f"{c['note']} note / {c['suppressed']} suppressed** over "
+            f"{len(self.targets)} targets x {len(self.rules)} rules "
+            f"(fail-on: {fail_on.name.lower()})")
+        lines.append("")
+        if self.errors:
+            lines.append("## Analyzer errors")
+            lines += [f"- `{e}`" for e in self.errors] + [""]
+        live = [f for f in self.findings if not f.suppressed]
+        if live:
+            lines.append("## Findings")
+            lines.append("| severity | rule | target | message | location |")
+            lines.append("|---|---|---|---|---|")
+            for f in sorted(live, key=lambda f: -f.severity):
+                lines.append(
+                    f"| {f.severity.name.lower()} | `{f.rule}` | "
+                    f"{f.target} | {f.message} | `{f.location}` |")
+            lines.append("")
+        sup = [f for f in self.findings if f.suppressed]
+        if sup:
+            lines.append("## Suppressed (intentional, reasoned)")
+            for f in sup:
+                lines.append(f"- `{f.rule}` ({f.target}): {f.message} — "
+                             f"*{f.suppress_reason}*")
+            lines.append("")
+        if not live and not sup and not self.errors:
+            lines.append("No findings: every checked contract holds.")
+        lines.append("### Targets")
+        lines += [f"- `{t}`" for t in self.targets]
+        return "\n".join(lines) + "\n"

@@ -1,0 +1,160 @@
+"""Static checks over every ``pallas_call`` found in a traced jaxpr.
+
+Three classes of kernel bug are decidable at trace time (no TPU needed —
+``jax.make_jaxpr`` embeds the kernel jaxpr and grid mapping in the
+``pallas_call`` eqn params):
+
+* **grid/block divisibility** — a BlockSpec whose block shape does not
+  divide the operand shape silently over-reads garbage rows on the final
+  grid step (the kernels here pre-pad spans/tiles so every shipped grid is
+  exact; a new variant that forgets to pad trips this);
+* **DMA start/wait pairing** — every ``make_async_copy().start()`` must
+  have a matching ``wait()`` somewhere in the kernel; unbalanced counts
+  mean either a race (compute reads before the copy lands) or a hang
+  (wait on a semaphore never signalled);
+* **VMEM budget** — the per-tile footprint (VMEM block windows + VMEM
+  scratch) must fit the configurable per-core budget (~16 MB on current
+  TPUs); an oversized scratch request fails at compile time on hardware,
+  which CI on CPU hosts would never see without this check.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.rules import RuleContext, register_rule
+from repro.analysis.walker import find_eqns, walk
+
+_DMA_START = ("dma_start",)
+_DMA_WAIT = ("dma_wait",)
+# kernel operand spaces that do NOT occupy per-tile VMEM windows
+_NON_VMEM_SPACES = ("any", "smem", "semaphore_mem", "hbm")
+
+
+def _kernel_name(eqn) -> str:
+    nsi = eqn.params.get("name_and_src_info")
+    if nsi is not None:
+        return str(nsi).split(" for ")[0] or "pallas_call"
+    return eqn.params.get("name", "pallas_call")
+
+
+def _block_shape(bm):
+    bs = getattr(bm, "block_shape", None)
+    if bs is None:
+        return None
+    return [d if isinstance(d, int) else None for d in bs]
+
+
+def _array_shape(bm):
+    sd = getattr(bm, "array_shape_dtype", None)
+    return getattr(sd, "shape", None), getattr(sd, "dtype", None)
+
+
+@register_rule(
+    "pallas-grid-divisibility", Severity.WARNING,
+    "every BlockSpec block shape divides its operand shape (no silent "
+    "partial final tile)")
+def pallas_grid_divisibility(closed_jaxpr, ctx: RuleContext) -> List[Finding]:
+    out = []
+    for site in find_eqns(closed_jaxpr, ("pallas_call",)):
+        eqn = site.eqn
+        gm = eqn.params.get("grid_mapping")
+        if gm is None:
+            continue
+        kname = _kernel_name(eqn)
+        if any(not isinstance(g, int) or g <= 0
+               for g in getattr(gm, "grid", ())):
+            out.append(Finding(
+                rule="pallas-grid-divisibility", severity=Severity.WARNING,
+                target=ctx.target, location=kname,
+                message=f"kernel '{kname}': non-static/empty grid "
+                        f"{gm.grid}"))
+            continue
+        for bm in getattr(gm, "block_mappings", ()):
+            bs = _block_shape(bm)
+            ashape, _ = _array_shape(bm)
+            if bs is None or ashape is None or len(bs) != len(ashape):
+                continue
+            for dim, (b, a) in enumerate(zip(bs, ashape)):
+                if b is None or b <= 0:
+                    continue
+                if a % b:
+                    out.append(Finding(
+                        rule="pallas-grid-divisibility",
+                        severity=Severity.WARNING, target=ctx.target,
+                        location=kname,
+                        message=f"kernel '{kname}': block dim {dim} "
+                                f"({b}) does not divide operand dim "
+                                f"({a}) — final tile over-reads"))
+    return out
+
+
+@register_rule(
+    "pallas-dma-pairing", Severity.ERROR,
+    "every async-copy start has a matching wait in the kernel body "
+    "(unbalanced counts = race or hang)")
+def pallas_dma_pairing(closed_jaxpr, ctx: RuleContext) -> List[Finding]:
+    out = []
+    for site in find_eqns(closed_jaxpr, ("pallas_call",)):
+        eqn = site.eqn
+        kjaxpr = eqn.params.get("jaxpr")
+        if kjaxpr is None:
+            continue
+        kname = _kernel_name(eqn)
+        starts = sum(1 for s in walk(kjaxpr)
+                     if s.eqn.primitive.name in _DMA_START)
+        waits = sum(1 for s in walk(kjaxpr)
+                    if s.eqn.primitive.name in _DMA_WAIT)
+        if starts != waits:
+            out.append(Finding(
+                rule="pallas-dma-pairing", severity=Severity.ERROR,
+                target=ctx.target, location=kname,
+                message=f"kernel '{kname}': {starts} dma_start vs "
+                        f"{waits} dma_wait — every started copy must be "
+                        f"awaited (and vice versa)"))
+    return out
+
+
+@register_rule(
+    "pallas-vmem-budget", Severity.WARNING,
+    "per-tile VMEM footprint (block windows + scratch) fits the per-core "
+    "budget")
+def pallas_vmem_budget(closed_jaxpr, ctx: RuleContext) -> List[Finding]:
+    out = []
+    for site in find_eqns(closed_jaxpr, ("pallas_call",)):
+        eqn = site.eqn
+        kjaxpr = eqn.params.get("jaxpr")
+        if kjaxpr is None:
+            continue
+        kname = _kernel_name(eqn)
+        raw = getattr(kjaxpr, "jaxpr", kjaxpr)
+        total = 0
+        parts = []
+        for var in raw.invars:
+            aval = getattr(var, "aval", None)
+            space = str(getattr(aval, "memory_space", None) or "vmem")
+            shape = getattr(aval, "shape", None)
+            dtype = getattr(aval, "dtype", None)
+            if shape is None or dtype is None:
+                continue
+            if any(s in space for s in _NON_VMEM_SPACES):
+                continue
+            try:
+                nbytes = int(jnp.dtype(dtype).itemsize)
+            except TypeError:       # semaphores and friends
+                continue
+            for d in shape:
+                nbytes *= int(d)
+            total += nbytes
+            parts.append(f"{tuple(shape)}:{nbytes}")
+        if total > ctx.vmem_limit_bytes:
+            out.append(Finding(
+                rule="pallas-vmem-budget", severity=Severity.WARNING,
+                target=ctx.target, location=kname,
+                message=f"kernel '{kname}': per-tile VMEM estimate "
+                        f"{total / 2**20:.2f} MiB exceeds budget "
+                        f"{ctx.vmem_limit_bytes / 2**20:.2f} MiB "
+                        f"({', '.join(parts[:6])})"))
+    return out

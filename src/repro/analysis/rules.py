@@ -1,0 +1,178 @@
+"""Named jaxpr lint rules over the decode/extend/admission hot paths.
+
+Each rule is a function ``(closed_jaxpr, ctx) -> [Finding]`` registered with
+a name, default severity and a one-line contract statement. Rules operate on
+:mod:`repro.analysis.walker` equation sites, so one traced jaxpr is walked
+once per rule with no model re-execution.
+
+The size contract: ``ctx.cache_elems`` is the element count of ONE KV-cache
+leaf ``(B, Hkv, N, d)`` of the analyzed state — "cache-sized" means an array
+at least that big. Anything cache-sized materialized per decode step turns
+the O(budget) sparse path back into an O(context) one, which is exactly the
+class of regression (the pre-PR-3 per-token ``jnp.pad``) these rules fence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding, Severity
+from repro.analysis.walker import (EqnSite, aval_size, describe_eqn,
+                                   eqn_location, max_out_size, walk)
+
+
+@dataclasses.dataclass
+class RuleContext:
+    """What a jaxpr rule needs to know about the target under analysis."""
+
+    target: str                   # e.g. "decode[gqa/lychee]"
+    cache_elems: int = 0          # elements of one (B,Hkv,N,d) cache leaf
+    cache_dtype: object = None    # the bulk cache dtype (e.g. bfloat16)
+    vmem_limit_bytes: int = 16 * 2 ** 20   # per-core VMEM budget (TPU ~16MB)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    severity: Severity
+    doc: str
+    fn: Callable[[object, RuleContext], List[Finding]]
+
+    def run(self, closed_jaxpr, ctx: RuleContext) -> List[Finding]:
+        return self.fn(closed_jaxpr, ctx)
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register_rule(name: str, severity: Severity, doc: str):
+    def deco(fn):
+        RULES[name] = Rule(name, severity, doc, fn)
+        return fn
+    return deco
+
+
+def get_rule(name: str) -> Rule:
+    if name not in RULES:
+        raise KeyError(f"unknown rule {name!r}; have {sorted(RULES)}")
+    return RULES[name]
+
+
+def run_jaxpr_rules(closed_jaxpr, ctx: RuleContext,
+                    rules: Optional[List[str]] = None) -> List[Finding]:
+    """Run every (selected) registered jaxpr rule over one traced jaxpr."""
+    out: List[Finding] = []
+    for name, rule in RULES.items():
+        if rules is not None and name not in rules:
+            continue
+        out.extend(rule.run(closed_jaxpr, ctx))
+    return out
+
+
+def _finding(rule: str, sev: Severity, ctx: RuleContext, site: EqnSite,
+             msg: str) -> Finding:
+    return Finding(rule=rule, severity=sev, target=ctx.target,
+                   message=f"{msg}: {describe_eqn(site.eqn)}",
+                   location=eqn_location(site.eqn))
+
+
+# ---------------------------------------------------------------------------
+# Rule 1: no cache-sized materialization on the decode hot path
+# ---------------------------------------------------------------------------
+# pad/concatenate/copy re-create the whole cache; a cache-sized gather is a
+# token-scatter design leaking back in; a cache-sized dynamic_slice is a
+# whole-cache read-out. The per-step cache APPEND is dynamic_update_slice
+# (aliasable in-place by XLA) and deliberately not listed.
+_MATERIALIZE_PRIMS = ("pad", "concatenate", "copy", "gather", "dynamic_slice")
+
+
+@register_rule(
+    "no-cache-materialization", Severity.ERROR,
+    "no pad/concatenate/copy/gather/dynamic_slice result as large as the "
+    "KV cache inside a jitted decode/extend/admission step")
+def no_cache_materialization(closed_jaxpr, ctx: RuleContext) -> List[Finding]:
+    if not ctx.cache_elems:
+        return []
+    out = []
+    for site in walk(closed_jaxpr):
+        if site.eqn.primitive.name not in _MATERIALIZE_PRIMS:
+            continue
+        if site.in_pallas:
+            # kernel bodies address refs/scratch; the wrapper-level pad of
+            # the (B,H,C) span table is what reaches here, never the cache
+            continue
+        n = max_out_size(site.eqn)
+        if n >= ctx.cache_elems:
+            out.append(_finding(
+                "no-cache-materialization", Severity.ERROR, ctx, site,
+                f"{site.eqn.primitive.name} materializes a cache-sized "
+                f"({n} elems >= {ctx.cache_elems}) array per step"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 2: no host syncs / callbacks inside the fused decode step
+# ---------------------------------------------------------------------------
+# Any of these forces a device->host round trip (or a host-side Python
+# callback) per decode token, serializing the dispatch pipeline the engine
+# worked to keep at one launch per token.
+_HOST_SYNC_PRIMS = (
+    "pure_callback", "io_callback", "python_callback", "callback",
+    "debug_callback", "debug_print", "infeed", "outfeed",
+    "host_local_array_to_global_array", "global_array_to_host_local_array",
+)
+
+
+@register_rule(
+    "no-host-callback", Severity.ERROR,
+    "no host callbacks / infeed / debug prints traced into the fused "
+    "decode step (one device dispatch per token, no host syncs)")
+def no_host_callback(closed_jaxpr, ctx: RuleContext) -> List[Finding]:
+    out = []
+    for site in walk(closed_jaxpr):
+        if site.eqn.primitive.name in _HOST_SYNC_PRIMS:
+            out.append(_finding(
+                "no-host-callback", Severity.ERROR, ctx, site,
+                f"host-sync primitive '{site.eqn.primitive.name}' on the "
+                f"hot path"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rule 3: dtype discipline for bulk tensors
+# ---------------------------------------------------------------------------
+@register_rule(
+    "dtype-discipline", Severity.WARNING,
+    "no silent fp32 (or wider) upcast of cache-sized bulk tensors outside "
+    "kernel accumulators — bf16 KV halves the dominant decode collective")
+def dtype_discipline(closed_jaxpr, ctx: RuleContext) -> List[Finding]:
+    if not ctx.cache_elems or ctx.cache_dtype is None:
+        return []
+    if jnp.dtype(ctx.cache_dtype).itemsize >= 4:
+        return []                  # f32 cache: nothing to upcast from
+    out = []
+    for site in walk(closed_jaxpr):
+        eqn = site.eqn
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        if site.in_pallas:
+            continue               # in-kernel f32 accumulators are the norm
+        new_dtype = eqn.params.get("new_dtype")
+        if new_dtype is None or jnp.dtype(new_dtype).itemsize < 4:
+            continue
+        src = eqn.invars[0]
+        src_dt = getattr(getattr(src, "aval", None), "dtype", None)
+        if src_dt is None or jnp.dtype(src_dt).itemsize >= 4:
+            continue
+        if not jnp.issubdtype(jnp.dtype(new_dtype), jnp.floating):
+            continue
+        n = aval_size(src)
+        if n >= ctx.cache_elems:
+            out.append(_finding(
+                "dtype-discipline", Severity.WARNING, ctx, site,
+                f"bulk {src_dt} -> {jnp.dtype(new_dtype).name} upcast of "
+                f"{n} elems (>= cache size {ctx.cache_elems}) outside a "
+                f"kernel accumulator"))
+    return out

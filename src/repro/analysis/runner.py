@@ -1,0 +1,145 @@
+"""Orchestrates every static pass into one :class:`Report`.
+
+Passes (each individually skippable via ``skip``):
+
+* ``jaxpr``    — the registered jaxpr rules over every canned hot-path
+  target (decode / masked decode / kernel decode / extend / admission,
+  per arch x policy);
+* ``kernels``  — the same Pallas rules over the raw kernels at
+  representative shapes;
+* ``donation`` — engine buffer-donation audit (lowering-level aliasing);
+* ``sharding`` — state-leaf layout-rule coverage + replicated-leaf audit;
+* ``compiles`` — the O(buckets) bucketing contract via jit cache sizes.
+
+A pass that crashes is recorded in ``report.errors`` (which also fails the
+run) instead of killing the other passes — an analyzer that dies on rule 3
+must not silently skip rules 4-7.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+from repro.analysis import targets as TG
+from repro.analysis.findings import Report
+from repro.analysis.rules import RULES, run_jaxpr_rules
+from repro.analysis.suppressions import SUPPRESSIONS
+
+PASSES = ("jaxpr", "kernels", "donation", "sharding", "compiles")
+AUDIT_RULES = ("donation", "sharding-audit", "compile-count")
+
+
+def run_analysis(archs: Sequence[str] = TG.ARCHS,
+                 policies: Sequence[str] = TG.POLICIES,
+                 rules: Optional[Sequence[str]] = None,
+                 skip: Sequence[str] = (),
+                 vmem_limit_bytes: int = 16 * 2 ** 20,
+                 suppressions=None,
+                 verbose: bool = False) -> Report:
+    report = Report()
+    report.rules = sorted(RULES) + [r for r in AUDIT_RULES
+                                    if r not in (skip or ())]
+    unknown = set(skip) - set(PASSES)
+    if unknown:
+        report.errors.append(f"unknown --skip pass(es): {sorted(unknown)}; "
+                             f"have {PASSES}")
+
+    def note(msg):
+        if verbose:
+            print(f"[analysis] {msg}", flush=True)
+
+    if "jaxpr" not in skip:
+        try:
+            jtargets = TG.build_jaxpr_targets(
+                tuple(archs), tuple(policies),
+                vmem_limit_bytes=vmem_limit_bytes)
+        except Exception as e:
+            jtargets = []
+            report.errors.append(f"jaxpr target construction failed: {e!r}")
+        for t in jtargets:
+            note(f"lint {t.name}")
+            report.targets.append(t.name)
+            try:
+                report.extend(run_jaxpr_rules(
+                    t.closed_jaxpr, t.ctx,
+                    rules=_select(rules, t.rules)))
+            except Exception as e:
+                report.errors.append(f"jaxpr rules failed on {t.name}: "
+                                     f"{e!r}")
+
+    if "kernels" not in skip:
+        try:
+            ktargets = TG.build_kernel_targets(
+                vmem_limit_bytes=vmem_limit_bytes)
+        except Exception as e:
+            ktargets = []
+            report.errors.append(f"kernel target construction failed: "
+                                 f"{e!r}")
+        for t in ktargets:
+            note(f"lint {t.name}")
+            report.targets.append(t.name)
+            try:
+                report.extend(run_jaxpr_rules(
+                    t.closed_jaxpr, t.ctx,
+                    rules=_select(rules, t.rules)))
+            except Exception as e:
+                report.errors.append(f"kernel rules failed on {t.name}: "
+                                     f"{e!r}")
+
+    if "donation" not in skip and _want(rules, "donation"):
+        from repro.analysis.donation import audit_engine_donation
+        from repro.serving import Engine
+        for arch in archs:
+            name = f"engine[{arch}/lychee]"
+            note(f"donation audit {name}")
+            report.targets.append(name)
+            try:
+                engine = Engine(TG.arch_config(arch), TG.arch_params(arch),
+                                n_cache=TG.N_CACHE)
+                report.extend(audit_engine_donation(engine, target=name))
+            except Exception as e:
+                report.errors.append(f"donation audit failed on {name}: "
+                                     f"{e!r}")
+
+    if "sharding" not in skip and _want(rules, "sharding-audit"):
+        from repro.analysis.shardcheck import audit_state_sharding
+        for arch in archs:
+            for policy in policies:
+                name = f"state[{arch}/{policy}]"
+                note(f"sharding audit {name}")
+                report.targets.append(name)
+                try:
+                    shapes = TG.state_shapes(arch, policy)
+                    report.extend(audit_state_sharding(
+                        shapes, target=name,
+                        cache_elems=TG.cache_leaf_elems(shapes)))
+                except Exception as e:
+                    report.errors.append(f"sharding audit failed on "
+                                         f"{name}: {e!r}")
+
+    if "compiles" not in skip and _want(rules, "compile-count"):
+        from repro.analysis.compiles import audit_compile_counts
+        name = "compiles[gqa/lychee]"
+        note(f"compile-count audit {name}")
+        report.targets.append(name)
+        try:
+            report.extend(audit_compile_counts(target=name))
+        except Exception as e:
+            report.errors.append(f"compile-count audit failed: {e!r}")
+
+    report.apply_suppressions(
+        SUPPRESSIONS if suppressions is None else suppressions)
+    return report
+
+
+def _select(cli_rules: Optional[Sequence[str]],
+            target_rules: Optional[Tuple[str, ...]]):
+    """Intersect the CLI rule selection with a target's own rule scope."""
+    if cli_rules is None:
+        return target_rules
+    if target_rules is None:
+        return list(cli_rules)
+    return [r for r in cli_rules if r in target_rules]
+
+
+def _want(cli_rules: Optional[Sequence[str]], rule: str) -> bool:
+    return cli_rules is None or rule in cli_rules

@@ -1,0 +1,85 @@
+"""Sharding audit: every decode-state leaf must match a layout rule.
+
+``repro.sharding.rules`` maps state-leaf names to PartitionSpecs
+(``_STATE_LAYOUTS``). A leaf that no rule covers silently falls back to
+replication — fine for a scalar clock, catastrophic for a KV cache leaf
+(every device holds the full context). This audit builds the state shape
+tree for each (arch, policy), resolves specs against an abstract 2x2
+data-by-model mesh (no devices needed), and flags:
+
+* **unruled leaves** — a leaf name absent from ``_STATE_LAYOUTS`` (new
+  policy state that nobody thought about sharding);
+* **large replicated leaves** — a cache-sized leaf whose resolved spec
+  has no sharded dimension.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from repro.analysis.findings import Finding, Severity
+from repro.sharding import rules as SH
+
+
+def _abstract_mesh():
+    try:
+        return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    except TypeError:        # pragma: no cover - older AbstractMesh API
+        return jax.sharding.AbstractMesh(
+            (("data", 2), ("model", 2)))
+
+
+def _is_replicated(spec) -> bool:
+    return all(ax is None for ax in tuple(spec))
+
+
+def audit_state_sharding(state_shapes, *, target: str,
+                         cache_elems: int) -> List[Finding]:
+    """``state_shapes`` is a ShapeDtypeStruct pytree of the decode state."""
+    out: List[Finding] = []
+    mesh = _abstract_mesh()
+    try:
+        specs = SH.decode_state_specs(state_shapes, mesh,
+                                      ("data",), ("model",))
+    except Exception as e:
+        out.append(Finding(
+            rule="sharding-audit", severity=Severity.ERROR, target=target,
+            location="decode_state_specs",
+            message=f"decode_state_specs failed on this state tree: {e!r}"))
+        return out
+
+    leaves, _ = jax.tree_util.tree_flatten_with_path(state_shapes)
+    spec_leaves = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    if len(spec_leaves) != len(leaves):
+        out.append(Finding(
+            rule="sharding-audit", severity=Severity.ERROR, target=target,
+            location="decode_state_specs",
+            message=f"spec tree has {len(spec_leaves)} leaves but state has "
+                    f"{len(leaves)} — trees diverged"))
+        return out
+
+    for (path, leaf), spec in zip(leaves, spec_leaves):
+        name = SH._path_name(path)
+        pretty = jax.tree_util.keystr(path)
+        if name not in SH._STATE_LAYOUTS and name != "n":
+            out.append(Finding(
+                rule="sharding-audit", severity=Severity.WARNING,
+                target=target, location=pretty,
+                message=f"state leaf '{name}' ({pretty}, shape "
+                        f"{tuple(leaf.shape)}) has no layout rule in "
+                        f"sharding/rules.py — it will be replicated on "
+                        f"every device"))
+            continue
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        if cache_elems and n >= cache_elems and _is_replicated(spec):
+            out.append(Finding(
+                rule="sharding-audit", severity=Severity.WARNING,
+                target=target, location=pretty,
+                message=f"cache-sized leaf '{name}' ({pretty}, "
+                        f"{n} elems) resolves to a fully replicated spec "
+                        f"— every device holds the whole array"))
+    return out

@@ -1,0 +1,50 @@
+"""The repo's standing suppressions: intentional, reasoned rule exceptions.
+
+Every entry here is a contract exception we WANT — it stays visible in the
+report (marked suppressed) but never fails CI. Adding to this list requires
+a reason string; an empty reason asserts at import time.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.findings import Suppression
+
+SUPPRESSIONS: List[Suppression] = [
+    Suppression(
+        rule="no-cache-materialization",
+        target="extend[",
+        match="dynamic_slice",
+        reason="slice_slot: extend/admission extracts ONE slot's caches to "
+               "run the chunk delta-forward at B=1. Runs once per admitted "
+               "chunk (never per decode token) and is intrinsically "
+               "O(slot context) — the same order as writing the chunk's KV "
+               "into that cache, which the admission must do anyway."),
+    Suppression(
+        rule="no-cache-materialization",
+        target="extend[mla",
+        match="mla.py",
+        reason="MLA extend decompresses the latent cache into full K/V "
+               "(w_uk/w_uv expansion + rope concat) so the chunk's new "
+               "tokens can attend over the whole prior context. Extend is "
+               "a prefill-class op (once per admitted chunk / turn, never "
+               "per decode token) — see the mla.py extend docstring; the "
+               "per-token decode path stays absorbed (latent matmul form)."),
+    Suppression(
+        rule="no-cache-materialization",
+        target="extend[mla",
+        match="attention.py",
+        reason="flash_attention pads the MLA-decompressed K/V up to a "
+               "block_k multiple before blocking. Same prefill-class "
+               "extend op as the mla.py decompression; the pad is a no-op "
+               "when the context is already block-aligned."),
+    Suppression(
+        rule="dtype-discipline",
+        target="extend[mla",
+        match="attention.py",
+        reason="flash_attention's f32 block accumulator: each K/V block is "
+               "upcast for the logits/PV matmuls inside the scan step. "
+               "Bounded by block_k rows per step at serving shapes — it "
+               "only reaches cache size here because the analysis cache "
+               "(384 rows) fits in a single block."),
+]

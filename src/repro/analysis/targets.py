@@ -1,0 +1,238 @@
+"""Canned analysis targets: the hot-path jaxprs the rules run over.
+
+One *target* is a traced jaxpr of a real engine-path function at
+representative serving shapes, for one (architecture, cache-policy) pair:
+
+* ``decode``        — ``model.decode_step`` (the fused serve step body);
+* ``decode_masked`` — the chunk-interleaved variant (``decode_step`` +
+  ``mask_step_slots``), the step that runs while an admission is in flight;
+* ``decode_kernel`` — decode with the Pallas span executor forced on
+  (``use_kernel=True``), so the kernel-path jaxpr (and its ``pallas_call``)
+  is linted even on CPU hosts;
+* ``extend``        — ``model.extend_slot`` with a traced ``n_tokens``
+  valid-length mask: BOTH the multi-turn delta forward and the
+  chunked-admission chunk feed trace through this one path;
+* ``admit``         — ``model.prefill_into_slot`` (bucketed, masked). The
+  admission prefill legitimately materializes the cache once per prompt,
+  so this target runs only the callback/dtype/pallas rules — the
+  materialization rule is a per-STEP contract.
+
+Shapes are the reduced-config serving shapes: tracing needs no weights on
+device beyond the tiny reduced init, and every jaxpr is built with
+``jax.make_jaxpr`` — nothing executes, so the whole suite runs identically
+on CPU CI and TPU hosts.
+
+Architectures: ``gqa`` (granite-3-8b reduced — the grouped-query attention
+family) and ``mla`` (deepseek reduced with a pure-MLA pattern, the
+latent-cache family — the same substitution ``tests/test_session.py`` uses
+to reach the MLA extend path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.rules import RuleContext
+from repro.configs.base import LycheeConfig, ModelConfig, get_config
+from repro.models import model as MD
+
+ARCHS = ("gqa", "mla")
+POLICIES = ("lychee", "quest", "clusterkv", "streaming", "dense")
+SPAN_POLICIES = ("lychee", "quest", "clusterkv", "streaming")
+
+# serving shapes for the canned targets: 2 slots over a 384-row cache with
+# a 64-token retrieval budget — big enough that a budgeted span gather
+# (C * span_len rows) stays strictly below one cache leaf, so the
+# materialization rule separates O(budget) work from O(context) work
+N_CACHE = 384
+N_SLOTS = 2
+BUDGET = 64
+
+# rules that make sense per target kind (None = all registered rules)
+_ADMIT_RULES = ("no-host-callback", "dtype-discipline",
+                "pallas-grid-divisibility", "pallas-dma-pairing",
+                "pallas-vmem-budget")
+
+
+@dataclasses.dataclass
+class JaxprTarget:
+    name: str
+    closed_jaxpr: object
+    ctx: RuleContext
+    rules: Optional[Tuple[str, ...]] = None   # None = every registered rule
+
+
+def _lychee(policy: str, use_kernel=None) -> LycheeConfig:
+    return LycheeConfig(
+        policy=policy, enabled=policy != "dense", budget=BUDGET, sink=4,
+        buffer_size=16, max_coarse=8, top_kg=4, full_attn_layers=0,
+        quest_page=8, ckv_tokens_per_cluster=8, use_kernel=use_kernel)
+
+
+def arch_config(arch: str, policy: str = "lychee",
+                use_kernel=None) -> ModelConfig:
+    if arch == "gqa":
+        cfg = get_config("granite-3-8b", reduced=True)
+    elif arch == "mla":
+        # the pure-MLA latent-cache pattern (tests/test_session.py idiom):
+        # swaps the MoE FFN out so the extend path is reachable too
+        cfg = get_config("deepseek-v3-671b", reduced=True).replace(
+            pattern=("mla",))
+    else:
+        raise KeyError(f"unknown arch {arch!r}; have {ARCHS}")
+    return cfg.replace(lychee=_lychee(policy, use_kernel))
+
+
+@functools.lru_cache(maxsize=None)
+def arch_params(arch: str):
+    """Reduced-config params, shared across every policy of one arch
+    (policy choice never changes the weight pytree)."""
+    cfg = arch_config(arch)
+    return MD.init_model(jax.random.key(0), cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def state_shapes(arch: str, policy: str):
+    """ShapeDtypeStruct pytree of the N_SLOTS-slot decode state."""
+    cfg = arch_config(arch, policy)
+    params = arch_params(arch)
+    tokens = jax.ShapeDtypeStruct((N_SLOTS, 32), jnp.int32)
+    return jax.eval_shape(
+        lambda p, tk: MD.prefill(p, tk, cfg, N_CACHE)[1], params, tokens)
+
+
+def cache_leaf_elems(state) -> int:
+    """Element count of ONE per-group KV-cache leaf (B, Hkv, N, d) — the
+    "cache-sized" threshold. Scanned group leaves carry a leading groups
+    dim (STATE_BATCH_AXIS), which is dropped: a materialization inside the
+    scan body sees the per-group shape."""
+    best = 0
+    for cache in state["groups"]:
+        if not isinstance(cache, dict):
+            continue
+        for name in ("k", "v", "latent"):
+            leaf = cache.get(name)
+            if leaf is None:
+                continue
+            n = 1
+            for d in leaf.shape[1:]:          # drop the groups dim
+                n *= d
+            best = max(best, n) if best == 0 else min(best, n)
+    return best
+
+
+def cache_dtype(state):
+    for cache in state["groups"]:
+        if isinstance(cache, dict):
+            for name in ("k", "v", "latent"):
+                if name in cache:
+                    return cache[name].dtype
+    return None
+
+
+def _ctx(name: str, state, vmem_limit_bytes: int) -> RuleContext:
+    return RuleContext(target=name, cache_elems=cache_leaf_elems(state),
+                       cache_dtype=cache_dtype(state),
+                       vmem_limit_bytes=vmem_limit_bytes)
+
+
+def build_jaxpr_targets(archs=ARCHS, policies=POLICIES,
+                        vmem_limit_bytes: int = 16 * 2 ** 20
+                        ) -> List[JaxprTarget]:
+    targets: List[JaxprTarget] = []
+    tok = jax.ShapeDtypeStruct((N_SLOTS,), jnp.int32)
+    keep = jax.ShapeDtypeStruct((N_SLOTS,), jnp.bool_)
+    delta = jax.ShapeDtypeStruct((1, 24), jnp.int32)
+    prompt = jax.ShapeDtypeStruct((1, 32), jnp.int32)
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+
+    for arch in archs:
+        params = arch_params(arch)
+        for policy in policies:
+            cfg = arch_config(arch, policy)
+            state = state_shapes(arch, policy)
+            ctx = functools.partial(_ctx, state=state,
+                                    vmem_limit_bytes=vmem_limit_bytes)
+            tag = f"{arch}/{policy}"
+
+            jx = jax.make_jaxpr(
+                lambda p, tk, st, cfg=cfg: MD.decode_step(p, tk, st, cfg)
+            )(params, tok, state)
+            targets.append(JaxprTarget(f"decode[{tag}]", jx,
+                                       ctx(f"decode[{tag}]")))
+
+            def _masked(p, tk, st, kp, cfg=cfg):
+                logits, ns = MD.decode_step(p, tk, st, cfg)
+                return logits, MD.mask_step_slots(st, ns, kp)
+            jx = jax.make_jaxpr(_masked)(params, tok, state, keep)
+            targets.append(JaxprTarget(f"decode_masked[{tag}]", jx,
+                                       ctx(f"decode_masked[{tag}]")))
+
+            if policy in SPAN_POLICIES:
+                cfg_k = arch_config(arch, policy, use_kernel=True)
+                jx = jax.make_jaxpr(
+                    lambda p, tk, st, cfg=cfg_k: MD.decode_step(
+                        p, tk, st, cfg))(params, tok, state)
+                targets.append(JaxprTarget(f"decode_kernel[{tag}]", jx,
+                                           ctx(f"decode_kernel[{tag}]")))
+
+            if MD.can_extend(cfg):
+                jx = jax.make_jaxpr(
+                    lambda p, tk, n, st, s, cfg=cfg: MD.extend_slot(
+                        p, tk, cfg, st, s, n_tokens=n)
+                )(params, delta, scalar_i, state, scalar_i)
+                targets.append(JaxprTarget(f"extend[{tag}]", jx,
+                                           ctx(f"extend[{tag}]")))
+
+                jx = jax.make_jaxpr(
+                    lambda p, tk, n, st, s, cfg=cfg: MD.prefill_into_slot(
+                        p, tk, cfg, N_CACHE, st, s, n_tokens=n)
+                )(params, prompt, scalar_i, state, scalar_i)
+                targets.append(JaxprTarget(f"admit[{tag}]", jx,
+                                           ctx(f"admit[{tag}]"),
+                                           rules=_ADMIT_RULES))
+    return targets
+
+
+def build_kernel_targets(vmem_limit_bytes: int = 16 * 2 ** 20
+                         ) -> List[JaxprTarget]:
+    """The raw Pallas kernels at representative shapes — linted directly so
+    kernel regressions surface even for call sites no jaxpr target reaches.
+    ``interpret=False`` keeps the real Mosaic parameterization in the
+    traced ``pallas_call`` (tracing never lowers, so no TPU is needed)."""
+    from repro.kernels.chunk_pool import chunk_pool
+    from repro.kernels.hier_score import hier_score
+    from repro.kernels.sparse_attention import sparse_chunk_attention
+
+    B, H, G, d, N, C, M = 2, 2, 4, 32, N_CACHE, 12, 24
+    mk = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float32)
+    mi = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    targets = []
+
+    jx = jax.make_jaxpr(functools.partial(
+        sparse_chunk_attention, max_chunk=16, interpret=False))(
+        mk((B, H, G, d)), mk((B, H, N, d)), mk((B, H, N, d)),
+        mi((B, H, C)), mi((B, H, C)))
+    ctx = RuleContext(target="kernel[sparse_attention]",
+                      cache_elems=B * H * N * d,
+                      vmem_limit_bytes=vmem_limit_bytes)
+    targets.append(JaxprTarget("kernel[sparse_attention]", jx, ctx))
+
+    jx = jax.make_jaxpr(functools.partial(
+        chunk_pool, max_chunk=16, interpret=False))(
+        mk((H, N, d)), mi((M,)), mi((M,)))
+    ctx = RuleContext(target="kernel[chunk_pool]", cache_elems=0,
+                      vmem_limit_bytes=vmem_limit_bytes)
+    targets.append(JaxprTarget("kernel[chunk_pool]", jx, ctx))
+
+    jx = jax.make_jaxpr(functools.partial(hier_score, interpret=False))(
+        mk((H, d)), mk((H, M, d)), mk((H, M)),
+        jax.ShapeDtypeStruct((H, M), jnp.bool_))
+    ctx = RuleContext(target="kernel[hier_score]", cache_elems=0,
+                      vmem_limit_bytes=vmem_limit_bytes)
+    targets.append(JaxprTarget("kernel[hier_score]", jx, ctx))
+    return targets

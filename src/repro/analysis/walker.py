@@ -1,0 +1,115 @@
+"""Reusable jaxpr walker — THE one implementation (generalized from the
+ad-hoc ``_all_eqns``/``_subjaxprs`` pair that used to live in
+``tests/test_decode_fused.py``; that test now imports from here).
+
+Walks every equation of a (closed) jaxpr including all nested sub-jaxprs
+(pjit bodies, scan/while/cond branches, custom_* calls, pallas_call
+kernels), and attaches the *path* of enclosing primitives so rules can
+report "gather inside scan inside pjit" and distinguish a convert in a
+Pallas kernel body from one on the XLA hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Sequence, Tuple
+
+import jax
+
+try:                                    # jax >= 0.4.16
+    from jax.extend.core import ClosedJaxpr as _ClosedJaxpr
+except ImportError:                     # pragma: no cover - older jax
+    from jax.core import ClosedJaxpr as _ClosedJaxpr
+
+
+@dataclasses.dataclass(frozen=True)
+class EqnSite:
+    """One equation + where it sits: the chain of enclosing primitive names
+    (outermost first). ``in_pallas`` marks eqns inside a pallas_call kernel
+    body — their memory model (VMEM scratch, f32 accumulators) is exempt
+    from several XLA-hot-path rules."""
+
+    eqn: object
+    path: Tuple[str, ...]
+
+    @property
+    def in_pallas(self) -> bool:
+        return "pallas_call" in self.path
+
+
+def subjaxprs(val) -> Iterator[object]:
+    """Yield every (raw) jaxpr reachable from one eqn-param value."""
+    if isinstance(val, _ClosedJaxpr):
+        yield val.jaxpr
+    elif hasattr(val, "eqns"):          # raw Jaxpr
+        yield val
+    elif isinstance(val, (list, tuple)):
+        for v in val:
+            yield from subjaxprs(v)
+
+
+def all_eqns(jaxpr) -> Iterator[object]:
+    """Every eqn of ``jaxpr`` (a raw Jaxpr) and all nested sub-jaxprs.
+    The drop-in replacement for the old test-local ``_all_eqns``."""
+    for site in walk(jaxpr):
+        yield site.eqn
+
+
+def walk(jaxpr, path: Tuple[str, ...] = ()) -> Iterator[EqnSite]:
+    """``all_eqns`` with enclosing-primitive paths (outermost first)."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)      # accept ClosedJaxpr too
+    for eqn in jaxpr.eqns:
+        yield EqnSite(eqn, path)
+        sub_path = path + (eqn.primitive.name,)
+        for val in eqn.params.values():
+            for sub in subjaxprs(val):
+                yield from walk(sub, sub_path)
+
+
+def find_eqns(jaxpr, names: Sequence[str]) -> Iterator[EqnSite]:
+    names = set(names)
+    for site in walk(jaxpr):
+        if site.eqn.primitive.name in names:
+            yield site
+
+
+def aval_size(var) -> int:
+    """Element count of a var's aval (0 when shapeless/abstract-token)."""
+    aval = getattr(var, "aval", None)
+    if aval is None or not hasattr(aval, "shape"):
+        return 0
+    n = 1
+    for d in aval.shape:
+        if not isinstance(d, int):      # dynamic dim: treat as unsized
+            return 0
+        n *= d
+    return n
+
+
+def aval_bytes(var) -> int:
+    aval = getattr(var, "aval", None)
+    if aval is None or not hasattr(aval, "dtype"):
+        return 0
+    return aval_size(var) * aval.dtype.itemsize
+
+
+def max_out_size(eqn) -> int:
+    return max((aval_size(v) for v in eqn.outvars), default=0)
+
+
+def eqn_location(eqn) -> str:
+    """Best-effort source location of an eqn (file:line of the deepest
+    user frame), falling back to a compact eqn summary."""
+    try:
+        from jax._src import source_info_util
+        frame = source_info_util.user_frame(eqn.source_info)
+        if frame is not None:
+            fname = frame.file_name.rsplit("/", 1)[-1]
+            return f"{fname}:{frame.start_line}"
+    except Exception:
+        pass
+    return eqn.primitive.name
+
+
+def describe_eqn(eqn, max_len: int = 120) -> str:
+    s = str(eqn).replace("\n", " ")
+    return s if len(s) <= max_len else s[:max_len - 3] + "..."

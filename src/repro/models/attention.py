@@ -19,7 +19,6 @@ paper doesn't exploit; see DESIGN.md).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -35,7 +35,6 @@ precomputed patch/frame embeddings through ``extras``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -7,7 +7,6 @@ the multi-pod dry-run lowers for the ``train_4k`` input shape.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -16,7 +15,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import model as MD
-from repro.sharding.ctx import batch_axes, mesh_context
+from repro.sharding.ctx import mesh_context
 from repro.sharding.rules import param_specs
 from repro.training.optimizer import (AdamWState, adamw_init, adamw_update,
                                       lr_schedule)

@@ -1,0 +1,293 @@
+"""Gates for ``repro.analysis`` — the static hot-path analyzer.
+
+Every rule must be PROVEN LIVE: for each one there is a deliberately-bad
+input (a cache-sized ``jnp.pad``, a non-donated state arg, an unruled
+sharded leaf, a mispaired DMA, ...) asserting the rule fires with the right
+location — a lint rule nobody has seen fail is indistinguishable from a
+rule that never runs. The clean-path test then asserts the shipped decode
+paths produce zero non-suppressed findings, and the CLI smoke test runs the
+module entry point end to end.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis import (Finding, Report, RuleContext, Severity,
+                            Suppression, all_eqns, get_rule,
+                            run_jaxpr_rules, walk)
+from repro.analysis import targets as TG
+from repro.analysis.suppressions import SUPPRESSIONS
+from repro.kernels.pallas_compat import HBM
+
+CACHE = 384 * 64          # the seeded tests' "cache-sized" threshold
+
+
+def _ctx(**kw):
+    kw.setdefault("target", "seeded")
+    kw.setdefault("cache_elems", CACHE)
+    return RuleContext(**kw)
+
+
+# ---------------------------------------------------------------------------
+# The walker (the old test_decode_fused helpers, now shared)
+# ---------------------------------------------------------------------------
+def test_walker_reaches_nested_jaxprs():
+    def inner(x):
+        return jax.lax.scan(lambda c, t: (c + t, c), x.sum(), x)[0]
+
+    jx = jax.make_jaxpr(lambda x: jax.jit(inner)(x) * 2)(jnp.ones((4,)))
+    prims = [e.primitive.name for e in all_eqns(jx.jaxpr)]
+    assert "scan" in prims, "walker must descend into pjit bodies"
+    adds = [s for s in walk(jx) if s.eqn.primitive.name == "add"]
+    assert any("scan" in s.path for s in adds), \
+        "EqnSite.path must record enclosing primitives"
+
+
+# ---------------------------------------------------------------------------
+# Seeded violations: each rule fires, with the right location
+# ---------------------------------------------------------------------------
+def test_cache_materialization_fires_on_seeded_pad():
+    k = jax.ShapeDtypeStruct((384, 64), jnp.float32)
+    jx = jax.make_jaxpr(lambda k: jnp.pad(k, ((0, 8), (0, 0))))(k)
+    fs = get_rule("no-cache-materialization").run(jx, _ctx())
+    assert len(fs) == 1 and fs[0].severity == Severity.ERROR
+    assert "pad" in fs[0].message
+    assert "test_analysis.py" in fs[0].location, fs[0].location
+
+
+def test_cache_materialization_ignores_small_and_disabled():
+    k = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    jx = jax.make_jaxpr(lambda k: jnp.pad(k, ((0, 8), (0, 0))))(k)
+    assert not get_rule("no-cache-materialization").run(jx, _ctx())
+    big = jax.ShapeDtypeStruct((384, 64), jnp.float32)
+    jx = jax.make_jaxpr(lambda k: jnp.pad(k, ((0, 8), (0, 0))))(big)
+    assert not get_rule("no-cache-materialization").run(
+        jx, _ctx(cache_elems=0)), "cache_elems=0 disables the rule"
+
+
+def test_host_callback_fires_on_debug_print():
+    def f(x):
+        jax.debug.print("x={}", x.sum())
+        return x * 2
+
+    jx = jax.make_jaxpr(f)(jnp.ones((4,)))
+    fs = get_rule("no-host-callback").run(jx, _ctx())
+    assert len(fs) == 1 and fs[0].severity == Severity.ERROR
+    assert "debug_callback" in fs[0].message
+
+
+def test_dtype_discipline_fires_on_bulk_upcast():
+    k = jax.ShapeDtypeStruct((384, 64), jnp.bfloat16)
+    jx = jax.make_jaxpr(lambda k: k.astype(jnp.float32))(k)
+    ctx = _ctx(cache_dtype=jnp.bfloat16)
+    fs = get_rule("dtype-discipline").run(jx, ctx)
+    assert len(fs) == 1 and fs[0].severity == Severity.WARNING
+    assert "bfloat16" in fs[0].message and "float32" in fs[0].message
+    # an f32 cache has nothing to upcast from: rule self-disables
+    assert not get_rule("dtype-discipline").run(
+        jx, _ctx(cache_dtype=jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Seeded Pallas violations (traced only — no TPU, nothing lowers)
+# ---------------------------------------------------------------------------
+def _bad_dma_jaxpr():
+    def bad_kernel(x_hbm, o_ref, scr, sem):
+        cp = pltpu.make_async_copy(x_hbm.at[pl.ds(0, 8), :], scr.at[...],
+                                   sem)
+        cp.start()                 # deliberately never awaited
+        o_ref[...] = scr[...]
+
+    fn = pl.pallas_call(
+        bad_kernel,
+        in_specs=[pl.BlockSpec(memory_space=HBM)],
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((8, 128), jnp.float32),
+                        pltpu.SemaphoreType.DMA],
+        interpret=False)
+    return jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((16, 128), jnp.float32))
+
+
+def test_dma_pairing_fires_on_unawaited_start():
+    fs = get_rule("pallas-dma-pairing").run(_bad_dma_jaxpr(), _ctx())
+    assert len(fs) == 1 and fs[0].severity == Severity.ERROR
+    assert "1 dma_start vs 0 dma_wait" in fs[0].message
+    assert "bad_kernel" in fs[0].location
+
+
+def _indivisible_jaxpr():
+    def k2(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    fn = pl.pallas_call(
+        k2, grid=(3,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((20, 128), jnp.float32),
+        interpret=False)
+    return jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((20, 128), jnp.float32))
+
+
+def test_grid_divisibility_fires_on_partial_tile():
+    fs = get_rule("pallas-grid-divisibility").run(_indivisible_jaxpr(),
+                                                  _ctx())
+    assert fs and all(f.severity == Severity.WARNING for f in fs)
+    assert "does not divide" in fs[0].message
+
+
+def test_vmem_budget_fires_when_limit_shrinks():
+    jx = _indivisible_jaxpr()
+    assert not get_rule("pallas-vmem-budget").run(jx, _ctx())
+    fs = get_rule("pallas-vmem-budget").run(
+        jx, _ctx(vmem_limit_bytes=4096))
+    assert fs and "exceeds budget" in fs[0].message
+
+
+def test_shipped_kernels_pass_pallas_rules():
+    for t in TG.build_kernel_targets():
+        fs = run_jaxpr_rules(t.closed_jaxpr, t.ctx, rules=t.rules)
+        assert not fs, f"{t.name}: {[str(f) for f in fs]}"
+
+
+# ---------------------------------------------------------------------------
+# Donation audit: a non-donating engine is flagged, the shipped one is not
+# ---------------------------------------------------------------------------
+def test_donation_audit_fires_on_undonated_state():
+    from repro.analysis.donation import audit_engine_donation
+    from repro.serving import Engine
+
+    cfg, params = TG.arch_config("gqa"), TG.arch_params("gqa")
+    bad = Engine(cfg, params, n_cache=TG.N_CACHE, donate_state=False)
+    fs = audit_engine_donation(bad, target="seeded", compile_check=False)
+    flagged = {f.location for f in fs}
+    assert "_step_greedy" in flagged and "_prefill_slot" in flagged
+    assert all(f.severity == Severity.ERROR for f in fs)
+
+    good = Engine(cfg, params, n_cache=TG.N_CACHE)
+    assert not audit_engine_donation(good, target="clean",
+                                     compile_check=False)
+
+
+# ---------------------------------------------------------------------------
+# Sharding audit: unruled + large-replicated leaves
+# ---------------------------------------------------------------------------
+def test_sharding_audit_fires_on_unruled_leaf():
+    from repro.analysis.shardcheck import audit_state_sharding
+
+    state = {"groups": ({"k": jax.ShapeDtypeStruct((2, 2, 2, 384, 64),
+                                                   jnp.bfloat16),
+                         "rogue": jax.ShapeDtypeStruct((2, 2, 384, 64),
+                                                       jnp.bfloat16)},),
+             "t": jax.ShapeDtypeStruct((2,), jnp.int32)}
+    fs = audit_state_sharding(state, target="seeded", cache_elems=CACHE)
+    assert any("rogue" in f.message and "no layout rule" in f.message
+               for f in fs), [str(f) for f in fs]
+
+
+def test_sharding_audit_fires_on_large_replicated_leaf():
+    from repro.analysis.shardcheck import audit_state_sharding
+
+    # odd batch/head/ctx dims: every rule falls back to replication,
+    # leaving a cache-sized leaf fully replicated
+    state = {"k": jax.ShapeDtypeStruct((2, 1, 3, 385, 64), jnp.bfloat16)}
+    fs = audit_state_sharding(state, target="seeded",
+                              cache_elems=3 * 385 * 64)
+    assert any("fully replicated" in f.message for f in fs), \
+        [str(f) for f in fs]
+
+
+def test_sharding_audit_clean_on_shipped_states():
+    from repro.analysis.shardcheck import audit_state_sharding
+
+    for arch in TG.ARCHS:
+        shapes = TG.state_shapes(arch, "lychee")
+        fs = audit_state_sharding(
+            shapes, target=f"state[{arch}]",
+            cache_elems=TG.cache_leaf_elems(shapes))
+        assert not fs, f"{arch}: {[str(f) for f in fs]}"
+
+
+# ---------------------------------------------------------------------------
+# Clean path: the shipped decode jaxprs produce no non-suppressed findings
+# ---------------------------------------------------------------------------
+def test_shipped_decode_paths_clean():
+    report = Report()
+    for t in TG.build_jaxpr_targets(("gqa",), ("lychee",)):
+        report.targets.append(t.name)
+        report.extend(run_jaxpr_rules(t.closed_jaxpr, t.ctx,
+                                      rules=t.rules))
+    report.apply_suppressions(SUPPRESSIONS)
+    assert not report.active(Severity.NOTE), \
+        [str(f) for f in report.active(Severity.NOTE)]
+    # the extend target's slice_slot finding is suppressed WITH a reason,
+    # not absent — intentional exceptions must stay visible
+    sup = [f for f in report.findings if f.suppressed]
+    assert sup and all(f.suppress_reason for f in sup)
+
+
+# ---------------------------------------------------------------------------
+# Report / suppression / severity machinery
+# ---------------------------------------------------------------------------
+def test_report_gating_and_serialization():
+    r = Report(rules=["r"], targets=["t"])
+    r.extend([Finding("r", Severity.WARNING, "t", "warn msg", "loc1"),
+              Finding("r", Severity.NOTE, "t", "note msg", "loc2")])
+    assert len(r.active(Severity.WARNING)) == 1
+    assert len(r.active(Severity.NOTE)) == 2
+    assert not r.active(Severity.ERROR)
+    r.apply_suppressions([Suppression("r", reason="known", match="warn")])
+    assert not r.active(Severity.WARNING)
+    blob = json.loads(r.to_json(Severity.WARNING))
+    assert blob["failed"] is False
+    assert blob["counts"]["suppressed"] == 1
+    md = r.to_markdown()
+    assert "known" in md and "note msg" in md
+
+
+def test_suppression_requires_reason():
+    with pytest.raises(AssertionError):
+        Suppression("r", reason="   ")
+
+
+def test_severity_parse():
+    assert Severity.parse("error") is Severity.ERROR
+    with pytest.raises(ValueError):
+        Severity.parse("fatal")
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke
+# ---------------------------------------------------------------------------
+def test_cli_list_rules(capsys):
+    from repro.analysis.__main__ import main
+
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for name in ("no-cache-materialization", "pallas-dma-pairing",
+                 "donation", "sharding-audit", "compile-count"):
+        assert name in out
+
+
+def test_cli_rejects_unknown_rule():
+    from repro.analysis.__main__ import main
+
+    assert main(["--rules", "no-such-rule"]) == 2
+
+
+def test_cli_end_to_end(tmp_path):
+    from repro.analysis.__main__ import main
+
+    jpath = tmp_path / "ANALYSIS.json"
+    mpath = tmp_path / "ANALYSIS.md"
+    rc = main(["--archs", "gqa", "--policies", "dense",
+               "--skip", "donation", "sharding", "compiles", "kernels",
+               "--json", str(jpath), "--markdown", str(mpath)])
+    assert rc == 0
+    blob = json.loads(jpath.read_text())
+    assert blob["failed"] is False
+    assert any(t.startswith("decode[gqa/dense]") for t in blob["targets"])
+    assert "Static hot-path analysis" in mpath.read_text()

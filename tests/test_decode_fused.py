@@ -204,26 +204,12 @@ def test_reserved_tail_rows_stay_zero_and_capacity_is_enforced():
 # ---------------------------------------------------------------------------
 # no-copy contract: jaxpr of the kernel wrapper never pads the cache
 # ---------------------------------------------------------------------------
-def _all_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for val in eqn.params.values():
-            for sub in _subjaxprs(val):
-                yield from _all_eqns(sub)
-
-
-def _subjaxprs(val):
-    if isinstance(val, jax.extend.core.ClosedJaxpr if
-                  hasattr(jax.extend, "core") else jax.core.ClosedJaxpr):
-        yield val.jaxpr
-    elif hasattr(val, "eqns"):                    # raw Jaxpr
-        yield val
-    elif isinstance(val, (list, tuple)):
-        for v in val:
-            yield from _subjaxprs(v)
-
-
+# The ad-hoc ``_all_eqns``/``_subjaxprs`` walker that used to live here is
+# now THE shared implementation in ``repro.analysis.walker``; this test runs
+# the registered ``no-cache-materialization`` rule over the same trace.
 def test_sparse_attention_jaxpr_has_no_cache_copy():
+    from repro.analysis import RuleContext, get_rule
+
     B, H, G, d, N, C = 2, 2, 4, 32, 128 + 16, 10
     rng = np.random.default_rng(0)
     q = jnp.asarray(rng.standard_normal((B, H, G, d)), jnp.float32)
@@ -234,16 +220,12 @@ def test_sparse_attention_jaxpr_has_no_cache_copy():
     fn = functools.partial(sparse_chunk_attention, max_chunk=16,
                            interpret=True)
     jaxpr = jax.make_jaxpr(fn)(q, k, v, starts, lens)
-    cache_elems = B * H * N * d
-    offenders = []
-    for eqn in _all_eqns(jaxpr.jaxpr):
-        if eqn.primitive.name in ("pad", "concatenate", "copy"):
-            for var in eqn.invars:
-                aval = getattr(var, "aval", None)
-                if aval is not None and aval.size >= cache_elems:
-                    offenders.append(str(eqn))
+    ctx = RuleContext(target="sparse_chunk_attention",
+                      cache_elems=B * H * N * d)
+    offenders = get_rule("no-cache-materialization").run(jaxpr, ctx)
     assert not offenders, (
-        "cache-sized copy in the decode hot path:\n" + "\n".join(offenders))
+        "cache-sized copy in the decode hot path:\n"
+        + "\n".join(str(f) for f in offenders))
 
 
 # ---------------------------------------------------------------------------

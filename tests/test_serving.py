@@ -1,7 +1,6 @@
 """Serving-layer tests: engine generate loop, samplers, checkpoint
 round-trip, the Pallas-kernel decode path, and training substrate
 (microbatch equivalence, schedules)."""
-import os
 
 import jax
 import jax.numpy as jnp

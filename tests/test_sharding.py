@@ -3,7 +3,6 @@ policies in DESIGN.md §5, on a small host mesh (no 512-device init — these
 run inside the normal test process)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

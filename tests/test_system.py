@@ -17,7 +17,6 @@ Key invariants validated here:
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import LycheeConfig
 from repro.core import (build_index, chunk_sequence, fixed_chunking,
