@@ -65,6 +65,7 @@ def run_mode(engine, trace_factory, n_slots, n_busy):
         "tokens_per_s": res.tokens_per_s,
         "wall_s": res.wall_s,
         "n_steps": res.n_steps,
+        "pool": res.pool.to_dict() if res.pool else None,
     }, {uid: s.tokens for uid, s in res.requests.items()}
 
 

@@ -53,6 +53,10 @@ def main():
                     help="persist the per-policy table (+ run metadata) as "
                          "a JSON artifact — the perf-trajectory record CI "
                          "uploads per PR")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV pool (+ prefix cache); "
+                         "policies that cannot page fall back contiguous, "
+                         "and pool stats land in the JSON artifact")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -83,8 +87,10 @@ def main():
         lychee = LycheeConfig(policy=policy, enabled=policy != "dense",
                               budget=args.budget, sink=16, buffer_size=64,
                               max_coarse=32, top_kg=8, full_attn_layers=0)
-        engine = Engine(cfg0.replace(lychee=lychee), params,
-                        n_cache=n_cache, donate_state=True)
+        cfg = cfg0.replace(lychee=lychee)
+        if args.paged:
+            cfg = cfg.replace(serving=cfg.serving.replace(paged=True))
+        engine = Engine(cfg, params, n_cache=n_cache, donate_state=True)
         # warmup pays jit (one prefill per prompt length + the decode step)
         engine.serve(copy.deepcopy(warm), n_slots=args.slots,
                      mode="continuous")
@@ -93,7 +99,8 @@ def main():
         tpot_ms = 1e3 * res.decode_s / max(res.n_steps, 1)
         rows.append({"policy": policy, "tokens_per_s": res.tokens_per_s,
                      "tpot_ms": tpot_ms, "p50_s": res.p50_latency_s,
-                     "p99_s": res.p99_latency_s, "ttft_s": res.mean_ttft_s})
+                     "p99_s": res.p99_latency_s, "ttft_s": res.mean_ttft_s,
+                     "pool": res.pool.to_dict() if res.pool else None})
         if args.check:
             bad = []
             for req in trace:

@@ -1,0 +1,203 @@
+"""Prefix sharing: TTFT + pool bytes for N sessions sharing a system prompt.
+
+The paged KV pool's radix prefix cache turns repeated prompt prefixes into
+page sharing: the first session pays the full prefill and registers its
+pages; every later session that repeats the prompt is a FULL hit (spliced
+snapshot + stored logits — ZERO forward passes, bit-identical greedy
+output) and every session that extends it with a unique suffix is a
+PARTIAL hit (shared prefix pages + suffix-only extend). The contiguous
+engine re-prefills the whole prompt every time.
+
+Two scenarios over ``--sessions`` sequentially admitted sessions
+(``n_slots=1`` so session 0 registers before anyone looks up):
+
+* ``identical`` — every session sends the SAME ``--prefix-len`` prompt.
+* ``suffix``    — shared prefix + a unique ``--suffix-len`` tail.
+
+Reported per scenario: session-0 (cold) TTFT, mean warm-session TTFT for
+paged-with-prefix-cache vs contiguous, the warm speedup, token identity,
+and the pool's observability counters (hit rate, bytes saved by sharing,
+pool vs contiguous cache bytes). ``--check`` gates the acceptance claims:
+warm speedup >= 3x in the identical scenario, full-hit tokens
+bit-identical, and every warm identical session an exact hit.
+
+Run:  PYTHONPATH=src python benchmarks/prefix_reuse.py --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import platform
+
+import jax
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, LycheeConfig, get_config
+from repro.core.policy import list_policies
+from repro.models import model as MD
+from repro.serving import Engine, Session, Turn
+
+
+def make_sessions(rng, n, prefix, suffix_len, gen, vocab):
+    out = []
+    for i in range(n):
+        prompt = prefix if suffix_len == 0 else np.concatenate(
+            [prefix, rng.integers(0, vocab, size=(suffix_len,))
+             .astype(np.int32)])
+        out.append(Session(uid=i, turns=[Turn(prompt=prompt.copy(),
+                                              max_new=gen)]))
+    return out
+
+
+def run_once(engine, sessions, repeat):
+    """Serve the trace ``repeat`` times (after one warmup that pays jit);
+    per-session min TTFT plus the last run's tokens and pool stats."""
+    engine.serve(copy.deepcopy(sessions), n_slots=1, mode="continuous")
+    ttfts, res = None, None
+    for _ in range(repeat):
+        res = engine.serve(copy.deepcopy(sessions), n_slots=1,
+                           mode="continuous")
+        cur = [res.requests[s.uid].turns[0].ttft_s for s in sessions]
+        ttfts = cur if ttfts is None else [min(a, b)
+                                           for a, b in zip(ttfts, cur)]
+    tokens = {s.uid: res.requests[s.uid].turns[0].tokens for s in sessions}
+    return ttfts, tokens, res.pool
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b", choices=list(ARCH_IDS))
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--policy", default="lychee",
+                    choices=list(list_policies()))
+    ap.add_argument("--prefix-len", type=int, default=1024,
+                    help="shared system-prompt length")
+    ap.add_argument("--suffix-len", type=int, default=64,
+                    help="unique per-session tail (suffix scenario)")
+    ap.add_argument("--sessions", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--budget", type=int, default=256)
+    ap.add_argument("--repeat", type=int, default=3,
+                    help="timed serve() repeats (min TTFT is kept)")
+    ap.add_argument("--page-tokens", type=int, default=0,
+                    help="logical page size (0 = auto)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="pool capacity in pages (0 = auto)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert warm full-hit speedup >= 3x, bit-identical "
+                         "full-hit tokens, and an exact hit per warm "
+                         "identical session")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="persist the per-scenario numbers + pool stats as "
+                         "a JSON artifact (perf-trajectory record)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    lychee = LycheeConfig(policy=args.policy,
+                          enabled=args.policy != "dense",
+                          budget=args.budget, sink=16, buffer_size=64,
+                          max_coarse=32, top_kg=8, full_attn_layers=0)
+    cfg = get_config(args.arch, reduced=args.reduced).replace(
+        dtype="float32", lychee=lychee)
+    params = MD.init_model(jax.random.key(0), cfg)
+    total = args.prefix_len + args.suffix_len + args.gen
+    n_cache = (-(-total // 128) + 1) * 128      # round up + one spare page
+    rng = np.random.default_rng(args.seed)
+    prefix = rng.integers(0, cfg.vocab, size=(args.prefix_len,)) \
+        .astype(np.int32)
+    print(f"[prefix_reuse] {cfg.name} | policy={args.policy} "
+          f"prefix={args.prefix_len} suffix={args.suffix_len} "
+          f"sessions={args.sessions} gen={args.gen} n_cache={n_cache}")
+
+    eng_c = Engine(cfg, params, n_cache=n_cache, donate_state=True)
+    cfg_p = cfg.replace(serving=cfg.serving.replace(
+        paged=True, page_tokens=args.page_tokens,
+        pool_pages=args.pool_pages, prefix_cache=True))
+    eng_p = Engine(cfg_p, params, n_cache=n_cache, donate_state=True)
+    if not eng_p.paged:
+        raise SystemExit(f"policy {args.policy} cannot run paged "
+                         f"(dense fallback) — nothing to measure")
+
+    rows = []
+    failures = []
+    for scenario, suffix_len in (("identical", 0),
+                                 ("suffix", args.suffix_len)):
+        srng = np.random.default_rng(args.seed + 1)
+        sessions = make_sessions(srng, args.sessions, prefix, suffix_len,
+                                 args.gen, cfg.vocab)
+        t_c, tok_c, _ = run_once(eng_c, sessions, args.repeat)
+        t_p, tok_p, pool = run_once(eng_p, sessions, args.repeat)
+        warm_c = float(np.mean(t_c[1:]))
+        warm_p = float(np.mean(t_p[1:]))
+        speedup = warm_c / max(warm_p, 1e-9)
+        identical = tok_c == tok_p
+        row = {
+            "scenario": scenario,
+            "cold_ttft_ms": {"contiguous": 1e3 * t_c[0],
+                             "paged": 1e3 * t_p[0]},
+            "warm_ttft_ms": {"contiguous": 1e3 * warm_c,
+                             "paged": 1e3 * warm_p},
+            "warm_speedup": speedup,
+            "tokens_identical": identical,
+            "pool": pool.to_dict(),
+            "pool_bytes": pool.bytes_per_page * (pool.n_pages + 1),
+            "contiguous_bytes": pool.bytes_per_page // pool.page_rows
+            * n_cache * 1,                       # n_slots=1 private slots
+        }
+        rows.append(row)
+        if args.check:
+            n_warm = args.sessions - 1
+            if scenario == "identical":
+                if speedup < 3.0:
+                    failures.append(f"{scenario}: warm speedup "
+                                    f"{speedup:.2f}x < 3x")
+                if not identical:
+                    failures.append(f"{scenario}: full-hit tokens diverged "
+                                    f"from contiguous")
+                if pool.prefix_hits < n_warm:
+                    failures.append(f"{scenario}: {pool.prefix_hits} exact "
+                                    f"hits < {n_warm} warm sessions")
+            elif pool.prefix_hits + pool.prefix_partial_hits < n_warm:
+                failures.append(f"{scenario}: only "
+                                f"{pool.prefix_hits + pool.prefix_partial_hits}"
+                                f" hits for {n_warm} warm sessions")
+
+    print(f"\n  {'scenario':10s} {'cold ms (c/p)':>16s} "
+          f"{'warm ms (c/p)':>16s} {'speedup':>8s} {'hit rate':>9s} "
+          f"{'saved KiB':>10s} {'tok ==':>7s}")
+    for r in rows:
+        p = r["pool"]
+        print(f"  {r['scenario']:10s} "
+              f"{r['cold_ttft_ms']['contiguous']:7.1f}/"
+              f"{r['cold_ttft_ms']['paged']:7.1f} "
+              f"{r['warm_ttft_ms']['contiguous']:7.1f}/"
+              f"{r['warm_ttft_ms']['paged']:7.1f} "
+              f"{r['warm_speedup']:7.2f}x {p['prefix_hit_rate']:9.2f} "
+              f"{p['peak_bytes_saved'] / 1024:10.1f} "
+              f"{str(r['tokens_identical']):>7s}")
+
+    if args.json:
+        payload = {
+            "benchmark": "prefix_reuse",
+            "arch": cfg.name,
+            "policy": args.policy,
+            "backend": jax.default_backend(),
+            "host": platform.platform(),
+            "jax": jax.__version__,
+            "args": {k: v for k, v in vars(args).items() if k != "json"},
+            "n_cache": n_cache,
+            "checked": bool(args.check),
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"  wrote {args.json}")
+    if failures:
+        raise SystemExit("FAIL: " + "; ".join(failures))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -46,7 +46,7 @@ def two_turn_session(rng, vocab, history, delta, gen1, gen2) -> Session:
 def run_once(engine, sess_factory, reuse):
     res = engine.serve([sess_factory()], n_slots=1, reuse=reuse)
     sess = res.requests[0]
-    return sess.turns[1].ttft_s, [t.tokens for t in sess.turns]
+    return sess.turns[1].ttft_s, [t.tokens for t in sess.turns], res.pool
 
 
 def main():
@@ -115,10 +115,11 @@ def main():
 
         timings = {}
         tokens = {}
+        pool = None
         for reuse in ("extend", "reprefill"):
             best = None
             for _ in range(args.repeat):
-                ttft2, toks = run_once(engine, factory, reuse)
+                ttft2, toks, pool = run_once(engine, factory, reuse)
                 best = ttft2 if best is None else min(best, ttft2)
                 tokens[reuse] = toks
             timings[reuse] = best
@@ -130,7 +131,8 @@ def main():
                      "ttft2_extend_ms": 1e3 * timings["extend"],
                      "ttft2_reprefill_ms": 1e3 * timings["reprefill"],
                      "speedup": speedup,
-                     "turn2_identical": identical})
+                     "turn2_identical": identical,
+                     "pool": pool.to_dict() if pool else None})
         if args.check:
             if timings["extend"] >= timings["reprefill"]:
                 failures.append(f"{policy}: extend TTFT "

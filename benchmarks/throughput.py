@@ -42,6 +42,8 @@ def build_engine(args):
                           max_coarse=32, top_kg=8, full_attn_layers=0)
     cfg = get_config(args.arch, reduced=args.reduced).replace(
         dtype="float32", lychee=lychee)
+    if args.paged:
+        cfg = cfg.replace(serving=cfg.serving.replace(paged=True))
     params = MD.init_model(jax.random.key(0), cfg)
     n_cache = max(args.prompt_lens) + max(args.gen_lens) + 32
     return cfg, Engine(cfg, params, n_cache=n_cache, donate_state=True)
@@ -69,6 +71,9 @@ def main():
                          "runs under")
     ap.add_argument("--no-lychee", action="store_true",
                     help="legacy alias for --policy dense")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV pool (+ prefix cache); "
+                         "pool stats land in the JSON artifact")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="persist the static/continuous numbers as a JSON "
                          "artifact (perf-trajectory record)")
@@ -127,7 +132,8 @@ def main():
                           "decode_s": r.decode_s, "n_steps": r.n_steps,
                           "tpot_ms": 1e3 * r.decode_s / max(r.n_steps, 1),
                           "p50_s": r.p50_latency_s, "p99_s": r.p99_latency_s,
-                          "ttft_s": r.mean_ttft_s}
+                          "ttft_s": r.mean_ttft_s,
+                          "pool": r.pool.to_dict() if r.pool else None}
                       for m, r in results.items()},
         }
         with open(args.json, "w") as f:

@@ -47,4 +47,28 @@ SUPPRESSIONS: List[Suppression] = [
                "Bounded by block_k rows per step at serving shapes — it "
                "only reaches cache size here because the analysis cache "
                "(384 rows) fits in a single block."),
+    Suppression(
+        rule="no-cache-materialization",
+        target="extend_paged[mla",
+        match="mla.py",
+        reason="Paged extend gathers the slot view and runs the UNCHANGED "
+               "contiguous extend over it, so it inherits the same MLA "
+               "latent-decompression (see the extend[mla entry above). "
+               "Admission-class: once per admitted chunk / turn, O(slot "
+               "context) — never pool-sized, never per decode token."),
+    Suppression(
+        rule="no-cache-materialization",
+        target="extend_paged[mla",
+        match="attention.py",
+        reason="Same flash_attention block_k pad as the contiguous "
+               "extend[mla entry — the paged extend reuses the contiguous "
+               "math over the gathered slot view, once per admitted chunk."),
+    Suppression(
+        rule="dtype-discipline",
+        target="extend_paged[mla",
+        match="attention.py",
+        reason="Same flash_attention f32 block accumulator as the "
+               "contiguous extend[mla entry — block_k-bounded at serving "
+               "shapes; the paged extend runs the identical contiguous "
+               "kernel over the gathered slot view."),
 ]

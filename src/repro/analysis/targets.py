@@ -16,6 +16,14 @@ representative serving shapes, for one (architecture, cache-policy) pair:
   admission prefill legitimately materializes the cache once per prompt,
   so this target runs only the callback/dtype/pallas rules — the
   materialization rule is a per-STEP contract.
+* ``decode_paged`` / ``decode_paged_masked`` — the same decode step over
+  the paged-pool state (``serving.paged``): the per-slot materialization
+  threshold still applies, so the page-table translation must keep span
+  gathers at O(budget) — a pool-sized (or even slot-sized) gather per
+  step fails;
+* ``extend_paged`` / ``admit_paged`` — the paged admission family at the
+  POOL threshold: gathering one slot's contiguous view is admission-class
+  and allowed, a pool-sized gather/copy per call is the fenced regression.
 
 Shapes are the reduced-config serving shapes: tracing needs no weights on
 device beyond the tiny reduced init, and every jaxpr is built with
@@ -38,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.analysis.rules import RuleContext
 from repro.configs.base import LycheeConfig, ModelConfig, get_config
+from repro.core.paging import resolve_page_spec
 from repro.models import model as MD
 
 ARCHS = ("gqa", "mla")
@@ -128,10 +137,33 @@ def cache_leaf_elems(state) -> int:
 def cache_dtype(state):
     for cache in state["groups"]:
         if isinstance(cache, dict):
-            for name in ("k", "v", "latent"):
+            for name in ("k", "v", "latent",
+                         "pool_k", "pool_v", "pool_latent"):
                 if name in cache:
                     return cache[name].dtype
     return None
+
+
+def pool_leaf_elems(pstate) -> int:
+    """Element count of ONE per-group paged-pool leaf (Hkv, pool_rows, d) —
+    the "pool-sized" threshold of the paged targets. Paged extend/admit
+    legitimately gather ONE slot's contiguous view (an admission-class
+    cost, strictly smaller); a pool-sized materialization would be a
+    whole-pool copy per call, the regression the paged layout exists to
+    avoid."""
+    best = 0
+    for cache in pstate["groups"]:
+        if not isinstance(cache, dict):
+            continue
+        for name in ("pool_k", "pool_v", "pool_latent"):
+            leaf = cache.get(name)
+            if leaf is None:
+                continue
+            n = 1
+            for d in leaf.shape[1:]:          # drop the groups dim
+                n *= d
+            best = max(best, n) if best == 0 else min(best, n)
+    return best
 
 
 def _ctx(name: str, state, vmem_limit_bytes: int) -> RuleContext:
@@ -195,6 +227,60 @@ def build_jaxpr_targets(archs=ARCHS, policies=POLICIES,
                 targets.append(JaxprTarget(f"admit[{tag}]", jx,
                                            ctx(f"admit[{tag}]"),
                                            rules=_ADMIT_RULES))
+
+            # ---- paged KV pool targets (dense falls back to contiguous
+            # by design — can_page — so only the span policies appear) ----
+            cfg_p = cfg.replace(serving=cfg.serving.replace(paged=True))
+            if MD.can_page(cfg_p):
+                spec = resolve_page_spec(N_CACHE, cfg_p.lychee,
+                                         n_slots=N_SLOTS)
+                cfg_p = cfg_p.replace(serving=cfg_p.serving.replace(
+                    page_tokens=spec.page_tokens))
+                pstate = MD.paged_state_struct(state, spec)
+                # decode contract is the CONTIGUOUS per-slot threshold: one
+                # paged step must not materialize even one slot's cache,
+                # let alone the pool (the scalar-prefetched translation
+                # keeps span gathers at O(budget))
+                jx = jax.make_jaxpr(
+                    lambda p, tk, st, cfg=cfg_p: MD.decode_step(
+                        p, tk, st, cfg))(params, tok, pstate)
+                targets.append(JaxprTarget(f"decode_paged[{tag}]", jx,
+                                           ctx(f"decode_paged[{tag}]")))
+
+                def _masked_p(p, tk, st, kp, cfg=cfg_p):
+                    logits, ns = MD.decode_step(p, tk, st, cfg)
+                    return logits, MD.mask_step_slots(st, ns, kp)
+                jx = jax.make_jaxpr(_masked_p)(params, tok, pstate, keep)
+                targets.append(
+                    JaxprTarget(f"decode_paged_masked[{tag}]", jx,
+                                ctx(f"decode_paged_masked[{tag}]")))
+
+                # extend/admit contract is the POOL threshold: gathering
+                # one slot's contiguous view is admission-class and
+                # allowed, a pool-sized gather/copy per call is not
+                pctx = RuleContext(
+                    target="", cache_elems=pool_leaf_elems(pstate),
+                    cache_dtype=cache_dtype(pstate),
+                    vmem_limit_bytes=vmem_limit_bytes)
+                jx = jax.make_jaxpr(
+                    lambda p, tk, n, st, s, cfg=cfg_p, sp=spec:
+                    MD.extend_slot_paged(p, tk, cfg, st, s, sp, n_tokens=n)
+                )(params, delta, scalar_i, pstate, scalar_i)
+                targets.append(JaxprTarget(
+                    f"extend_paged[{tag}]", jx,
+                    dataclasses.replace(pctx,
+                                        target=f"extend_paged[{tag}]")))
+
+                row = jax.ShapeDtypeStruct((spec.max_pages,), jnp.int32)
+                jx = jax.make_jaxpr(
+                    lambda p, tk, n, st, s, r, cfg=cfg_p, sp=spec:
+                    MD.prefill_into_slot_paged(p, tk, cfg, N_CACHE, st, s,
+                                               r, sp, n_tokens=n)
+                )(params, prompt, scalar_i, pstate, scalar_i, row)
+                targets.append(JaxprTarget(
+                    f"admit_paged[{tag}]", jx,
+                    dataclasses.replace(pctx,
+                                        target=f"admit_paged[{tag}]")))
     return targets
 
 

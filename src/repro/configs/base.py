@@ -105,12 +105,34 @@ class ServingConfig:
     ``bucket_prompts`` pads prompts/deltas to power-of-two length buckets
     with a valid-length mask, so admission and ``generate`` compile
     O(log max_len) shapes instead of one per distinct prompt length.
+
+    ``paged`` swaps the per-slot contiguous KV caches of the serving
+    engine for one global paged pool with per-slot page tables
+    (``core.paging`` / ``serving.pagepool``): pages are refcounted and
+    shared across slots through a radix prefix cache, admission of a
+    cached prefix splices shared pages instead of re-prefilling, and a
+    finished slot returns its private pages to the pool. Greedy outputs
+    are bit-identical to the contiguous layout (halo-page design — see
+    ``core.paging``). Requires ``models.model.can_page``; unsupported
+    architectures and the dense policy fall back to contiguous silently.
+
+    ``page_tokens`` fixes the logical page size (0 = auto: smallest
+    multiple of the span granularity that divides ``n_cache`` and keeps
+    halo overhead low, see ``core.paging.resolve_page_spec``).
+    ``pool_pages`` sizes the global pool in pages (0 = auto:
+    ``n_slots`` full sequences — the contiguous layout's footprint).
+    ``prefix_cache=False`` keeps the paged pool but disables cross-
+    request prefix sharing.
     """
 
     prefill_chunk: int = 512      # admission chunk size; 0 = monolithic
     chunk_state: str = "rebuild"  # "rebuild" | "stream" (see above)
     bucket_prompts: bool = True   # pow2 prompt-length bucketing + n_tokens
     min_bucket: int = 16          # smallest pad bucket
+    paged: bool = False           # global paged KV pool + page tables
+    page_tokens: int = 0          # logical page size; 0 = auto
+    pool_pages: int = 0           # pool capacity in pages; 0 = auto
+    prefix_cache: bool = True     # radix prefix cache (paged mode only)
 
     def replace(self, **kw) -> "ServingConfig":
         return dataclasses.replace(self, **kw)

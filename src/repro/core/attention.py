@@ -110,15 +110,22 @@ def fused_policy_decode(q, k_cache, v_cache, pstate, t, pol,
       is sharded;
     * pure-jnp gather oracle otherwise (CPU default).
 
-    q: (B, Hq, dk); k_cache/v_cache: (B, Hkv, N, d*); pstate: batched
-    policy state (None for stateless policies); t: (B,) per-slot lengths
-    BEFORE this token. Returns (out (B, Hq, dv), updated policy state).
+    q: (B, Hq, dk); k_cache/v_cache: (B, Hkv, N, d*) — or a
+    :class:`~repro.core.paging.PagedKV` pair (batchless shared pool +
+    per-slot page-table rows), in which case the span table is translated
+    to physical pool rows (a pure base swap — spans never straddle pages,
+    the halo contract) and the executors run against the pool unchanged,
+    so outputs are bitwise identical to the contiguous layout; pstate:
+    batched policy state (None for stateless policies); t: (B,) per-slot
+    lengths BEFORE this token. Returns (out (B, Hq, dv), updated state).
     """
+    from repro.core.paging import PagedKV, translate_starts
     from repro.kernels import ops as kops
     from repro.sharding.ctx import kv_axes
 
+    paged = isinstance(k_cache, PagedKV)
     B, Hq, dk = q.shape
-    Hkv = k_cache.shape[1]
+    Hkv = k_cache.pool.shape[0] if paged else k_cache.shape[1]
     G = Hq // Hkv
     probe = q.reshape(B, Hkv, G, dk).mean(axis=2)           # (B, Hkv, dk)
 
@@ -141,7 +148,32 @@ def fused_policy_decode(q, k_cache, v_cache, pstate, t, pol,
             "cache: the single pallas_call would replicate the sharded "
             "context dim on every device. Use use_kernel=None (auto) so "
             "sharded decode takes the shard_map flash-combine executor.")
-    if use_kernel:
+    if paged:
+        if ctx_ax is not None:
+            raise ValueError(
+                "paged KV is incompatible with a context-sharded cache: "
+                "the page table indirects the context dim, so a pool row "
+                "has no fixed shard. Serve paged requests without "
+                "context_parallel(), or fall back to the contiguous "
+                "layout for ctx-sharded decode.")
+        phys = translate_starts(k_cache.tbl, starts, k_cache.spec)
+        pool_k, pool_v = k_cache.pool[None], v_cache.pool[None]
+        if use_kernel:
+            out = kops.chunk_attention(qg, pool_k, pool_v, phys, lens,
+                                       max_chunk=pol.span_len, scale=scale,
+                                       softcap=softcap, shared_cache=True)
+        else:
+            out = sparse_span_attention(qg, pool_k, pool_v, phys, lens,
+                                        max_chunk=pol.span_len, scale=scale,
+                                        softcap=softcap)
+        if v_cache.dlim is not None:
+            # lazy MLA value view: the executors ran over the FULL pool
+            # feature dim (slicing the pool would be a pool-sized copy per
+            # step); feature columns are independent in the p @ v
+            # contraction, so slicing the (B, Hq, dv) output afterwards is
+            # bitwise identical to slicing the values first
+            out = out[..., :v_cache.dlim]
+    elif use_kernel:
         out = kops.chunk_attention(qg, k_cache, v_cache, starts, lens,
                                    max_chunk=pol.span_len, scale=scale,
                                    softcap=softcap)

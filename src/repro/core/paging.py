@@ -1,0 +1,323 @@
+"""Paged KV layout: halo pages, page-table translation, bit-identical spans.
+
+The contiguous engine gives every slot ``n_cache`` private KV rows, so
+concurrency is bounded by ``n_slots x usable_rows`` even when most sessions
+are short and even when they share a system prompt.  This module is the
+device-side half of the paged subsystem (the host-side allocator/prefix
+cache lives in ``repro.serving.pagepool``): a single global pool of
+fixed-size pages plus a per-slot page table that the span executors resolve
+through.
+
+Bit-identity contract (the hard part)
+-------------------------------------
+Span selection emits ``(start, len)`` ranges with ``len <= cache_slack``
+(``core.types.cache_slack``).  Translating a span that *straddles* a page
+boundary would require splitting it into two reads, changing the attention
+reduction order and breaking bitwise identity with the contiguous layout.
+Instead every physical page carries a **halo**: page ``p`` stores its own
+``P = page_tokens`` rows followed by ``slack`` duplicate copies of logical
+page ``p+1``'s first rows.  A span starting inside page ``p`` then always
+fits inside page ``p``'s ``P + slack`` physical rows, so translation is a
+single base-address swap::
+
+    phys_start = tbl[start // P] * (P + slack) + start % P
+
+and the executor maths (gather order, mask, accumulation) is untouched —
+outputs are bitwise identical to the contiguous layout.
+
+Dump page
+---------
+Physical page ``n_pages`` (the last one) is a sacrificial **dump** page:
+page-table rows of unallocated logical pages point at it, so garbage writes
+(masked slots, the nonexistent left-neighbour of logical page 0) and reads
+past the allocated frontier land somewhere harmless instead of aliasing
+page 0.  It is never reference-counted and never read by a live span.
+
+Sharing contract
+----------------
+Page ``q`` of a prefix of length ``Lc`` is safe to share read-only iff
+``(q + 1) * P + slack <= Lc``: neither the donor's nor the reader's future
+appends can touch it (appends at position ``t >= Lc`` halo-write page
+``t//P - 1``, which fails that inequality).  The unsafe tail pages are
+copied, never shared — see ``serving.pagepool``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LycheeConfig
+from repro.core.types import cache_slack
+
+
+class PageSpec(NamedTuple):
+    """Static page-pool geometry (hashable; safe as a jit static / pytree
+    aux datum).
+
+    ``page_tokens`` logical tokens per page; ``slack`` halo rows duplicated
+    from the next page (== ``cache_slack(cfg)``, the max span length);
+    ``n_pages`` allocatable physical pages (the dump page is extra);
+    ``max_pages`` logical pages per slot (``n_cache // page_tokens``).
+    """
+
+    page_tokens: int
+    slack: int
+    n_pages: int
+    max_pages: int
+
+    @property
+    def page_rows(self) -> int:
+        return self.page_tokens + self.slack
+
+    @property
+    def dump_page(self) -> int:
+        return self.n_pages
+
+    @property
+    def dump_row(self) -> int:
+        return self.n_pages * self.page_rows
+
+    @property
+    def pool_rows(self) -> int:
+        """Physical rows in the pool incl. the dump page."""
+        return (self.n_pages + 1) * self.page_rows
+
+    @property
+    def logical_rows(self) -> int:
+        """Per-slot logical capacity (== n_cache)."""
+        return self.max_pages * self.page_tokens
+
+
+def resolve_page_spec(n_cache: int, cfg: LycheeConfig, *,
+                      page_tokens: int = 0, pool_pages: int = 0,
+                      n_slots: int = 1) -> PageSpec:
+    """Pick a page geometry for ``n_cache``-row slots.
+
+    ``page_tokens == 0`` auto-selects the smallest multiple of
+    ``span_base = max(max_chunk, quest_page, 1)`` that divides ``n_cache``,
+    is >= ``cache_slack`` (so a span never outgrows one page's halo
+    window), and is >= 128 when possible — the halo costs ``slack / P``
+    extra rows per page, so tiny pages would double the pool.
+    ``pool_pages == 0`` sizes the pool to ``n_slots`` full slots — the
+    break-even point; sharing makes it go further.
+    """
+    slack = cache_slack(cfg)
+    base = max(cfg.max_chunk, cfg.quest_page, 1)
+    if page_tokens <= 0:
+        divisors = [p for p in range(base, n_cache + 1, base)
+                    if p >= slack and n_cache % p == 0]
+        if not divisors:
+            raise ValueError(
+                f"no page size: n_cache={n_cache} has no multiple of "
+                f"span_base={base} >= slack={slack} dividing it")
+        target = max(slack, min(128, n_cache))
+        page_tokens = next((p for p in divisors if p >= target),
+                           divisors[-1])
+    if n_cache % page_tokens != 0:
+        raise ValueError(f"page_tokens={page_tokens} must divide "
+                         f"n_cache={n_cache}")
+    if page_tokens % base != 0:
+        raise ValueError(f"page_tokens={page_tokens} must be a multiple of "
+                         f"span base {base} (max_chunk/quest_page)")
+    if page_tokens < slack:
+        raise ValueError(f"page_tokens={page_tokens} < slack={slack}: a "
+                         f"span could straddle the halo")
+    max_pages = n_cache // page_tokens
+    if pool_pages <= 0:
+        pool_pages = n_slots * max_pages
+    if pool_pages < max_pages:
+        raise ValueError(f"pool_pages={pool_pages} cannot hold one full "
+                         f"slot ({max_pages} pages)")
+    return PageSpec(page_tokens=page_tokens, slack=slack,
+                    n_pages=pool_pages, max_pages=max_pages)
+
+
+@jax.tree_util.register_pytree_node_class
+class PagedKV:
+    """A (pool, page-table) pair that stands in for a contiguous
+    ``(B, H, N, d)`` KV cache in policy code.
+
+    ``pool`` is batchless — ``(H, pool_rows, d)`` (GQA) or
+    ``(1, pool_rows, D)`` (MLA latent) — and ``tbl`` is ``(B, max_pages)``
+    int32 (or ``(max_pages,)`` under vmap).  Policy ``update`` code indexes
+    single rows / short windows via :func:`kv_row` / :meth:`window`;
+    everything resolves through the table.
+
+    ``dlim`` is a LAZY feature-dim limit (static): the view behaves as if
+    the pool were ``pool[..., :dlim]`` but the slice is applied only to
+    per-row/window *gathered* blocks, never to the pool itself — slicing
+    the pool up front would materialize a pool-sized copy per decode step
+    (the MLA value view ``latent[..., :kvl]`` is the one user).
+    """
+
+    __slots__ = ("pool", "tbl", "spec", "dlim")
+
+    def __init__(self, pool, tbl, spec: PageSpec, dlim: Optional[int] = None):
+        self.pool = pool
+        self.tbl = tbl
+        self.spec = spec
+        self.dlim = dlim
+
+    def tree_flatten(self):
+        return (self.pool, self.tbl), (self.spec, self.dlim)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+    # -- contiguous-cache stand-ins (per-slot view: tbl is (max_pages,)) --
+    @property
+    def shape(self):  # mirrors keys.shape[1] uses via kv_len()
+        d = self.pool.shape[-1] if self.dlim is None else self.dlim
+        return (self.pool.shape[0], self.spec.logical_rows, d)
+
+    @property
+    def dtype(self):
+        return self.pool.dtype
+
+    def row(self, t):
+        """Logical row ``t`` -> ``(H, d)`` (per-slot view)."""
+        sp = self.spec
+        t = jnp.clip(jnp.asarray(t, jnp.int32), 0, sp.logical_rows - 1)
+        phys = self.tbl[t // sp.page_tokens] * sp.page_rows \
+            + t % sp.page_tokens
+        row = jax.vmap(
+            lambda h: jax.lax.dynamic_index_in_dim(h, phys, axis=0,
+                                                   keepdims=False)
+        )(self.pool)
+        return row if self.dlim is None else row[..., :self.dlim]
+
+    def window(self, start, length: int):
+        """Logical rows ``[start, start+length)`` -> ``(H, length, d)``.
+
+        Requires ``length <= slack`` (the halo guarantee); one
+        ``dynamic_slice`` per head, no span splitting.
+        """
+        sp = self.spec
+        if length > sp.slack + sp.page_tokens:
+            raise ValueError(f"window length {length} exceeds page_rows")
+        # clip like the contiguous gather path does: out-of-range starts
+        # (e.g. the discarded branch of a lowered lax.cond) must still
+        # index the table in bounds
+        start = jnp.clip(jnp.asarray(start, jnp.int32), 0,
+                         sp.logical_rows - 1)
+        phys = self.tbl[start // sp.page_tokens] * sp.page_rows \
+            + start % sp.page_tokens
+        win = jax.vmap(
+            lambda h: jax.lax.dynamic_slice_in_dim(h, phys, length, axis=0)
+        )(self.pool)
+        return win if self.dlim is None else win[..., :self.dlim]
+
+
+def kv_len(keys) -> int:
+    """Logical context length of a cache operand (``keys.shape[1]``)."""
+    if isinstance(keys, PagedKV):
+        return keys.spec.logical_rows
+    return keys.shape[1]
+
+
+def kv_row(keys, t):
+    """Row ``t`` of a ``(H, N, d)``-like cache operand -> ``(H, d)``."""
+    if isinstance(keys, PagedKV):
+        return keys.row(t)
+    return keys[:, jnp.clip(jnp.asarray(t, jnp.int32), 0,
+                            keys.shape[1] - 1)]
+
+
+def kv_batch_axes(keys):
+    """vmap ``in_axes`` entry for a batched cache operand: the pool is
+    shared (None) and only the page-table row is mapped."""
+    if isinstance(keys, PagedKV):
+        # aux data (spec, dlim) must match the mapped tree's exactly
+        return PagedKV(None, 0, keys.spec, keys.dlim)
+    return 0
+
+
+def translate_starts(tbl: jnp.ndarray, starts: jnp.ndarray,
+                     spec: PageSpec) -> jnp.ndarray:
+    """Translate logical span starts to physical pool rows.
+
+    ``tbl`` is ``(B, max_pages)``, ``starts`` is ``(B, H, C)`` (or any
+    ``(B, ...)``); spans never straddle pages (halo contract), so this is
+    a pure base swap.  Starts are clipped to the logical range first so
+    sentinel/over-range starts resolve through a valid table entry (which
+    is the dump page when unallocated).
+    """
+    P = spec.page_tokens
+    starts = jnp.clip(starts, 0, spec.logical_rows - 1)
+    page = starts // P
+    bdims = starts.shape[1:-1]
+    idx = page.reshape((page.shape[0], -1))
+    phys_page = jnp.take_along_axis(tbl, idx, axis=1)
+    phys_page = phys_page.reshape((page.shape[0],) + bdims
+                                  + (page.shape[-1],))
+    return phys_page * spec.page_rows + starts % P
+
+
+def append_rows(tbl: jnp.ndarray, t: jnp.ndarray,
+                spec: PageSpec) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Physical rows for appending token ``t``: (direct, halo).
+
+    ``tbl`` is ``(B, max_pages)``, ``t`` ``(B,)``.  The direct write lands
+    in page ``t // P``; when ``t % P < slack`` the row is also a halo row
+    of page ``t//P - 1`` and must be duplicated there.  For page 0 (no
+    left neighbour) the halo write routes to the dump row.
+    """
+    P, pr = spec.page_tokens, spec.page_rows
+    t = jnp.asarray(t, jnp.int32)
+    page = jnp.clip(t // P, 0, spec.max_pages - 1)
+    off = t % P
+    direct = jnp.take_along_axis(tbl, page[:, None], axis=1)[:, 0] * pr + off
+    prev = jnp.take_along_axis(tbl, jnp.maximum(page - 1, 0)[:, None],
+                               axis=1)[:, 0]
+    halo = jnp.where((off < spec.slack) & (page >= 1),
+                     prev * pr + P + off, spec.dump_row)
+    return direct, halo
+
+
+def slot_write_rows(tbl_row: jnp.ndarray,
+                    spec: PageSpec) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter indices installing a full contiguous slot image into the
+    pool: ``(direct, halo)``, each ``(n_cache,)`` physical rows for logical
+    rows ``0..n_cache-1``.  ``tbl_row`` is this slot's ``(max_pages,)``
+    table row; unallocated entries point at the dump page, so rows past
+    the reserved frontier are scattered harmlessly there.
+    """
+    sp = spec
+    r = jnp.arange(sp.logical_rows, dtype=jnp.int32)
+    page, off = r // sp.page_tokens, r % sp.page_tokens
+    direct = tbl_row[page] * sp.page_rows + off
+    halo = jnp.where((off < sp.slack) & (page >= 1),
+                     tbl_row[jnp.maximum(page - 1, 0)] * sp.page_rows
+                     + sp.page_tokens + off, sp.dump_row)
+    return direct, halo
+
+
+def slot_gather_rows(tbl_row: jnp.ndarray, spec: PageSpec) -> jnp.ndarray:
+    """Gather indices reassembling a slot's contiguous ``(n_cache,)`` view
+    from the pool (admission-class only — never in the decode step)."""
+    r = jnp.arange(spec.logical_rows, dtype=jnp.int32)
+    return tbl_row[r // spec.page_tokens] * spec.page_rows \
+        + r % spec.page_tokens
+
+
+def scatter_slot(pool: jnp.ndarray, rows: jnp.ndarray,
+                 vals: jnp.ndarray) -> jnp.ndarray:
+    """``pool.at[:, rows].set(vals)`` for a batchless ``(H, R, d)`` pool
+    with ``rows (N,)`` and ``vals (H, N, d)``."""
+    return pool.at[:, rows, :].set(vals.astype(pool.dtype))
+
+
+def copy_page_rows(spec: PageSpec, src_pages, dst_pages) -> jnp.ndarray:
+    """Physical (src_rows, dst_rows) copying whole pages incl. halos."""
+    src = jnp.asarray(src_pages, jnp.int32)
+    dst = jnp.asarray(dst_pages, jnp.int32)
+    off = jnp.arange(spec.page_rows, dtype=jnp.int32)
+    src_rows = (src[:, None] * spec.page_rows + off[None, :]).reshape(-1)
+    dst_rows = (dst[:, None] * spec.page_rows + off[None, :]).reshape(-1)
+    return src_rows, dst_rows
+
+
+PagedOrArray = Union[PagedKV, jnp.ndarray]

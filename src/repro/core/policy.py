@@ -58,6 +58,7 @@ import jax.numpy as jnp
 from repro.configs.base import LycheeConfig
 from repro.core.index import build_index, build_member_lists
 from repro.core.kmeans import spherical_kmeans
+from repro.core.paging import kv_batch_axes, kv_len, kv_row
 from repro.core.pooling import l2_normalize
 from repro.core.retrieval import retrieve_spans
 from repro.core.types import ChunkLayout, empty_index, pad_index
@@ -163,10 +164,15 @@ class CachePolicy:
         (B, H, N, d); t: (B,) per-slot lengths AFTER the append. Default:
         ``vmap`` of :meth:`update`; policies with a sparser real-work
         cadence (lychee's ``max_chunk`` graft) override this to skip the
-        whole vmapped computation when no slot is due."""
+        whole vmapped computation when no slot is due.
+
+        ``keys`` may be a batched contiguous cache OR a ``PagedKV`` view
+        (shared pool + per-slot page-table rows): ``kv_batch_axes`` maps
+        only the table row, never the pool."""
         if not self.has_update or state is None:
             return state
-        return jax.vmap(self.update)(state, keys, t)
+        return jax.vmap(self.update, in_axes=(0, kv_batch_axes(keys), 0))(
+            state, keys, t)
 
     def extend(self, state, keys: jax.Array, t0, n_new: int):
         """Streaming multi-token append — the session-reuse primitive
@@ -216,6 +222,18 @@ class CachePolicy:
         empty state for every registered policy — the contract
         ``models.model.reset_slot`` relies on)."""
         return None if state is None else jax.tree.map(jnp.zeros_like, state)
+
+    def splice_prefix(self, state, keep: int):
+        """Truncate a donated prefix state to its first ``keep`` tokens —
+        the prefix-cache partial-hit primitive: the reader slot inherits a
+        snapshot built over a LONGER prefix and must behave as if only
+        ``keep`` tokens exist. Sound means valid selections never address
+        positions ``>= keep``; it need not equal a fresh ``keep``-token
+        build bit-for-bit (clustering over a shorter prompt may differ).
+        Exact full hits (``keep`` == snapshot length) bypass this entirely.
+        Trailing-axis op: ``state`` may carry arbitrary leading stack dims
+        (groups, slots). Identity for stateless policies."""
+        return state
 
 
 # ---------------------------------------------------------------------------
@@ -281,12 +299,28 @@ class LycheePolicy(CachePolicy):
         return jax.lax.cond(
             due,
             lambda s: jax.vmap(
-                lambda sb, kb, tb: maybe_lazy_update(sb, kb, tb, self.cfg))(
-                s, keys, t),
+                lambda sb, kb, tb: maybe_lazy_update(sb, kb, tb, self.cfg),
+                in_axes=(0, kv_batch_axes(keys), 0))(s, keys, t),
             lambda s: s, state)
 
     def pad(self, state, N_cap):
         return pad_index(state, N_cap, self.cfg)
+
+    def splice_prefix(self, state, keep):
+        """Invalidate every chunk extending past ``keep``. Retrieval does
+        NOT consult ``chunk_valid`` (only fine-member lists), so soundness
+        comes from zeroing ``chunk_len``: stale member references expand to
+        zero-length spans and contribute exactly nothing. ``chunk_count``
+        is deliberately NOT compacted — the truncated slots stay consumed,
+        so later lazy grafts can never reuse a slot that old member lists
+        still point at (the resurrection hazard ``lazy_update`` documents).
+        Centroids/radii keep covering the dropped chunks: Eqn. 2 bounds
+        stay valid, merely looser."""
+        kept = state.chunk_valid & (
+            state.chunk_start + state.chunk_len <= jnp.int32(keep))
+        return state._replace(
+            chunk_len=jnp.where(kept, state.chunk_len, 0),
+            chunk_valid=kept)
 
 
 # ---------------------------------------------------------------------------
@@ -357,8 +391,8 @@ class QuestPolicy(CachePolicy):
         """Extend the tail page's min/max with the freshly appended key."""
         H, Pg, d = state.kmin.shape
         page = self.cfg.quest_page
-        tpos = jnp.clip(jnp.asarray(t, jnp.int32) - 1, 0, keys.shape[1] - 1)
-        row = keys[:, tpos].astype(state.kmin.dtype)          # (H, d)
+        tpos = jnp.clip(jnp.asarray(t, jnp.int32) - 1, 0, kv_len(keys) - 1)
+        row = kv_row(keys, tpos).astype(state.kmin.dtype)     # (H, d)
         p = jnp.clip(tpos // page, 0, Pg - 1)
         was = state.pvalid[:, p]                              # (H,)
         nmin = jnp.where(was[:, None],
@@ -371,6 +405,22 @@ class QuestPolicy(CachePolicy):
             kmax=jax.lax.dynamic_update_slice(state.kmax, nmax[:, None, :],
                                               (0, p, 0)),
             pvalid=state.pvalid.at[:, p].set(True))
+
+    def splice_prefix(self, state, keep):
+        """Keep only pages FULLY inside ``keep``. Partial hits land on
+        page-pool boundaries that are multiples of ``quest_page`` (the
+        pool's span-base contract), so the cut never bisects a quest page
+        and the kept bounds are exactly what a ``keep``-token build would
+        produce; zeroed bounds on dropped pages mirror ``build``."""
+        Pg = state.pvalid.shape[-1]
+        full = (jnp.arange(Pg, dtype=jnp.int32) + 1) * self.cfg.quest_page \
+            <= jnp.int32(keep)
+        pvalid = state.pvalid & full
+        z = jnp.zeros((), state.kmin.dtype)
+        return QuestState(
+            kmin=jnp.where(pvalid[..., None], state.kmin, z),
+            kmax=jnp.where(pvalid[..., None], state.kmax, z),
+            pvalid=pvalid)
 
 
 # ---------------------------------------------------------------------------
@@ -451,8 +501,8 @@ class ClusterKVPolicy(CachePolicy):
         the Lychee dynamic-chunk graft at token granularity."""
         H, C, d = state.centroid.shape
         cap = state.members.shape[-1]
-        tpos = jnp.clip(jnp.asarray(t, jnp.int32) - 1, 0, keys.shape[1] - 1)
-        row = l2_normalize(keys[:, tpos].astype(state.centroid.dtype))
+        tpos = jnp.clip(jnp.asarray(t, jnp.int32) - 1, 0, kv_len(keys) - 1)
+        row = l2_normalize(kv_row(keys, tpos).astype(state.centroid.dtype))
         sim = jnp.einsum("hcd,hd->hc", state.centroid, row)
         sim = jnp.where(state.cvalid, sim, _NEG)
         cid = jnp.argmax(sim, axis=-1).astype(jnp.int32)       # (H,)
@@ -473,6 +523,20 @@ class ClusterKVPolicy(CachePolicy):
         nmember = state.nmember.at[heads, cid].add(live.astype(jnp.int32))
         return ClusterKVState(centroid=centroid, cvalid=state.cvalid,
                               members=members, nmember=nmember)
+
+    def splice_prefix(self, state, keep):
+        """Drop member positions ``>= keep`` (-1-padded, exactly what the
+        span expansion masks); clusters left empty go invalid. Centroids
+        are left where the donor's longer prefix moved them — stale but
+        still spherical means over a superset, so nearest-centroid
+        assignment stays an approximation of the same quality class as the
+        streaming updates themselves."""
+        kept = (state.members >= 0) & (state.members < jnp.int32(keep))
+        nmember = kept.sum(-1).astype(state.nmember.dtype)
+        cvalid = state.cvalid & (nmember > 0)
+        return ClusterKVState(
+            centroid=state.centroid, cvalid=cvalid,
+            members=jnp.where(kept, state.members, -1), nmember=nmember)
 
 
 # ---------------------------------------------------------------------------

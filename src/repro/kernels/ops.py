@@ -41,10 +41,12 @@ def score_upper_bound(probe, centroid, radius, valid, *, interpret=None):
 
 
 def chunk_attention(q, k_cache, v_cache, starts, lens, *, max_chunk=16,
-                    scale=1.0, softcap=0.0, interpret=None):
+                    scale=1.0, softcap=0.0, interpret=None,
+                    shared_cache=False):
     return sparse_chunk_attention(
         q, k_cache, v_cache, starts, lens, max_chunk=max_chunk, scale=scale,
-        softcap=softcap, interpret=resolve_interpret(interpret))
+        softcap=softcap, interpret=resolve_interpret(interpret),
+        shared_cache=shared_cache)
 
 
 __all__ = ["INTERPRET", "chunk_attention", "pool_chunk_keys", "ref",

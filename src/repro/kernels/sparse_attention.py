@@ -40,7 +40,8 @@ _NEG = -1e30
 
 def _kernel(starts_ref, lens_ref, q_ref, k_hbm, v_hbm, out_ref,
             k_scr, v_scr, len_scr, m_scr, l_scr, acc_scr, ksem, vsem, *,
-            max_chunk: int, tile_c: int, scale: float, softcap: float):
+            max_chunk: int, tile_c: int, scale: float, softcap: float,
+            shared_cache: bool):
     b = pl.program_id(0)
     h = pl.program_id(1)
     i = pl.program_id(2)
@@ -66,11 +67,16 @@ def _kernel(starts_ref, lens_ref, q_ref, k_hbm, v_hbm, out_ref,
     def _copies(j):
         c = i * tile_c + j
         start = starts_ref[b, h, c]
+        # shared_cache: one batchless page pool serves every slot — the
+        # scalar-prefetched span table already carries slot-specific
+        # PHYSICAL rows (page-table-translated), so only the batch index
+        # collapses
+        bk = 0 if shared_cache else b
         kcp = pltpu.make_async_copy(
-            k_hbm.at[b, h, pl.ds(start, max_chunk), :],
+            k_hbm.at[bk, h, pl.ds(start, max_chunk), :],
             k_scr.at[pl.ds(j * max_chunk, max_chunk), :], ksem.at[j])
         vcp = pltpu.make_async_copy(
-            v_hbm.at[b, h, pl.ds(start, max_chunk), :],
+            v_hbm.at[bk, h, pl.ds(start, max_chunk), :],
             v_scr.at[pl.ds(j * max_chunk, max_chunk), :], vsem.at[j])
         return kcp, vcp
 
@@ -127,13 +133,15 @@ def _kernel(starts_ref, lens_ref, q_ref, k_hbm, v_hbm, out_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("max_chunk", "tile_c", "scale",
-                                             "softcap", "interpret"))
+                                             "softcap", "interpret",
+                                             "shared_cache"))
 def sparse_chunk_attention(q: jax.Array, k_cache: jax.Array,
                            v_cache: jax.Array, starts: jax.Array,
                            lens: jax.Array, *, max_chunk: int = 16,
                            tile_c: int = 8, scale: float = 1.0,
                            softcap: float = 0.0,
-                           interpret: bool | None = None) -> jax.Array:
+                           interpret: bool | None = None,
+                           shared_cache: bool = False) -> jax.Array:
     """Single-position decode attention over chunk spans — ONE compiled
     ``pallas_call`` whose grid covers ``(B, Hkv, C // TC)``.
 
@@ -148,12 +156,21 @@ def sparse_chunk_attention(q: jax.Array, k_cache: jax.Array,
     the cache. ``interpret=None`` follows ``kernels.ops`` precedence:
     explicit arg > ``ops.INTERPRET`` override > backend default (compiled
     Mosaic on TPU, the interpreter oracle elsewhere).
+
+    ``shared_cache=True`` is the paged-pool mode: ``k_cache``/``v_cache``
+    are a batchless ``(1, Hkv, R, d*)`` page pool shared by every slot and
+    ``starts`` carries page-table-translated PHYSICAL pool rows (still one
+    contiguous DMA per span — the halo-page contract means translated
+    spans never straddle a page).
     """
     if interpret is None:
         from repro.kernels import ops  # deferred: ops imports this module
         interpret = ops.resolve_interpret(None)
     B, Hkv, G, dk = q.shape
     N = k_cache.shape[2]
+    if shared_cache:
+        assert k_cache.shape[0] == 1 and v_cache.shape[0] == 1, (
+            "shared_cache expects a batchless (1, Hkv, R, d) pool")
     assert N >= max_chunk, (
         f"cache has {N} rows < max_chunk={max_chunk}: reserve tail slack "
         "(core.types.cache_slack / usable_rows) so span DMAs stay in bounds")
@@ -189,7 +206,8 @@ def sparse_chunk_attention(q: jax.Array, k_cache: jax.Array,
     )
     call = pl.pallas_call(
         functools.partial(_kernel, max_chunk=max_chunk, tile_c=TC,
-                          scale=scale, softcap=softcap),
+                          scale=scale, softcap=softcap,
+                          shared_cache=shared_cache),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, dv), q.dtype),
         interpret=interpret,

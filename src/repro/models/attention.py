@@ -200,18 +200,47 @@ def _append_kv(cache_kv: jax.Array, row: jax.Array, at: jax.Array
 
 def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
                kind: str, managed: bool, rope: bool = True,
-               pol: Optional[CachePolicy] = None) -> Tuple:
+               pol: Optional[CachePolicy] = None, paged=None) -> Tuple:
     """x: (B, 1, d); t: scalar or (B,) per-slot positions;
     cache: {"k","v"[, "policy_state"]}. ``managed`` marks layers whose cache
     is run through the configured CachePolicy (``pol`` may be passed by the
     caller — ``model.decode_step`` resolves it once per step — or is
-    resolved here). Returns (out, cache)."""
+    resolved here). Under the paged layout the cache carries
+    ``{"pool_k","pool_v"}`` (batchless shared page pool) instead of
+    ``{"k","v"}`` and ``paged`` is the ``(page_tbl (B, max_pages), spec)``
+    pair ``model.decode_step`` threads in. Returns (out, cache)."""
     B = x.shape[0]
     dh = cfg.resolved_head_dim
     tt = _slot_t(t, B)
     pos = tt[:, None]                                       # (B, 1)
     q, k_t, v_t = _project_qkv(p, x, pos, cfg, rope)        # (B,H,1,dh)
     q = q[:, :, 0]                                          # (B, Hq, dh)
+
+    if "pool_k" in cache:
+        from repro.core.paging import PagedKV, append_rows
+        tbl, spec = paged
+        # two (2B,)-row scatters per pool leaf: each slot's direct row in
+        # page t//P plus the halo duplicate in page t//P - 1 (dump-routed
+        # when t%P >= slack or for page 0) — never a pool-sized op
+        direct, halo = append_rows(tbl, tt, spec)
+        rows = jnp.concatenate([direct, halo])
+        kv2 = jnp.concatenate([k_t[:, :, 0]] * 2).transpose(1, 0, 2)
+        vv2 = jnp.concatenate([v_t[:, :, 0]] * 2).transpose(1, 0, 2)
+        pool_k = cache["pool_k"].at[:, rows, :].set(
+            kv2.astype(cache["pool_k"].dtype))
+        pool_v = cache["pool_v"].at[:, rows, :].set(
+            vv2.astype(cache["pool_v"].dtype))
+        cache = dict(cache, pool_k=pool_k, pool_v=pool_v)
+        if managed and pol is None:
+            pol = policy_for(cfg.lychee)
+        pk = PagedKV(pool_k, tbl, spec)
+        pv = PagedKV(pool_v, tbl, spec)
+        out, pstate = _policy_attend(q, pk, pv, cache.get("policy_state"),
+                                     tt, cfg, pol)
+        if pstate is not None:
+            cache = dict(cache, policy_state=pstate)
+        out = out.reshape(B, 1, -1) @ p["wo"]
+        return shard(out, "batch", None, None), cache
 
     local = kind in ("attn_local", "swa_moe") and cfg.window
     if local:

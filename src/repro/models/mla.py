@@ -113,10 +113,12 @@ def _absorbed_queries(p, x, pos, cfg):
 
 
 def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
-               managed: bool, pol: Optional[CachePolicy] = None
-               ) -> Tuple[jax.Array, dict]:
+               managed: bool, pol: Optional[CachePolicy] = None,
+               paged=None) -> Tuple[jax.Array, dict]:
     """x: (B,1,d); t: scalar or (B,) per-slot positions;
-    cache: {"latent": (B, N, kvl+rd)[, "policy_state"]}."""
+    cache: {"latent": (B, N, kvl+rd)[, "policy_state"]} — or
+    {"pool_latent": (R, kvl+rd)} (batchless shared page pool) with
+    ``paged`` = the (page_tbl, spec) pair under the paged layout."""
     B = x.shape[0]
     H = cfg.n_heads
     nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -126,17 +128,34 @@ def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
 
     c_kv, k_rope = _latents(p, x, pos, cfg)
     lat_t = jnp.concatenate([c_kv, k_rope], -1)             # (B,1,576)
-    latent = jax.vmap(
-        lambda c, r, a: jax.lax.dynamic_update_slice_in_dim(c, r, a, 0))(
-        cache["latent"], lat_t, tt)
-    _, _, lat_ctx, _ = kv_axes()
-    latent = shard(latent, kv_axes()[0], lat_ctx, None)
-    cache = dict(cache, latent=latent)
+    paged_kv = "pool_latent" in cache
+    if paged_kv:
+        from repro.core.paging import PagedKV, append_rows
+        tbl, spec = paged
+        direct, halo = append_rows(tbl, tt, spec)
+        rows = jnp.concatenate([direct, halo])              # (2B,)
+        vals = jnp.concatenate([lat_t[:, 0]] * 2)           # (2B, 576)
+        pool = cache["pool_latent"].at[rows, :].set(
+            vals.astype(cache["pool_latent"].dtype))
+        cache = dict(cache, pool_latent=pool)
+        # one logical kv head over the pool; the value view is the LAZY
+        # ``dlim`` feature limit — slicing the pool here would materialize
+        # a pool-sized copy every decode step (the contiguous layout's
+        # ``latent[..., :kvl]`` fuses away; a pool-wide slice does not)
+        k_c = PagedKV(pool[None], tbl, spec)
+        v_c = PagedKV(pool[None], tbl, spec, dlim=kvl)
+    else:
+        latent = jax.vmap(
+            lambda c, r, a: jax.lax.dynamic_update_slice_in_dim(c, r, a, 0))(
+            cache["latent"], lat_t, tt)
+        _, _, lat_ctx, _ = kv_axes()
+        latent = shard(latent, kv_axes()[0], lat_ctx, None)
+        cache = dict(cache, latent=latent)
+        k_c = latent[:, None]                               # (B,1,N,576)
+        v_c = latent[:, None, :, :kvl]                      # values = c_kv
 
     q_eff = _absorbed_queries(p, x, pos, cfg)               # (B,H,576)
     scale = 1.0 / (nd + rd) ** 0.5
-    k_c = latent[:, None]                                   # (B,1,N,576)
-    v_c = latent[:, None, :, :kvl]                          # values = c_kv
 
     ly = cfg.lychee
     if managed and pol is None:
@@ -151,6 +170,12 @@ def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
                                      pol)
         if pstate is not None:
             cache = dict(cache, policy_state=pstate)
+    elif paged_kv:
+        raise ValueError(
+            "paged MLA decode requires a policy-managed layer (dense "
+            "full-cache attention over the pool would be a pool-sized "
+            "gather per step); MD.can_page should have forced the "
+            "contiguous layout")
     elif kv_axes()[2] is not None:
         ctx = full_decode_attention_ctxsharded(
             q_eff, k_c, v_c, tt + 1, kv_axes()[2], scale=scale)

@@ -210,11 +210,12 @@ def block_make_cache(bp: dict, kind: str, material, x: jax.Array,
 # --- single-token decode ------------------------------------------------------
 def block_decode(bp: dict, kind: str, x: jax.Array, t, cache: Any,
                  cfg: ModelConfig, managed: bool,
-                 pol=None) -> Tuple[jax.Array, Any]:
+                 pol=None, paged=None) -> Tuple[jax.Array, Any]:
     if kind in ("attn", "attn_local", "swa_moe", "shared_attn"):
         akind = "attn" if kind == "shared_attn" else kind
         h, cache = A.gqa_decode(bp["attn"], rmsnorm(bp["norm1"], x), t,
-                                cache, cfg, akind, managed, pol=pol)
+                                cache, cfg, akind, managed, pol=pol,
+                                paged=paged)
         x = x + h
         if kind == "swa_moe":
             h, _ = MOE.moe_apply(bp["moe"], rmsnorm(bp["norm2"], x), cfg)
@@ -225,7 +226,7 @@ def block_decode(bp: dict, kind: str, x: jax.Array, t, cache: Any,
     if kind in MLA_KINDS:
         from repro.models.mla import mla_decode
         h, cache = mla_decode(bp["attn"], rmsnorm(bp["norm1"], x), t, cache,
-                              cfg, managed, pol=pol)
+                              cfg, managed, pol=pol, paged=paged)
         x = x + h
         if kind == "mla":
             x = x + mlp_apply(bp["mlp"], rmsnorm(bp["norm2"], x))
@@ -584,6 +585,12 @@ def decode_step(params: dict, token: jax.Array, state: dict,
     x = embed(params["embed"], token[:, None]).astype(jnp.dtype(cfg.dtype))
     x = shard(x, "batch", None, None)
     pol = policy_for(cfg.lychee)          # resolved once, threaded down
+    # Paged serving state: the shared page table rides along as a state
+    # part and every scanned block resolves its pool rows through it.
+    # Prelude caches stay contiguous per-slot (they are never managed).
+    paged = None
+    if "page_tbl" in state:
+        paged = (state["page_tbl"], paged_spec(state, cfg))
 
     new_prelude = []
     for bp, kind, cache in zip(params["prelude"], cfg.prelude,
@@ -599,7 +606,7 @@ def decode_step(params: dict, token: jax.Array, state: dict,
             bp = _shared_params(params, kind, gp[pos_i])
             managed = _policy_managed(cfg, kind, scanned=True)
             x, c = block_decode(bp, kind, x, t, caches[pos_i], cfg, managed,
-                                pol=pol if managed else None)
+                                pol=pol if managed else None, paged=paged)
             new.append(c)
         return x, tuple(new)
 
@@ -608,6 +615,8 @@ def decode_step(params: dict, token: jax.Array, state: dict,
     x = rmsnorm(params["final_norm"], x)
     logits = unembed(params["embed"], x, cfg.final_softcap)[:, 0]
     new_state = {"prelude": new_prelude, "groups": new_groups, "t": t + 1}
+    if paged is not None:
+        new_state["page_tbl"] = state["page_tbl"]
     return logits, new_state
 
 
@@ -920,3 +929,377 @@ def mask_step_slots(old_state: dict, new_state: dict, keep: jax.Array
         groups.append(nc)
     t = jnp.where(keep, new_state["t"], old_state["t"])
     return dict(new_state, groups=tuple(groups), t=t)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode state (global KV pool + per-slot page tables)
+# ---------------------------------------------------------------------------
+# In paged mode the scanned group caches do not carry per-slot K/V rows.
+# Instead each pattern position owns batchless pool leaves
+#
+#   "pool_k" / "pool_v"   (G, Hkv, pool_rows, dh)     (GQA kinds)
+#   "pool_latent"         (G, pool_rows, D)           (MLA kinds)
+#
+# and the state gains one top-level part ``"page_tbl"`` — (B, max_pages)
+# int32, shared by every layer — mapping each slot's logical pages to
+# physical pool pages (``core.paging`` documents the halo layout that keeps
+# paged attention bit-identical to the contiguous caches). Everything else
+# (prelude caches, policy_state, t) stays per-slot exactly as before; the
+# surgery below splits those RESIDUAL leaves from the shared pools.
+_POOL_KEYS = ("pool_k", "pool_v", "pool_latent")
+# contiguous cache leaves that the pools replace
+_ROW_KEYS = ("k", "v", "latent")
+
+
+def can_page(cfg: ModelConfig) -> bool:
+    """True when the serving engine may run ``cfg`` on the paged KV pool.
+
+    Paged admission streams a slot in through the extend path (gather the
+    slot's contiguous view, run :func:`extend`, scatter the delta rows
+    back), so ``can_extend`` is required; every scanned block must be
+    policy-managed global attention (local ring buffers and SSM states are
+    per-slot by construction and are not paged); and the ``dense`` policy
+    reads the whole cache each step — paging it would gather pool_rows
+    per token — so dense falls back to the contiguous layout.
+    """
+    if not can_extend(cfg):
+        return False
+    if not cfg.pattern or not all(
+            k in ("attn", "shared_attn") + MLA_KINDS for k in cfg.pattern):
+        return False
+    return not policy_for(cfg.lychee).is_dense
+
+
+def paged_spec(state: dict, cfg: ModelConfig):
+    """Reconstruct the static :class:`~repro.core.paging.PageSpec` of a
+    paged state. ``cfg.serving.page_tokens`` must hold the RESOLVED page
+    size (the engine pins it before jitting) — the remaining geometry is
+    read off the state shapes."""
+    from repro.core.paging import PageSpec
+    from repro.core.types import cache_slack
+    P = int(cfg.serving.page_tokens)
+    slack = cache_slack(cfg.lychee)
+    pool_rows = 0
+    for c in state["groups"]:
+        if isinstance(c, dict):
+            for key in _POOL_KEYS:
+                if key in c:
+                    pool_rows = c[key].shape[-2]
+                    break
+        if pool_rows:
+            break
+    assert pool_rows, "paged_spec: state has no pool leaves"
+    return PageSpec(page_tokens=P, slack=slack,
+                    n_pages=pool_rows // (P + slack) - 1,
+                    max_pages=state["page_tbl"].shape[1])
+
+
+def paged_state_struct(state: dict, spec) -> dict:
+    """Map a CONTIGUOUS batched decode state (arrays or ShapeDtypeStructs,
+    e.g. from ``jax.eval_shape`` of :func:`prefill`) to the paged layout's
+    shape structs. The engine zero-fills these and then sets ``page_tbl``
+    to the dump page (zero-init would alias physical page 0)."""
+    def struct(leaf):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+
+    B = state["t"].shape[0]
+    groups = []
+    for c in state["groups"]:
+        if isinstance(c, dict) and any(k in c for k in _ROW_KEYS):
+            nc = {k: jax.tree.map(struct, v) for k, v in c.items()
+                  if k not in _ROW_KEYS}
+            if "latent" in c:
+                lat = c["latent"]                       # (G, B, N, D)
+                nc["pool_latent"] = jax.ShapeDtypeStruct(
+                    (lat.shape[0], spec.pool_rows, lat.shape[-1]), lat.dtype)
+            else:
+                k, v = c["k"], c["v"]                   # (G, B, Hkv, N, dh)
+                nc["pool_k"] = jax.ShapeDtypeStruct(
+                    (k.shape[0], k.shape[2], spec.pool_rows, k.shape[-1]),
+                    k.dtype)
+                nc["pool_v"] = jax.ShapeDtypeStruct(
+                    (v.shape[0], v.shape[2], spec.pool_rows, v.shape[-1]),
+                    v.dtype)
+            groups.append(nc)
+        else:
+            groups.append(jax.tree.map(struct, c))
+    return {"prelude": jax.tree.map(struct, state["prelude"]),
+            "groups": tuple(groups),
+            "t": jax.ShapeDtypeStruct(state["t"].shape, state["t"].dtype),
+            "page_tbl": jax.ShapeDtypeStruct((B, spec.max_pages),
+                                             jnp.int32)}
+
+
+def _upd_axis(slot, axis):
+    def f(dst, src):
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), slot, axis)
+    return f
+
+
+def slice_slot_paged(state: dict, slot) -> dict:
+    """One slot's RESIDUAL decode state (batch dims kept, size 1): prelude
+    caches, ``t``, the slot's page-table row, and the non-pool leaves of
+    every group cache. The shared pools are deliberately absent — a slot
+    has no private K/V rows, only table entries."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def sl(axis):
+        return lambda leaf: jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis)
+
+    groups = []
+    for c in state["groups"]:
+        if isinstance(c, dict):
+            groups.append({k: jax.tree.map(sl(1), v) for k, v in c.items()
+                           if k not in _POOL_KEYS})
+        else:
+            groups.append(jax.tree.map(sl(1), c))
+    return {"prelude": jax.tree.map(sl(0), state["prelude"]),
+            "groups": tuple(groups), "t": sl(0)(state["t"]),
+            "page_tbl": sl(0)(state["page_tbl"])}
+
+
+def write_slot_paged(state: dict, sub: dict, slot) -> dict:
+    """Splice a residual sub (``slice_slot_paged`` layout; ``page_tbl``
+    optional) into slot ``slot``. Pool leaves pass through untouched."""
+    slot = jnp.asarray(slot, jnp.int32)
+    groups = []
+    for c, sc in zip(state["groups"], sub["groups"]):
+        if isinstance(c, dict):
+            nc = dict(c)
+            for k, v in sc.items():
+                nc[k] = jax.tree.map(_upd_axis(slot, 1), c[k], v)
+            groups.append(nc)
+        else:
+            groups.append(jax.tree.map(_upd_axis(slot, 0), c, sc))
+    out = dict(state,
+               prelude=jax.tree.map(_upd_axis(slot, 0), state["prelude"],
+                                    sub["prelude"]),
+               groups=tuple(groups),
+               t=_upd_axis(slot, 0)(state["t"], sub["t"]))
+    if "page_tbl" in sub:
+        out["page_tbl"] = _upd_axis(slot, 0)(state["page_tbl"],
+                                             sub["page_tbl"])
+    return out
+
+
+def _scatter_groups(groups, sub_groups, direct, halo, rsel, slot):
+    """Write a contiguous sub-state's K/V/latent rows into the pools and
+    its residual leaves into ``slot``. ``direct``/``halo``: (R,) physical
+    scatter targets for the logical rows ``rsel`` selects from the sub
+    leaves (``None`` = all rows, in order). Two scatters of the same
+    delta keep the value operand at R rows — never 2R — and dump-page
+    collisions between the halves are write-only garbage."""
+    def pick(vals, axis):
+        if rsel is None:
+            return vals
+        return jnp.take(vals, rsel, axis=axis)
+
+    new = []
+    for c, sc in zip(groups, sub_groups):
+        if not isinstance(c, dict):
+            new.append(jax.tree.map(_upd_axis(slot, 0), c, sc))
+            continue
+        nc = dict(c)
+        for k, v in sc.items():
+            if k == "latent":
+                delta = pick(v[:, 0], 1)               # (G, S, D)
+                delta = delta.astype(c["pool_latent"].dtype)
+                nc["pool_latent"] = (c["pool_latent"]
+                                     .at[:, direct, :].set(delta)
+                                     .at[:, halo, :].set(delta))
+            elif k in ("k", "v"):
+                pool_key = "pool_" + k
+                delta = pick(v[:, 0], 2)               # (G, Hkv, S, dh)
+                delta = delta.astype(c[pool_key].dtype)
+                nc[pool_key] = (c[pool_key]
+                                .at[:, :, direct, :].set(delta)
+                                .at[:, :, halo, :].set(delta))
+            else:
+                nc[k] = jax.tree.map(_upd_axis(slot, 1), c[k], v)
+        new.append(nc)
+    return tuple(new)
+
+
+def prefill_into_slot_paged(params: dict, tokens: jax.Array,
+                            cfg: ModelConfig, n_cache: int, state: dict,
+                            slot, tbl_row, spec, extras=None, n_tokens=None,
+                            build_policy: bool = True
+                            ) -> Tuple[jax.Array, dict]:
+    """Paged sibling of :func:`prefill_into_slot`: run the one-request B=1
+    prefill CONTIGUOUSLY (bit-identical logits by construction), then
+    scatter its K/V/latent rows into the pools through ``tbl_row`` — the
+    slot's freshly reserved (max_pages,) page-table row — and splice the
+    residual leaves. Pad rows land on the dump page (unreserved table
+    entries point there), so over-reservation is never required."""
+    assert tokens.shape[0] == 1, "prefill_into_slot_paged admits one request"
+    from repro.core.paging import slot_write_rows
+    logits, sub = prefill(params, tokens, cfg, n_cache, extras=extras,
+                          n_tokens=n_tokens, build_policy=build_policy)
+    slot = jnp.asarray(slot, jnp.int32)
+    tbl_row = jnp.asarray(tbl_row, jnp.int32)
+    direct, halo = slot_write_rows(tbl_row, spec)
+    groups = _scatter_groups(state["groups"], sub["groups"], direct, halo,
+                             None, slot)
+    return logits, dict(
+        state,
+        prelude=jax.tree.map(_upd_axis(slot, 0), state["prelude"],
+                             sub["prelude"]),
+        groups=groups,
+        t=_upd_axis(slot, 0)(state["t"], sub["t"]),
+        page_tbl=_upd_axis(slot, 0)(state["page_tbl"], tbl_row[None]))
+
+
+def _paged_contiguous_sub(state: dict, sub: dict, grows) -> dict:
+    """Assemble the contiguous (B=1) view of a paged slot: the residual
+    sub from ``slice_slot_paged`` plus K/V/latent gathered from the pools
+    at physical rows ``grows`` (admission-class gather — never the decode
+    hot path). Rows past the slot's ``t`` read dump-page garbage, which
+    the extend/build consumers mask to exact zero contribution."""
+    groups = []
+    for c, sc in zip(state["groups"], sub["groups"]):
+        if isinstance(c, dict):
+            nc = dict(sc)
+            if "pool_latent" in c:
+                nc["latent"] = c["pool_latent"][:, grows, :][:, None]
+            elif "pool_k" in c:
+                nc["k"] = c["pool_k"][:, :, grows, :][:, None]
+                nc["v"] = c["pool_v"][:, :, grows, :][:, None]
+            groups.append(nc)
+        else:
+            groups.append(sc)
+    return {"prelude": sub["prelude"], "groups": tuple(groups),
+            "t": sub["t"]}
+
+
+def extend_slot_paged(params: dict, tokens: jax.Array, cfg: ModelConfig,
+                      state: dict, slot, spec, n_tokens=None,
+                      update_policy: bool = True) -> Tuple[jax.Array, dict]:
+    """Paged sibling of :func:`extend_slot`: gather the slot's contiguous
+    view, run the UNCHANGED :func:`extend` over the delta (so the math is
+    the contiguous path's, row for row), then scatter only the delta rows
+    ``[t0, t0 + S)`` (plus their halo duplicates) back into the pools."""
+    assert tokens.shape[0] == 1, "extend_slot_paged extends one slot"
+    from repro.core.paging import slot_gather_rows
+    S = tokens.shape[1]
+    slot = jnp.asarray(slot, jnp.int32)
+    sub = slice_slot_paged(state, slot)
+    tbl_row = sub["page_tbl"][0]
+    grows = slot_gather_rows(tbl_row, spec)
+    cont = _paged_contiguous_sub(state, sub, grows)
+    logits, cont = extend(params, tokens, cfg, cont, n_tokens=n_tokens,
+                          update_policy=update_policy)
+
+    t0 = jnp.asarray(sub["t"], jnp.int32)[0]
+    P, pr = spec.page_tokens, spec.page_rows
+    r = t0 + jnp.arange(S, dtype=jnp.int32)
+    page = jnp.clip(r // P, 0, spec.max_pages - 1)
+    off = r % P
+    direct = tbl_row[page] * pr + off
+    halo = jnp.where((off < spec.slack) & (page >= 1),
+                     tbl_row[jnp.maximum(page - 1, 0)] * pr + P + off,
+                     spec.dump_row)
+    groups = _scatter_groups(state["groups"], cont["groups"], direct, halo,
+                             r, slot)
+    return logits, dict(
+        state,
+        prelude=jax.tree.map(_upd_axis(slot, 0), state["prelude"],
+                             cont["prelude"]),
+        groups=groups,
+        t=_upd_axis(slot, 0)(state["t"], cont["t"]))
+
+
+def rebuild_slot_policy_paged(params: dict, tokens: jax.Array,
+                              cfg: ModelConfig, n_cache: int, state: dict,
+                              slot, spec, n_tokens=None) -> dict:
+    """Paged sibling of :func:`rebuild_slot_policy`: the slot's first
+    ``Sp`` key/latent rows are gathered from the pools (they are the
+    chunk-streamed prefill rows, bit-identical to contiguous admission)
+    and fed through the same monolithic ``CachePolicy.build`` path."""
+    assert tokens.shape[0] == 1, "rebuild_slot_policy_paged rebuilds one"
+    pol = policy_for(cfg.lychee)
+    if not pol.stateful:
+        return state
+    from repro.core.paging import slot_gather_rows
+    Sp = tokens.shape[1]
+    slot = jnp.asarray(slot, jnp.int32)
+    tbl_row = jax.lax.dynamic_slice_in_dim(state["page_tbl"], slot, 1, 0)[0]
+    grows = slot_gather_rows(tbl_row, spec)[:Sp]
+    layout = None
+    if pol.needs_layout:
+        layout = make_layout(tokens, cfg, n_tokens=n_tokens)
+    new_groups = []
+    for pos_i, kind in enumerate(cfg.pattern):
+        cache = state["groups"][pos_i]
+        if not _policy_managed(cfg, kind, scanned=True) or \
+                not isinstance(cache, dict) or "policy_state" not in cache:
+            new_groups.append(cache)
+            continue
+        if "pool_latent" in cache:
+            rows_v = cache["pool_latent"][:, grows, :]     # (G, Sp, D)
+            keys = rows_v[:, None, None]                   # 1 logical head
+        else:
+            keys = cache["pool_k"][:, :, grows, :][:, None]  # (G,1,H,Sp,d)
+        built = jax.vmap(lambda kg: pol.build_batched(
+            kg, layout, n_cache, n_tokens=n_tokens))(keys)   # (G,1,...)
+        merged = jax.tree.map(
+            lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, 1),
+            cache["policy_state"], built)
+        new_groups.append(dict(cache, policy_state=merged))
+    return dict(state, groups=tuple(new_groups))
+
+
+def copy_pool_pages(state: dict, src_rows, dst_rows) -> dict:
+    """Copy whole physical pages (incl. halo rows) inside every pool leaf
+    — the copy-on-write primitive behind prefix-cache registration and
+    splicing (``core.paging.copy_page_rows`` builds the row vectors). A
+    few pages per admission; never the decode hot path."""
+    src_rows = jnp.asarray(src_rows, jnp.int32)
+    dst_rows = jnp.asarray(dst_rows, jnp.int32)
+    groups = []
+    for c in state["groups"]:
+        if isinstance(c, dict) and any(k in c for k in _POOL_KEYS):
+            nc = dict(c)
+            if "pool_latent" in c:
+                nc["pool_latent"] = c["pool_latent"].at[:, dst_rows, :].set(
+                    c["pool_latent"][:, src_rows, :])
+            else:
+                nc["pool_k"] = c["pool_k"].at[:, :, dst_rows, :].set(
+                    c["pool_k"][:, :, src_rows, :])
+                nc["pool_v"] = c["pool_v"].at[:, :, dst_rows, :].set(
+                    c["pool_v"][:, :, src_rows, :])
+            groups.append(nc)
+        else:
+            groups.append(c)
+    return dict(state, groups=tuple(groups))
+
+
+def reset_tbl_row(state: dict, slot, spec) -> dict:
+    """Point a finished slot's page-table row back at the dump page. Must
+    be enqueued BEFORE the slot's pages are recycled: inactive slots keep
+    lock-step decoding and their garbage appends must not land in pages a
+    new owner holds."""
+    slot = jnp.asarray(slot, jnp.int32)
+    row = jnp.full((1, spec.max_pages), spec.dump_page, jnp.int32)
+    return dict(state, page_tbl=jax.lax.dynamic_update_slice_in_dim(
+        state["page_tbl"], row, slot, 0))
+
+
+def splice_sub_prefix(sub: dict, cfg: ModelConfig, keep) -> dict:
+    """Truncate a residual sub (``slice_slot_paged`` layout) to its first
+    ``keep`` tokens — the partial prefix-cache hit path. Every managed
+    layer's policy state goes through ``CachePolicy.splice_prefix`` (drop
+    selection units that reach past ``keep``) and ``t`` is reset; prelude
+    caches keep their stale rows >= ``keep``, which the length masks hide
+    and the suffix extend overwrites."""
+    pol = policy_for(cfg.lychee)
+    keep = jnp.asarray(keep, jnp.int32)
+    groups = []
+    for c in sub["groups"]:
+        if isinstance(c, dict) and "policy_state" in c:
+            c = dict(c, policy_state=pol.splice_prefix(c["policy_state"],
+                                                       keep))
+        groups.append(c)
+    t = jnp.zeros_like(sub["t"]) + keep
+    return dict(sub, groups=tuple(groups), t=t)

@@ -100,9 +100,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.paging import copy_page_rows, resolve_page_spec
 from repro.core.policy import policy_for
 from repro.core.types import usable_rows
 from repro.models import model as MD
+from repro.serving.pagepool import PagePool, PoolStats
 from repro.serving.sampler import (SamplerParams, sample, slot_keys)
 from repro.serving.scheduler import Scheduler, Session, Turn
 
@@ -148,6 +150,10 @@ class ServeResult:
     mean_tpot_ms: float = 0.0
     p99_itl_ms: float = 0.0
     max_itl_ms: float = 0.0
+    # paged-pool observability (None on the contiguous layout): pages
+    # allocated/free/shared, prefix-cache hit rates and bytes saved by
+    # cross-request page sharing — serving.pagepool.PoolStats
+    pool: Optional[PoolStats] = None
 
 
 @dataclasses.dataclass
@@ -203,6 +209,22 @@ class Engine:
         self.chunk_state = sv.chunk_state
         assert self.chunk_state in ("rebuild", "stream"), self.chunk_state
         self.chunked = self.prefill_chunk > 0 and self.can_extend
+        # paged KV pool: one global refcounted page pool + per-slot page
+        # tables instead of n_slots private contiguous caches. Silent
+        # fallback to contiguous on unsupported archs / the dense policy
+        # (model.can_page) — greedy outputs are identical either way.
+        self.paged = bool(sv.paged) and MD.can_page(cfg)
+        self.page_tokens = 0
+        if self.paged:
+            # pin the RESOLVED page size into cfg before any jit closes
+            # over it: decode_step reconstructs the PageSpec from it
+            spec1 = resolve_page_spec(n_cache, cfg.lychee,
+                                      page_tokens=sv.page_tokens,
+                                      n_slots=1)
+            self.page_tokens = spec1.page_tokens
+            cfg = cfg.replace(serving=sv.replace(
+                page_tokens=spec1.page_tokens))
+            self.cfg = cfg
         # debug counters (reset per serve): host-side eager samples should
         # number one per TURN (prefill/extend logits), never per token
         self.last_host_samples = 0
@@ -289,6 +311,56 @@ class Engine:
                 lambda p, tk, n, st, slot: MD.rebuild_slot_policy(
                     p, tk, cfg, n_cache, st, slot, n_tokens=n),
                 donate_argnums=donate3)
+        if self.paged:
+            # the paged admission family mirrors the bucketed contiguous
+            # one; the PageSpec rides as a static argument (hashable
+            # NamedTuple of ints), so one Engine serves any pool size
+            donate0 = (0,) if donate_state else ()
+            self._p_prefill_slot_b = jax.jit(
+                lambda p, tk, n, st, slot, row, spec:
+                MD.prefill_into_slot_paged(p, tk, cfg, n_cache, st, slot,
+                                           row, spec, n_tokens=n),
+                static_argnums=(6,), donate_argnums=donate3)
+            self._p_prefill_slot_nb = jax.jit(
+                lambda p, tk, n, st, slot, row, spec:
+                MD.prefill_into_slot_paged(p, tk, cfg, n_cache, st, slot,
+                                           row, spec, n_tokens=n,
+                                           build_policy=False),
+                static_argnums=(6,), donate_argnums=donate3)
+            self._p_extend_slot_u = jax.jit(
+                lambda p, tk, n, st, slot, spec: MD.extend_slot_paged(
+                    p, tk, cfg, st, slot, spec, n_tokens=n),
+                static_argnums=(5,), donate_argnums=donate3)
+            self._p_extend_slot_nu = jax.jit(
+                lambda p, tk, n, st, slot, spec: MD.extend_slot_paged(
+                    p, tk, cfg, st, slot, spec, n_tokens=n,
+                    update_policy=False),
+                static_argnums=(5,), donate_argnums=donate3)
+            self._p_rebuild_slot = jax.jit(
+                lambda p, tk, n, st, slot, spec:
+                MD.rebuild_slot_policy_paged(p, tk, cfg, n_cache, st, slot,
+                                             spec, n_tokens=n),
+                static_argnums=(5,), donate_argnums=donate3)
+            # prefix-cache machinery: snapshot a slot's residual state
+            # (NOT donating — the snapshot outlives the state buffers),
+            # splice a snapshot into a new slot (full hit keeps it
+            # verbatim; partial truncates through CachePolicy.
+            # splice_prefix), page copies and the finish-time table reset
+            self._p_slice_slot = jax.jit(MD.slice_slot_paged)
+            self._p_splice_full = jax.jit(
+                lambda st, sub, slot, row: MD.write_slot_paged(
+                    st, dict(sub, page_tbl=row[None]), slot),
+                donate_argnums=donate0)
+            self._p_splice_part = jax.jit(
+                lambda st, sub, slot, row, keep: MD.write_slot_paged(
+                    st, dict(MD.splice_sub_prefix(sub, cfg, keep),
+                             page_tbl=row[None]), slot),
+                donate_argnums=donate0)
+            self._p_copy_pages = jax.jit(
+                MD.copy_pool_pages, donate_argnums=donate0)
+            self._p_reset_tbl = jax.jit(
+                MD.reset_tbl_row, static_argnums=(2,),
+                donate_argnums=donate0)
 
     def _pad_shape(self, n: int, cap: int) -> int:
         """Power-of-two pad bucket for a valid length ``n``, clamped to
@@ -383,6 +455,40 @@ class Engine:
             self._zero_shapes[n_slots] = shapes
         return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
 
+    def _zero_state_paged(self, n_slots: int, spec):
+        """Paged all-slots-empty state: the contiguous eval_shape with the
+        per-slot K/V rows swapped for the shared pools, plus the page
+        table — initialised to the DUMP page (a zero table would alias
+        physical page 0; see core.paging)."""
+        key = (n_slots, spec)
+        shapes = self._zero_shapes.get(key)
+        if shapes is None:
+            dummy = jax.ShapeDtypeStruct(
+                (n_slots, max(8, self.cfg.lychee.min_chunk)), jnp.int32)
+            cont = jax.eval_shape(
+                lambda p, tk: MD.prefill(p, tk, self.cfg, self.n_cache)[1],
+                self.params, dummy)
+            shapes = MD.paged_state_struct(cont, spec)
+            self._zero_shapes[key] = shapes
+        state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        state["page_tbl"] = jnp.full((n_slots, spec.max_pages),
+                                     spec.dump_page, jnp.int32)
+        return state
+
+    @staticmethod
+    def _bytes_per_page(state, spec) -> int:
+        """Device bytes one physical page costs across every layer's pool
+        leaves (the unit of the sharing/bytes-saved accounting)."""
+        total = 0
+        for c in state["groups"]:
+            if isinstance(c, dict):
+                for k in ("pool_k", "pool_v", "pool_latent"):
+                    if k in c:
+                        leaf = c[k]
+                        total += (leaf.size // spec.pool_rows) \
+                            * spec.page_rows * leaf.dtype.itemsize
+        return total
+
     def serve(self, requests: Sequence[Session], *, n_slots: int,
               mode: str = "continuous",
               sampler: SamplerParams = SamplerParams(),
@@ -430,7 +536,21 @@ class Engine:
 
         sched = Scheduler(n_slots)
         sched.submit_all(requests)
-        state = self._zero_state(n_slots)
+        spec = None
+        pool: Optional[PagePool] = None
+        slot_pages = [[] for _ in range(n_slots)]   # refs this slot holds
+        slot_rows = [None] * n_slots                # (max_pages,) np rows
+        if self.paged:
+            spec = resolve_page_spec(
+                self.n_cache, self.cfg.lychee,
+                page_tokens=self.page_tokens,
+                pool_pages=self.cfg.serving.pool_pages, n_slots=n_slots)
+            state = self._zero_state_paged(n_slots, spec)
+            pool = PagePool(spec,
+                            bytes_per_page=self._bytes_per_page(state, spec),
+                            prefix_cache=self.cfg.serving.prefix_cache)
+        else:
+            state = self._zero_state(n_slots)
         base = jax.random.key(seed)
         cur = np.zeros((n_slots,), np.int32)
         active = np.zeros((n_slots,), bool)
@@ -470,13 +590,10 @@ class Engine:
                 return 1
             return -(-total // self.prefill_chunk)
 
-        def begin_job(slot: int, sess: Session) -> None:
-            """Create this turn's admission job. Turn 0 (and the re-prefill
-            fallback) is ``fresh`` — its first piece overwrites the slot;
-            extend turns feed their delta (led by the previous turn's final
-            sampled token — it was never fed back, so its KV row is still
-            absent) onto the slot's live rows."""
-            nonlocal job_seq, slots_dirty
+        def setup_turn(slot: int, sess: Session) -> Turn:
+            """Per-turn slot bookkeeping shared by every admission path
+            (jobs and the zero-forward prefix-hit splice)."""
+            nonlocal slots_dirty
             slots_dirty = True
             turn = sess.turns[sess.cur]
             turn.started_s = now()
@@ -485,20 +602,35 @@ class Engine:
             temp[slot] = sp.temperature
             top_k[slot] = sp.top_k
             top_p[slot] = sp.top_p
-            if sess.cur == 0:
-                toks, fresh = np.asarray(turn.prompt, np.int32), True
-            elif use_extend:
-                prev = sess.turns[sess.cur - 1]
-                toks = np.concatenate([
-                    np.asarray(prev.sampled[-1:], np.int32),
-                    np.asarray(turn.prompt, np.int32)])
-                fresh = False
-            else:
-                toks, fresh = sess.history_tokens(sess.cur), True
+            return turn
+
+        def begin_job(slot: int, sess: Session, toks=None, fresh=None,
+                      base_t=None) -> None:
+            """Create this turn's admission job. Turn 0 (and the re-prefill
+            fallback) is ``fresh`` — its first piece overwrites the slot;
+            extend turns feed their delta (led by the previous turn's final
+            sampled token — it was never fed back, so its KV row is still
+            absent) onto the slot's live rows. ``toks``/``fresh``/``base_t``
+            override the defaults for the prefix-cache partial-hit path
+            (the suffix streams onto the spliced prefix)."""
+            nonlocal job_seq
+            turn = setup_turn(slot, sess)
+            if toks is None:
+                if sess.cur == 0:
+                    toks, fresh = np.asarray(turn.prompt, np.int32), True
+                elif use_extend:
+                    prev = sess.turns[sess.cur - 1]
+                    toks = np.concatenate([
+                        np.asarray(prev.sampled[-1:], np.int32),
+                        np.asarray(turn.prompt, np.int32)])
+                    fresh = False
+                else:
+                    toks, fresh = sess.history_tokens(sess.cur), True
             active[slot] = False
             jobs[slot] = _AdmitJob(
                 slot=slot, sess=sess, tokens=toks, fresh=fresh,
-                base_t=0 if fresh else int(slot_t[slot]), seq=job_seq,
+                base_t=(0 if fresh else int(slot_t[slot]))
+                if base_t is None else base_t, seq=job_seq,
                 multi=n_pieces(len(toks)) > 1)
             job_seq += 1
             if verbose:
@@ -526,9 +658,14 @@ class Engine:
             Sp = self._pad_shape(total, self.usable)
             buf = np.zeros((1, Sp), np.int32)
             buf[0, :total] = job.tokens
-            state = self._rebuild_slot(
-                self.params, jnp.asarray(buf), jnp.int32(total), state,
-                jnp.int32(slot))
+            if self.paged:
+                state = self._p_rebuild_slot(
+                    self.params, jnp.asarray(buf), jnp.int32(total), state,
+                    jnp.int32(slot), spec)
+            else:
+                state = self._rebuild_slot(
+                    self.params, jnp.asarray(buf), jnp.int32(total), state,
+                    jnp.int32(slot))
 
         def job_piece(slot: int) -> bool:
             """Run ONE bounded unit of the slot's admission per engine
@@ -565,14 +702,32 @@ class Engine:
                 buf = np.zeros((1, shape), np.int32)
                 buf[0, :take] = piece
                 tk, n = jnp.asarray(buf), jnp.int32(take)
-                if job.fresh and job.pos == 0:
-                    fn = self._prefill_slot_nb if needs_rebuild(job) \
-                        else self._prefill_slot_b
-                elif job.fresh and needs_rebuild(job):
-                    fn = self._extend_slot_nu
+                if self.paged:
+                    # paged dispatch: a fresh first piece scatters the
+                    # prefilled rows through the slot's freshly-planned
+                    # page-table row; later pieces/extends stream onto the
+                    # live table
+                    if job.fresh and job.pos == 0:
+                        fn = self._p_prefill_slot_nb if needs_rebuild(job) \
+                            else self._p_prefill_slot_b
+                        logits, state = fn(
+                            self.params, tk, n, state, dev_slot,
+                            jnp.asarray(slot_rows[slot]), spec)
+                    else:
+                        fn = self._p_extend_slot_nu \
+                            if job.fresh and needs_rebuild(job) \
+                            else self._p_extend_slot_u
+                        logits, state = fn(
+                            self.params, tk, n, state, dev_slot, spec)
                 else:
-                    fn = self._extend_slot_u
-                logits, state = fn(self.params, tk, n, state, dev_slot)
+                    if job.fresh and job.pos == 0:
+                        fn = self._prefill_slot_nb if needs_rebuild(job) \
+                            else self._prefill_slot_b
+                    elif job.fresh and needs_rebuild(job):
+                        fn = self._extend_slot_nu
+                    else:
+                        fn = self._extend_slot_u
+                    logits, state = fn(self.params, tk, n, state, dev_slot)
             job.pos += take
             job.logits = logits
             if not last:
@@ -583,6 +738,35 @@ class Engine:
                 rebuild_leg(slot, job)
             return True
 
+        def register_prefix(slot: int, job: _AdmitJob) -> None:
+            """Snapshot a freshly-prefilled turn-0 prompt into the prefix
+            cache. Safe pages (halo rows complete — see ``core.paging``)
+            are shared by reference; the 1-2 unsafe tail pages (the slot
+            keeps appending into them) are deep-copied into entry-owned
+            pages; the residual per-slot state (policy selection state,
+            prelude caches, ``t``) plus the admission logits are stored so
+            a later EXACT hit replays the admission with zero forwards."""
+            nonlocal state
+            tokens = np.asarray(job.tokens, np.int32)
+            Lc = len(tokens)
+            P = spec.page_tokens
+            n_cov = -(-Lc // P)
+            n_safe = min(max(0, (Lc - spec.slack) // P), n_cov)
+            n_copy = n_cov - n_safe
+            owned = pool.alloc(n_copy)
+            if owned is None:
+                return              # pool too tight to snapshot — skip
+            if n_copy:
+                src_rows, dst_rows = copy_page_rows(
+                    spec, slot_pages[slot][n_safe:n_cov], owned)
+                state = self._p_copy_pages(
+                    state, jnp.asarray(src_rows), jnp.asarray(dst_rows))
+            shared = slot_pages[slot][:n_safe]
+            pool.incref(shared)
+            sub = self._p_slice_slot(state, jnp.int32(slot))
+            pool.register(tokens, shared + owned, n_safe, sub,
+                          job.logits, uid=job.sess.uid)
+
         def complete_job(slot: int) -> None:
             """Admission complete: mark the slot decoding and sample the
             turn's first token from the last chunk's logits."""
@@ -590,6 +774,9 @@ class Engine:
             sess = job.sess
             slot_t[slot] = job.base_t + len(job.tokens)
             active[slot] = True
+            if self.paged and pool.prefix_cache and job.fresh and \
+                    sess.cur == 0 and job.base_t == 0:
+                register_prefix(slot, job)
             turn = sess.turns[sess.cur]
             if emit(slot, sess, turn, first_token(slot, turn, job.logits)):
                 advance(slot)
@@ -654,12 +841,22 @@ class Engine:
             turn becomes an admission job; single-piece jobs run to
             completion immediately (the pre-chunking timing), multi-piece
             jobs interleave with decode in continuous mode."""
+            nonlocal state
             sess = sched.slot_of(slot)
             sess.cur += 1
             if sess.cur >= sess.n_turns:
                 sched.finish(slot, now())
                 active[slot] = False
                 cur[slot] = 0
+                if self.paged:
+                    # reset the table row to the dump page BEFORE freeing:
+                    # the freed pages may be re-allocated immediately, and
+                    # this (inactive, lock-stepped) slot keeps appending
+                    # garbage rows through its table every decode step
+                    state = self._p_reset_tbl(state, jnp.int32(slot), spec)
+                    pool.decref(slot_pages[slot])
+                    slot_pages[slot] = []
+                    slot_rows[slot] = None
                 if verbose:
                     ntok = sum(len(t.tokens) for t in sess.turns)
                     print(f"[serve:{mode}] t={now():7.3f}s finish "
@@ -669,12 +866,114 @@ class Engine:
             begin_job(slot, sess)
             run_job(slot)
 
+        def plan_admission(sess: Session):
+            """Paged admission planning: reserve every page the session
+            will EVER need (all-or-nothing — an admitted session can
+            always run to completion, the pool never deadlocks) and
+            consult the prefix cache for the first turn's prompt. Under
+            page pressure, LRU prefix entries are evicted (the hit being
+            spliced is protected); if the pool is still too full the
+            admission is DEFERRED — a free slot without free pages waits,
+            so concurrency is bounded by pool pages, not slot count.
+            Returns None to defer, else (kind, entry, keep, shared,
+            copy_src, fresh) where ``shared`` are increfed safe pages of
+            the hit, ``copy_src`` its unsafe pages to deep-copy, and
+            ``fresh`` this session's own pages."""
+            P = spec.page_tokens
+            total_pages = -(-sess.total_len() // P)
+            prompt = np.asarray(sess.turns[0].prompt, np.int32)
+            kind, entry, keep = pool.lookup(prompt)
+            if kind is not None:
+                n_cov = -(-keep // P) if kind == "full" else keep // P
+                # the reader may only share pages whose halo rows are
+                # complete RELATIVE TO ITS OWN coverage: its first append
+                # halo-writes into page keep//P - 1 when keep%P < slack
+                n_share = min(entry.n_safe, max(0, (keep - spec.slack) // P))
+                copy_src = entry.pages[n_share:n_cov]
+            else:
+                n_share, copy_src = 0, []
+            fresh = pool.alloc(total_pages - n_share)
+            while fresh is None and pool.evict_lru(protect=entry):
+                fresh = pool.alloc(total_pages - n_share)
+            if fresh is None and kind is not None:
+                # the protected hit itself may be what keeps the pool
+                # full (it can be the last remaining entry): degrade to a
+                # miss so IT becomes evictable — a plain reservation
+                # always fits an otherwise idle pool (total_pages <=
+                # max_pages <= n_pages), so this cannot livelock
+                kind, entry, keep, n_share, copy_src = None, None, 0, 0, []
+                fresh = pool.alloc(total_pages)
+                while fresh is None and pool.evict_lru():
+                    fresh = pool.alloc(total_pages)
+            if fresh is None:
+                pool.deferred_admissions += 1
+                return None
+            shared = entry.pages[:n_share] if n_share else []
+            pool.incref(shared)
+            return kind, entry, keep, shared, copy_src, fresh
+
+        def admit_paged(slot: int, sess: Session, plan) -> None:
+            """Bind a planned paged admission to ``slot``: install the
+            page table, deep-copy the hit's unsafe tail pages, splice the
+            cached snapshot (full hit: zero forward passes; partial hit:
+            truncate via ``CachePolicy.splice_prefix`` then stream only
+            the suffix), or fall through to a normal prefill job."""
+            nonlocal state
+            kind, entry, keep, shared, copy_src, fresh = plan
+            pages = shared + fresh
+            slot_pages[slot] = pages
+            row = np.full((spec.max_pages,), spec.dump_page, np.int32)
+            row[:len(pages)] = pages
+            slot_rows[slot] = row
+            row_dev = jnp.asarray(row)
+            if copy_src:
+                src_rows, dst_rows = copy_page_rows(
+                    spec, copy_src, fresh[:len(copy_src)])
+                state = self._p_copy_pages(
+                    state, jnp.asarray(src_rows), jnp.asarray(dst_rows))
+            if kind == "full":
+                state = self._p_splice_full(
+                    state, entry.sub, jnp.int32(slot), row_dev)
+                slot_t[slot] = len(sess.turns[0].prompt)
+                turn = setup_turn(slot, sess)
+                active[slot] = True
+                if verbose:
+                    print(f"[serve:{mode}] t={now():7.3f}s admit "
+                          f"(prefix-cache FULL hit, 0 forwards) "
+                          f"sess{sess.uid} -> slot {slot}")
+                if emit(slot, sess, turn,
+                        first_token(slot, turn, entry.logits)):
+                    advance(slot)
+                return
+            if kind == "partial":
+                state = self._p_splice_part(
+                    state, entry.sub, jnp.int32(slot), row_dev,
+                    jnp.int32(keep))
+                slot_t[slot] = keep
+                prompt = np.asarray(sess.turns[0].prompt, np.int32)
+                if verbose:
+                    print(f"[serve:{mode}] t={now():7.3f}s admit "
+                          f"(prefix-cache partial hit, keep={keep}) "
+                          f"sess{sess.uid} -> slot {slot}")
+                begin_job(slot, sess, toks=prompt[keep:], fresh=False,
+                          base_t=keep)
+                run_job(slot)
+                return
+            begin_job(slot, sess)
+            run_job(slot)
+
         while not sched.all_done:
             # ---- admission phase: bind arrivals to free slots ----------
             if mode == "continuous" or sched.active == 0:
                 for slot in sched.free_slots():
-                    if sched.next_ready(now()) is None:
+                    head = sched.next_ready(now())
+                    if head is None:
                         break
+                    plan = None
+                    if self.paged:
+                        plan = plan_admission(head)
+                        if plan is None:
+                            break       # page pressure: defer admission
                     sess = sched.admit(slot, now())
                     sess.cur = 0
                     uid[slot] = sess.uid
@@ -682,8 +981,11 @@ class Engine:
                     # single-piece jobs prefill + emit their first token
                     # right here (the monolithic-timing path); multi-piece
                     # jobs are left to the bounded chunk phase
-                    begin_job(slot, sess)
-                    run_job(slot)
+                    if self.paged:
+                        admit_paged(slot, sess, plan)
+                    else:
+                        begin_job(slot, sess)
+                        run_job(slot)
             # ---- one admission chunk (bounded: <= prefill_chunk toks) --
             if jobs:
                 slot = min(jobs, key=lambda s: jobs[s].seq)
@@ -764,4 +1066,5 @@ class Engine:
             mean_ttft_s=float(ttfts.mean()) if len(ttfts) else 0.0,
             mean_tpot_ms=float(np.mean(tpots)) if tpots else 0.0,
             p99_itl_ms=float(np.percentile(gaps, 99)) if gaps else 0.0,
-            max_itl_ms=float(max(gaps)) if gaps else 0.0)
+            max_itl_ms=float(max(gaps)) if gaps else 0.0,
+            pool=pool.stats() if pool is not None else None)

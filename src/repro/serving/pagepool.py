@@ -1,0 +1,348 @@
+"""Host-side page-pool allocator + radix prefix cache for paged serving.
+
+This module owns the HOST bookkeeping of the paged KV layout
+(``core.paging`` owns the device math): which physical pages are free,
+how many readers each allocated page has, and which previously admitted
+prompts can donate their pages to a new request.
+
+Allocator
+---------
+``PagePool`` manages ``spec.n_pages`` physical pages (the dump page is
+outside the allocator — it is never owned). Pages are refcounted:
+``alloc`` hands out pages at refcount 1, ``incref`` adds a reader
+(prefix sharing), ``decref`` releases one and returns the page to the
+free list at zero. Allocation is all-or-nothing — the engine reserves a
+session's worst-case page count (``ceil(total_len / page_tokens)``) at
+admission, so an admitted session can always run to completion and the
+pool can never deadlock mid-decode.
+
+Radix prefix cache
+------------------
+A page-granular trie keyed by per-page token hashes. ``register`` stores
+one finished admission: its token array, the pages covering the prompt
+(safe pages shared with the donor via ``incref``, the mutable tail
+deep-copied into entry-owned pages by the ENGINE before registration —
+see the safe-sharing rule in ``core.paging``), a device-side snapshot of
+the slot's residual state (policy selection state, prelude caches,
+``t``) and the admission logits.
+
+``lookup`` walks the trie over the new prompt's pages (hash first,
+then exact token comparison — hashes only prune):
+
+* **full hit** — an entry with EXACTLY the same token sequence: the
+  engine splices the snapshot + shared pages and samples the first token
+  from the stored logits. Zero forward passes; greedy output is
+  bit-identical to a fresh admission (same deterministic prefill state).
+* **partial hit** — the longest shared full-page prefix of any entry:
+  the engine shares/copies those pages, truncates the snapshot through
+  ``CachePolicy.splice_prefix`` (sound, not bit-exact — see its
+  contract) and streams only the suffix. ``keep`` is capped one token
+  short of the prompt so the suffix extend always produces the logits
+  the first sample needs.
+
+Eviction is LRU over entries (``evict_lru``): dropping an entry decrefs
+its pages — pages still shared with live slots stay resident until
+those slots finish. The engine evicts under allocation pressure and
+defers admission when the pool is still too full (a free slot without
+free pages waits — concurrency is bounded by pages, not by
+``n_slots x n_cache`` private rows).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.paging import PageSpec
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """Observability snapshot of one serve() run (host data only)."""
+
+    page_tokens: int
+    page_rows: int
+    n_pages: int                  # allocatable physical pages
+    pages_in_use: int
+    pages_free: int
+    shared_pages: int             # pages with refcount > 1
+    peak_pages_in_use: int
+    bytes_per_page: int           # across all layers' pool leaves
+    bytes_saved: int              # sum (refcount-1) * bytes_per_page
+    peak_bytes_saved: int
+    prefix_lookups: int
+    prefix_hits: int              # exact full hits (zero forward passes)
+    prefix_partial_hits: int
+    prefix_evictions: int
+    prefix_entries: int
+    deferred_admissions: int      # admissions delayed by page pressure
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        if not self.prefix_lookups:
+            return 0.0
+        return (self.prefix_hits + self.prefix_partial_hits) \
+            / self.prefix_lookups
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["prefix_hit_rate"] = self.prefix_hit_rate
+        return d
+
+
+@dataclasses.dataclass(eq=False)
+class PrefixEntry:
+    """One cached prompt prefix (see module docstring). ``eq=False``:
+    entries are identity-keyed — the trie's membership tests must never
+    compare token arrays elementwise."""
+
+    tokens: np.ndarray            # (Lc,) int32 — the full prompt
+    pages: List[int]              # ceil(Lc/P) pages: n_safe shared + owned
+    n_safe: int                   # leading pages shared with the donor
+    sub: Any                      # device residual snapshot (B=1 leaves)
+    logits: Any                   # (1, V) admission logits (device)
+    last_used: int = 0            # LRU tick
+    uid: int = -1                 # donor session uid (debug)
+
+
+class _TrieNode:
+    __slots__ = ("children", "page_tokens", "through", "terminal")
+
+    def __init__(self, page_tokens: Optional[np.ndarray] = None):
+        self.children: Dict[int, _TrieNode] = {}   # page hash -> child
+        self.page_tokens = page_tokens             # (P,) verification copy
+        self.through: List[PrefixEntry] = []       # entries via this node
+        self.terminal: List[PrefixEntry] = []      # entries ending here
+
+
+def _page_hash(page: np.ndarray) -> int:
+    return hash(page.tobytes())
+
+
+class PagePool:
+    """Refcounted physical-page allocator + radix prefix cache."""
+
+    def __init__(self, spec: PageSpec, *, bytes_per_page: int = 0,
+                 prefix_cache: bool = True):
+        self.spec = spec
+        self.bytes_per_page = int(bytes_per_page)
+        self.prefix_cache = prefix_cache
+        self._free: List[int] = list(range(spec.n_pages - 1, -1, -1))
+        self._ref = np.zeros((spec.n_pages,), np.int64)
+        self._root = _TrieNode()
+        self._entries: List[PrefixEntry] = []
+        self._tick = 0
+        # -- counters (PoolStats) --
+        self.peak_in_use = 0
+        self.peak_bytes_saved = 0
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_partial_hits = 0
+        self.prefix_evictions = 0
+        self.deferred_admissions = 0
+
+    # -- allocator -----------------------------------------------------
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.spec.n_pages - len(self._free)
+
+    @property
+    def shared_pages(self) -> int:
+        return int((self._ref > 1).sum())
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` fresh pages at refcount 1, or None (all-or-nothing)."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert self._ref[p] == 0, f"page {p} on free list with refs"
+            self._ref[p] = 1
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        self.peak_bytes_saved = max(self.peak_bytes_saved,
+                                    self.bytes_saved())
+        return pages
+
+    def incref(self, pages) -> None:
+        for p in pages:
+            assert self._ref[p] > 0, f"incref of free page {p}"
+            self._ref[p] += 1
+        self.peak_bytes_saved = max(self.peak_bytes_saved,
+                                    self.bytes_saved())
+
+    def decref(self, pages) -> None:
+        for p in pages:
+            assert self._ref[p] > 0, f"double free of page {p}"
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def bytes_saved(self) -> int:
+        """Bytes the sharing currently saves vs private copies."""
+        extra = int(np.maximum(self._ref - 1, 0).sum())
+        return extra * self.bytes_per_page
+
+    # -- radix prefix cache --------------------------------------------
+    def _pages_of(self, tokens: np.ndarray):
+        P = self.spec.page_tokens
+        tokens = np.asarray(tokens, np.int32)
+        for i in range(len(tokens) // P):
+            yield tokens[i * P:(i + 1) * P]
+
+    def register(self, tokens, pages: List[int], n_safe: int, sub, logits,
+                 uid: int = -1) -> Optional[PrefixEntry]:
+        """Insert a finished admission. ``pages`` must already carry this
+        entry's references (engine increfs the shared safe prefix and owns
+        the copied tail); the entry releases them when evicted."""
+        if not self.prefix_cache:
+            return None
+        tokens = np.asarray(tokens, np.int32)
+        assert len(pages) == -(-len(tokens) // self.spec.page_tokens)
+        self._tick += 1
+        entry = PrefixEntry(tokens=tokens, pages=list(pages),
+                            n_safe=int(n_safe), sub=sub, logits=logits,
+                            last_used=self._tick, uid=uid)
+        node = self._root
+        for page in self._pages_of(tokens):
+            h = _page_hash(page)
+            child = node.children.get(h)
+            if child is None or not np.array_equal(child.page_tokens, page):
+                # hash collision with different tokens: extremely unlikely;
+                # chain by rehashing the pair index deterministically
+                while child is not None and \
+                        not np.array_equal(child.page_tokens, page):
+                    h = hash((h, 1))
+                    child = node.children.get(h)
+                if child is None:
+                    child = _TrieNode(page.copy())
+                    node.children[h] = child
+            node = child
+            node.through.append(entry)
+        node.terminal.append(entry)
+        self._entries.append(entry)
+        return entry
+
+    def lookup(self, tokens) -> Tuple[Optional[str],
+                                      Optional[PrefixEntry], int]:
+        """Longest cached prefix of ``tokens``.
+
+        Returns (kind, entry, keep): kind "full" (exact token match —
+        splice everything, zero forwards), "partial" (share the first
+        ``keep`` tokens, ``keep`` a positive multiple of page_tokens and
+        < len(tokens)), or (None, None, 0).
+        """
+        if not self.prefix_cache:
+            return None, None, 0
+        self.prefix_lookups += 1
+        tokens = np.asarray(tokens, np.int32)
+        P = self.spec.page_tokens
+        node = self._root
+        depth = 0
+        best: Optional[PrefixEntry] = None
+        best_depth = 0
+        for page in self._pages_of(tokens):
+            h = _page_hash(page)
+            child = node.children.get(h)
+            while child is not None and \
+                    not np.array_equal(child.page_tokens, page):
+                h = hash((h, 1))
+                child = node.children.get(h)
+            if child is None:
+                break
+            node = child
+            depth += 1
+            if node.through:
+                best = node.through[-1]
+                best_depth = depth
+        # exact full hit: an entry terminating at the deepest node whose
+        # total token sequence equals the prompt
+        for entry in node.terminal:
+            if len(entry.tokens) == len(tokens) and \
+                    np.array_equal(entry.tokens, tokens):
+                self.prefix_hits += 1
+                self._tick += 1
+                entry.last_used = self._tick
+                return "full", entry, len(tokens)
+        if best is None:
+            return None, None, 0
+        # partial: keep one token short of the prompt so the suffix
+        # extend still produces the first-sample logits
+        keep = min(best_depth * P, ((len(tokens) - 1) // P) * P)
+        if keep <= 0:
+            return None, None, 0
+        self.prefix_partial_hits += 1
+        self._tick += 1
+        best.last_used = self._tick
+        return "partial", best, keep
+
+    def evict_lru(self, protect: Optional[PrefixEntry] = None) -> bool:
+        """Drop the least-recently-used entry (decref its pages). True if
+        an entry was evicted. ``protect`` shields one entry (the hit an
+        in-flight admission is about to splice from). Pages still shared
+        with live slots remain allocated until those slots release them."""
+        victims = [e for e in self._entries if e is not protect]
+        if not victims:
+            return False
+        entry = min(victims, key=lambda e: e.last_used)
+        self._remove(entry)
+        self.prefix_evictions += 1
+        return True
+
+    def _remove(self, entry: PrefixEntry) -> None:
+        self._entries.remove(entry)
+        node = self._root
+        path = []
+        for page in self._pages_of(entry.tokens):
+            h = _page_hash(page)
+            child = node.children.get(h)
+            while child is not None and \
+                    not np.array_equal(child.page_tokens, page):
+                h = hash((h, 1))
+                child = node.children.get(h)
+            if child is None:
+                break
+            path.append((node, h, child))
+            node = child
+            if entry in node.through:
+                node.through.remove(entry)
+        if entry in node.terminal:
+            node.terminal.remove(entry)
+        # prune childless, entry-less suffix of the path
+        for parent, h, child in reversed(path):
+            if not child.children and not child.through and \
+                    not child.terminal:
+                del parent.children[h]
+        self.decref(entry.pages)
+        entry.sub = entry.logits = None
+
+    def clear_prefix_cache(self) -> None:
+        while self._entries:
+            self._remove(self._entries[-1])
+
+    # -- observability -------------------------------------------------
+    def stats(self) -> PoolStats:
+        return PoolStats(
+            page_tokens=self.spec.page_tokens,
+            page_rows=self.spec.page_rows,
+            n_pages=self.spec.n_pages,
+            pages_in_use=self.pages_in_use,
+            pages_free=self.pages_free,
+            shared_pages=self.shared_pages,
+            peak_pages_in_use=self.peak_in_use,
+            bytes_per_page=self.bytes_per_page,
+            bytes_saved=self.bytes_saved(),
+            peak_bytes_saved=self.peak_bytes_saved,
+            prefix_lookups=self.prefix_lookups,
+            prefix_hits=self.prefix_hits,
+            prefix_partial_hits=self.prefix_partial_hits,
+            prefix_evictions=self.prefix_evictions,
+            prefix_entries=len(self._entries),
+            deferred_admissions=self.deferred_admissions)

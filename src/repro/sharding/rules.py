@@ -112,6 +112,12 @@ def named(specs, mesh: Mesh):
 _STATE_LAYOUTS = {
     "k": ("H", "ctx", None), "v": ("H", "ctx", None),
     "latent": ("ctx", None),
+    # paged KV pool leaves are BATCHLESS (groups lead directly): full-rank
+    # layouts so the (groups?, batch) prefix heuristic never puts the batch
+    # axes on the groups dim. The pool-row dim is the context memory.
+    "pool_k": (None, "H", "ctx", None), "pool_v": (None, "H", "ctx", None),
+    "pool_latent": (None, "ctx", None),
+    "page_tbl": (None,),     # (B, max_pages): tiny, rows follow their slot
     "enc_k": ("H", None, None), "enc_v": ("H", None, None),
     "ssm": ("H", None, None),
     "conv": (None, "H"),

@@ -1,0 +1,461 @@
+"""Paged KV pool tests: geometry, translation, allocator properties,
+prefix trie, and engine-level paged-vs-contiguous bit-identity.
+
+The allocator property tests use hypothesis when it is installed and fall
+back to a fixed sweep of seeds otherwise, so the invariants (no leak, no
+double hand-out, refcount == readers, free+used == n_pages) are always
+exercised in tier-1.
+
+The engine tests are the acceptance gate of the paged subsystem: greedy
+serve() output must be BIT-IDENTICAL between the paged pool and the
+contiguous per-slot layout for every sparse policy (GQA and MLA), under
+monolithic and chunked admission and across multi-turn extends — plus the
+prefix-cache guarantees (full hit = zero forwards, identical tokens) and
+page-pressure deferral.
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LycheeConfig, get_config
+from repro.core.paging import (PageSpec, append_rows, resolve_page_spec,
+                               slot_gather_rows, slot_write_rows,
+                               translate_starts)
+from repro.models import model as MD
+from repro.serving.engine import Engine
+from repro.serving.pagepool import PagePool
+from repro.serving.scheduler import Session, Turn
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+N_CACHE = 160
+
+
+def _ly(policy="lychee"):
+    return LycheeConfig(budget=64, sink=4, buffer_size=16, max_coarse=8,
+                        top_kg=4, full_attn_layers=0, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Geometry: resolve_page_spec
+# ---------------------------------------------------------------------------
+def test_resolve_page_spec_auto():
+    cfg = _ly()
+    spec = resolve_page_spec(384, cfg, n_slots=2)
+    assert spec.page_tokens % max(cfg.max_chunk, cfg.quest_page, 1) == 0
+    assert 384 % spec.page_tokens == 0
+    assert spec.page_tokens >= spec.slack
+    assert spec.max_pages == 384 // spec.page_tokens
+    assert spec.n_pages == 2 * spec.max_pages          # break-even sizing
+    assert spec.page_rows == spec.page_tokens + spec.slack
+    assert spec.dump_page == spec.n_pages              # outside the pool
+    assert spec.pool_rows == (spec.n_pages + 1) * spec.page_rows
+    assert spec.logical_rows == 384
+
+
+def test_resolve_page_spec_validation():
+    cfg = _ly()
+    with pytest.raises(ValueError):                    # does not divide
+        resolve_page_spec(160, cfg, page_tokens=48)
+    with pytest.raises(ValueError):                    # < slack
+        resolve_page_spec(160, cfg, page_tokens=8)
+    with pytest.raises(ValueError):                    # pool < one slot
+        resolve_page_spec(160, cfg, page_tokens=32, pool_pages=3)
+
+
+# ---------------------------------------------------------------------------
+# Translation: table <-> physical rows
+# ---------------------------------------------------------------------------
+def _spec(P=32, slack=16, n_pages=8, max_pages=5):
+    return PageSpec(page_tokens=P, slack=slack, n_pages=n_pages,
+                    max_pages=max_pages)
+
+
+def test_translate_is_base_swap():
+    sp = _spec()
+    tbl = jnp.asarray([[3, 0, 6, 2, 7]], jnp.int32)
+    starts = jnp.asarray([[[0, 31, 32, 100, 159]]], jnp.int32)  # (1,1,5)
+    phys = np.asarray(translate_starts(tbl, starts, sp))[0, 0]
+    ref = [3 * 48 + 0, 3 * 48 + 31, 0 * 48 + 0, 2 * 48 + 4, 7 * 48 + 31]
+    assert phys.tolist() == ref
+    # over-range starts clip into the last logical page
+    over = jnp.asarray([[[999]]], jnp.int32)
+    assert np.asarray(translate_starts(tbl, over, sp)).item() == 7 * 48 + 31
+
+
+def test_write_gather_roundtrip():
+    """Scattering a contiguous image through a table row and gathering it
+    back is the identity, and halo rows duplicate the next page's head."""
+    sp = _spec()
+    rng = np.random.default_rng(0)
+    tbl_row = jnp.asarray(rng.permutation(sp.n_pages)[:sp.max_pages],
+                          jnp.int32)
+    img = rng.standard_normal((sp.logical_rows, 4)).astype(np.float32)
+    pool = np.zeros((sp.pool_rows, 4), np.float32)
+    direct, halo = (np.asarray(a) for a in slot_write_rows(tbl_row, sp))
+    pool[direct] = img
+    pool[halo] = img                        # halo dup (dump rows harmless)
+    grows = np.asarray(slot_gather_rows(tbl_row, sp))
+    assert np.array_equal(pool[grows], img)
+    # halo contract: rows [P, P+slack) of phys page p == next logical
+    # page's first slack rows
+    row = np.asarray(tbl_row)
+    for lp in range(1, sp.max_pages):
+        halo_rows = row[lp - 1] * sp.page_rows + sp.page_tokens \
+            + np.arange(sp.slack)
+        head_rows = row[lp] * sp.page_rows + np.arange(sp.slack)
+        assert np.array_equal(pool[halo_rows], pool[head_rows])
+
+
+def test_append_rows_reference():
+    """append_rows against a scalar reference over every t, including the
+    page-0 no-left-neighbour dump routing."""
+    sp = _spec()
+    rng = np.random.default_rng(1)
+    tbl = jnp.asarray(rng.permutation(sp.n_pages)[:sp.max_pages],
+                      jnp.int32)[None]
+    for t in range(sp.max_pages * sp.page_tokens):
+        d, h = append_rows(tbl, jnp.asarray([t], jnp.int32), sp)
+        page, off = t // sp.page_tokens, t % sp.page_tokens
+        assert int(d[0]) == int(tbl[0, page]) * sp.page_rows + off
+        if off < sp.slack and page >= 1:
+            ref = int(tbl[0, page - 1]) * sp.page_rows + sp.page_tokens + off
+        else:
+            ref = sp.dump_row
+        assert int(h[0]) == ref
+
+
+# ---------------------------------------------------------------------------
+# Allocator properties (hypothesis when available, seeded sweep otherwise)
+# ---------------------------------------------------------------------------
+def _check_allocator_journey(seed):
+    """Random alloc/incref/decref/evict journey; after every op the pool's
+    books must balance: free + in-use == n_pages, refcount == our reader
+    ledger, freed pages really return, alloc is all-or-nothing."""
+    rng = np.random.default_rng(seed)
+    sp = _spec(n_pages=int(rng.integers(4, 17)))
+    pool = PagePool(sp, bytes_per_page=1024, prefix_cache=False)
+    ledger = np.zeros(sp.n_pages, np.int64)    # our independent refcounts
+    held = []                                  # groups we hold a ref on
+
+    def check():
+        assert pool.pages_free + pool.pages_in_use == sp.n_pages
+        assert np.array_equal(pool._ref, ledger)
+        assert pool.pages_in_use == int((ledger > 0).sum())
+        assert sorted(pool._free) == [p for p in range(sp.n_pages)
+                                      if ledger[p] == 0]
+        assert pool.bytes_saved() == \
+            int(np.maximum(ledger - 1, 0).sum()) * 1024
+        assert pool.shared_pages == int((ledger > 1).sum())
+
+    for _ in range(120):
+        op = rng.integers(0, 3)
+        if op == 0:                                        # alloc
+            n = int(rng.integers(1, sp.n_pages + 2))
+            before = pool.pages_free
+            got = pool.alloc(n)
+            if n > before:
+                assert got is None                         # all-or-nothing
+                assert pool.pages_free == before           # state unchanged
+            else:
+                assert got is not None and len(got) == n
+                assert len(set(got)) == n                  # no dup hand-out
+                assert all(ledger[p] == 0 for p in got)    # were free
+                for p in got:
+                    ledger[p] = 1
+                held.append(list(got))
+        elif op == 1 and held:                             # incref a group
+            g = held[int(rng.integers(len(held)))]
+            pool.incref(g)
+            for p in g:
+                ledger[p] += 1
+            held.append(list(g))
+        elif op == 2 and held:                             # decref a group
+            g = held.pop(int(rng.integers(len(held))))
+            pool.decref(g)
+            for p in g:
+                ledger[p] -= 1
+        check()
+    for g in held:                                         # drain: no leak
+        pool.decref(g)
+        for p in g:
+            ledger[p] -= 1
+    check()
+    assert pool.pages_free == sp.n_pages
+    assert pool.peak_in_use <= sp.n_pages
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_allocator_journey(seed):
+        _check_allocator_journey(seed)
+else:
+    @pytest.mark.parametrize("seed", range(25))
+    def test_allocator_journey(seed):
+        _check_allocator_journey(seed)
+
+
+def test_double_free_and_bad_incref_assert():
+    pool = PagePool(_spec(), prefix_cache=False)
+    pages = pool.alloc(2)
+    pool.decref(pages)
+    with pytest.raises(AssertionError):
+        pool.decref(pages)                    # double free
+    with pytest.raises(AssertionError):
+        pool.incref([pages[0]])               # incref of a free page
+
+
+# ---------------------------------------------------------------------------
+# Radix prefix cache (host trie; sub/logits stand-ins)
+# ---------------------------------------------------------------------------
+def _register(pool, tokens, uid=0):
+    P = pool.spec.page_tokens
+    pages = pool.alloc(-(-len(tokens) // P))
+    assert pages is not None
+    return pool.register(np.asarray(tokens, np.int32), pages,
+                         n_safe=0, sub={"t": len(tokens)}, logits="L",
+                         uid=uid)
+
+
+def test_prefix_full_and_partial_lookup():
+    pool = PagePool(_spec(P=8, slack=4, n_pages=16, max_pages=8),
+                    bytes_per_page=64)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(5, 900, 21).astype(np.int32)   # 2 full pages + 5
+    _register(pool, prompt)
+
+    kind, entry, keep = pool.lookup(prompt)              # exact
+    assert kind == "full" and keep == 21 and entry.logits == "L"
+
+    longer = np.concatenate([prompt, rng.integers(5, 900, 10)]) \
+        .astype(np.int32)                                # shares 2 pages
+    kind, entry, keep = pool.lookup(longer)
+    assert kind == "partial"
+    assert keep == 16 and keep % 8 == 0 and keep < len(longer)
+
+    # exact-length prompt whose LAST page differs: trie depth matches on
+    # the 2 full pages only -> partial, never a false full hit
+    mutated = prompt.copy()
+    mutated[-1] += 1
+    kind, _, keep = pool.lookup(mutated)
+    assert kind == "partial" and keep == 16
+
+    # first-page mismatch -> miss
+    other = prompt.copy()
+    other[0] += 1
+    assert pool.lookup(other)[0] is None
+
+    # sub-page prompts can never share (no full page to share)
+    assert pool.lookup(prompt[:5])[0] is None
+
+    st_ = pool.stats()
+    assert st_.prefix_lookups == 5
+    assert st_.prefix_hits == 1 and st_.prefix_partial_hits == 2
+    assert 0 < st_.prefix_hit_rate < 1
+    assert st_.to_dict()["prefix_entries"] == 1
+
+
+def test_prefix_partial_keep_leaves_a_suffix():
+    """A prompt that is an exact multiple of P and fully covered by a
+    longer entry must keep one page back so the suffix extend still
+    produces the first-sample logits."""
+    pool = PagePool(_spec(P=8, slack=4, n_pages=16, max_pages=8))
+    rng = np.random.default_rng(3)
+    donor = rng.integers(5, 900, 32).astype(np.int32)    # 4 pages
+    _register(pool, donor)
+    kind, _, keep = pool.lookup(donor[:16])              # covered prefix
+    assert kind == "partial"                              # not its terminal
+    assert keep == 8                                      # ((16-1)//8)*8
+
+
+def test_prefix_eviction_lru_protect_and_clear():
+    pool = PagePool(_spec(P=8, slack=4, n_pages=16, max_pages=8),
+                    bytes_per_page=64)
+    rng = np.random.default_rng(4)
+    a = _register(pool, rng.integers(5, 900, 16).astype(np.int32), uid=0)
+    b = _register(pool, rng.integers(5, 900, 16).astype(np.int32), uid=1)
+    assert pool.pages_in_use == 4
+    pool.lookup(a.tokens)                                # touch a: b is LRU
+    assert pool.evict_lru() is True
+    assert pool.lookup(b.tokens)[0] is None              # b gone
+    assert pool.lookup(a.tokens)[0] == "full"            # a intact
+    assert pool.pages_in_use == 2                        # b's pages freed
+    assert pool.evict_lru(protect=a) is False            # nothing evictable
+    pool.clear_prefix_cache()
+    assert pool.pages_in_use == 0 and pool.stats().prefix_entries == 0
+    assert pool.stats().prefix_evictions == 1            # clear != evict
+
+
+def test_prefix_cache_disabled():
+    pool = PagePool(_spec(), prefix_cache=False)
+    assert pool.register(np.arange(32, dtype=np.int32), [], 0, None,
+                         None) is None
+    assert pool.lookup(np.arange(32, dtype=np.int32)) == (None, None, 0)
+    assert pool.stats().prefix_lookups == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine: paged serve is bit-identical to contiguous serve
+# ---------------------------------------------------------------------------
+def _sessions(rng, n, prompt_len=70, max_new=6, turns=1):
+    out = []
+    for i in range(n):
+        ts = [Turn(prompt=rng.integers(5, 900, prompt_len).astype(np.int32),
+                   max_new=max_new) for _ in range(turns)]
+        out.append(Session(uid=i, turns=ts, arrival_s=0.0))
+    return out
+
+
+def _toks(res):
+    return {u: [t.tokens for t in s.turns] for u, s in res.requests.items()}
+
+
+def _gqa_cfg(policy, chunk=0):
+    cfg = get_config("granite-3-8b", reduced=True).replace(
+        dtype="float32", lychee=_ly(policy))
+    return cfg.replace(serving=cfg.serving.replace(prefill_chunk=chunk))
+
+
+@pytest.fixture(scope="module")
+def gqa_params():
+    return MD.init_model(jax.random.key(0), _gqa_cfg("lychee"))
+
+
+def _assert_paged_matches_contiguous(cfg, params, sessions, n_slots=2):
+    eng_c = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    r_c = eng_c.serve(copy.deepcopy(sessions), n_slots=n_slots,
+                      mode="continuous")
+    assert r_c.pool is None
+    cfg_p = cfg.replace(serving=cfg.serving.replace(paged=True))
+    eng_p = Engine(cfg_p, params, n_cache=N_CACHE, donate_state=False)
+    assert eng_p.paged
+    r_p = eng_p.serve(copy.deepcopy(sessions), n_slots=n_slots,
+                      mode="continuous")
+    assert r_p.pool is not None
+    assert _toks(r_c) == _toks(r_p)
+    assert r_p.pool.pages_in_use == 0                    # all freed
+    assert r_p.pool.peak_pages_in_use > 0
+    return r_p
+
+
+@pytest.mark.parametrize("policy",
+                         ["lychee", "quest", "clusterkv", "streaming"])
+def test_paged_bitwise_gqa(policy, gqa_params):
+    rng = np.random.default_rng(3)
+    _assert_paged_matches_contiguous(_gqa_cfg(policy), gqa_params,
+                                     _sessions(rng, 4))
+
+
+def test_paged_bitwise_chunked_admission(gqa_params):
+    rng = np.random.default_rng(3)
+    _assert_paged_matches_contiguous(_gqa_cfg("lychee", chunk=32),
+                                     gqa_params, _sessions(rng, 4))
+
+
+@pytest.mark.parametrize("policy", ["lychee", "quest"])
+def test_paged_bitwise_multiturn_extend(policy, gqa_params):
+    rng = np.random.default_rng(3)
+    sess = _sessions(rng, 4, prompt_len=48, max_new=4, turns=2)
+    _assert_paged_matches_contiguous(_gqa_cfg(policy), gqa_params, sess)
+
+
+def test_paged_bitwise_mla():
+    cfg = get_config("deepseek-v3-671b", reduced=True).replace(
+        dtype="float32", lychee=_ly(), pattern=("mla",))
+    params = MD.init_model(jax.random.key(0), cfg)
+    rng = np.random.default_rng(3)
+    _assert_paged_matches_contiguous(cfg, params, _sessions(rng, 4))
+
+
+def test_dense_policy_falls_back_contiguous(gqa_params):
+    cfg = _gqa_cfg("dense")
+    cfg_p = cfg.replace(serving=cfg.serving.replace(paged=True))
+    assert not MD.can_page(cfg_p)
+    eng = Engine(cfg_p, gqa_params, n_cache=N_CACHE, donate_state=False)
+    assert not eng.paged
+    rng = np.random.default_rng(3)
+    sess = _sessions(rng, 2)
+    r = eng.serve(copy.deepcopy(sess), n_slots=2, mode="continuous")
+    assert r.pool is None
+    assert all(len(s.turns[0].tokens) == 6 for s in r.requests.values())
+
+
+def test_prefix_cache_full_hit_zero_forwards(gqa_params):
+    """Session 1 repeats session 0's prompt exactly -> full hit, spliced
+    with ZERO forward passes, tokens bit-identical to contiguous. Session
+    2 overlaps the first 40 tokens -> partial hit, still sound."""
+    cfg = _gqa_cfg("lychee")
+    rng = np.random.default_rng(5)
+    shared = rng.integers(5, 900, 70).astype(np.int32)
+    sess = _sessions(rng, 3)
+    sess[0].turns[0].prompt = shared.copy()
+    sess[1].turns[0].prompt = shared.copy()
+    sess[2].turns[0].prompt = np.concatenate(
+        [shared[:40], rng.integers(5, 900, 25).astype(np.int32)])
+
+    cfg_p = cfg.replace(serving=cfg.serving.replace(
+        paged=True, page_tokens=32, pool_pages=12))
+    eng = Engine(cfg_p, gqa_params, n_cache=N_CACHE, donate_state=False)
+    # n_slots=1 serializes admissions, so uid0 registers before uid1 looks
+    r = eng.serve(copy.deepcopy(sess), n_slots=1, mode="continuous")
+    st_ = r.pool
+    assert st_.prefix_lookups == 3
+    assert st_.prefix_hits >= 1                  # uid1 exact
+    assert st_.prefix_partial_hits >= 1          # uid2 40-token overlap
+    assert st_.peak_bytes_saved > 0              # sharing actually happened
+
+    eng_c = Engine(cfg, gqa_params, n_cache=N_CACHE, donate_state=False)
+    r_c = eng_c.serve(copy.deepcopy(sess), n_slots=1, mode="continuous")
+    assert _toks(r)[0] == _toks(r_c)[0]
+    assert _toks(r)[1] == _toks(r_c)[1]          # full hit: bit-identical
+    assert len(_toks(r)[2][0]) == len(_toks(r_c)[2][0])
+
+
+def test_hit_protection_degrades_to_miss(gqa_params):
+    """A prefix hit whose sharing plan cannot be funded — the entry
+    itself holds the pool's pages and is the only eviction candidate —
+    must degrade to a miss (evicting the entry) instead of deferring
+    forever. Session 1 shares only page 0 of session 0's registered
+    120-token prompt, so n_share == 0 while the entry pins 4 of the 6
+    pool pages; without the miss fallback serve() livelocks here."""
+    cfg = _gqa_cfg("lychee")
+    cfg_p = cfg.replace(serving=cfg.serving.replace(
+        paged=True, page_tokens=32, pool_pages=6))
+    eng = Engine(cfg_p, gqa_params, n_cache=N_CACHE, donate_state=False)
+    rng = np.random.default_rng(9)
+    a = rng.integers(5, 900, 120).astype(np.int32)
+    b = np.concatenate([a[:32], rng.integers(5, 900, 88)]).astype(np.int32)
+    sess = [Session(uid=0, turns=[Turn(prompt=a, max_new=24)],
+                    arrival_s=0.0),
+            Session(uid=1, turns=[Turn(prompt=b, max_new=24)],
+                    arrival_s=0.0)]
+    r = eng.serve(copy.deepcopy(sess), n_slots=1, mode="continuous")
+    assert all(len(s.turns[0].tokens) == 24 for s in r.requests.values())
+    assert r.pool.prefix_evictions >= 1           # the entry was dropped
+    assert r.pool.deferred_admissions == 0        # degraded, not deferred
+    # only session 1's own registration still pins pages at serve end
+    assert r.pool.prefix_entries == 1 and r.pool.pages_in_use == 4
+
+
+def test_pool_pressure_defers_admission(gqa_params):
+    """pool_pages = one slot's worth: two 3-page sessions cannot coexist,
+    so the second admission defers until the first finishes — and every
+    session still completes. Concurrency is bounded by pages, not slots."""
+    cfg = _gqa_cfg("lychee")
+    cfg_p = cfg.replace(serving=cfg.serving.replace(
+        paged=True, page_tokens=32, pool_pages=5, prefix_cache=False))
+    eng = Engine(cfg_p, gqa_params, n_cache=N_CACHE, donate_state=False)
+    rng = np.random.default_rng(7)
+    sess = _sessions(rng, 3)                     # 70 + 6 -> 3 pages each
+    r = eng.serve(copy.deepcopy(sess), n_slots=2, mode="continuous")
+    assert r.pool.deferred_admissions >= 1
+    assert all(len(s.turns[0].tokens) == 6 for s in r.requests.values())
+    assert r.pool.pages_in_use == 0
