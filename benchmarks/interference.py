@@ -66,6 +66,7 @@ def run_mode(engine, trace_factory, n_slots, n_busy):
         "wall_s": res.wall_s,
         "n_steps": res.n_steps,
         "pool": res.pool.to_dict() if res.pool else None,
+        "metrics": res.metrics.to_dict() if res.metrics else None,
     }, {uid: s.tokens for uid, s in res.requests.items()}
 
 

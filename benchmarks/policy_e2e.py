@@ -100,7 +100,9 @@ def main():
         rows.append({"policy": policy, "tokens_per_s": res.tokens_per_s,
                      "tpot_ms": tpot_ms, "p50_s": res.p50_latency_s,
                      "p99_s": res.p99_latency_s, "ttft_s": res.mean_ttft_s,
-                     "pool": res.pool.to_dict() if res.pool else None})
+                     "pool": res.pool.to_dict() if res.pool else None,
+                     "metrics": res.metrics.to_dict()
+                     if res.metrics else None})
         if args.check:
             bad = []
             for req in trace:

@@ -62,7 +62,7 @@ def run_once(engine, sessions, repeat):
         ttfts = cur if ttfts is None else [min(a, b)
                                            for a, b in zip(ttfts, cur)]
     tokens = {s.uid: res.requests[s.uid].turns[0].tokens for s in sessions}
-    return ttfts, tokens, res.pool
+    return ttfts, tokens, res.pool, res.metrics
 
 
 def main():
@@ -127,8 +127,8 @@ def main():
         srng = np.random.default_rng(args.seed + 1)
         sessions = make_sessions(srng, args.sessions, prefix, suffix_len,
                                  args.gen, cfg.vocab)
-        t_c, tok_c, _ = run_once(eng_c, sessions, args.repeat)
-        t_p, tok_p, pool = run_once(eng_p, sessions, args.repeat)
+        t_c, tok_c, _, _ = run_once(eng_c, sessions, args.repeat)
+        t_p, tok_p, pool, metrics = run_once(eng_p, sessions, args.repeat)
         warm_c = float(np.mean(t_c[1:]))
         warm_p = float(np.mean(t_p[1:]))
         speedup = warm_c / max(warm_p, 1e-9)
@@ -142,6 +142,7 @@ def main():
             "warm_speedup": speedup,
             "tokens_identical": identical,
             "pool": pool.to_dict(),
+            "metrics": metrics.to_dict() if metrics else None,
             "pool_bytes": pool.bytes_per_page * (pool.n_pages + 1),
             "contiguous_bytes": pool.bytes_per_page // pool.page_rows
             * n_cache * 1,                       # n_slots=1 private slots

@@ -46,7 +46,8 @@ def two_turn_session(rng, vocab, history, delta, gen1, gen2) -> Session:
 def run_once(engine, sess_factory, reuse):
     res = engine.serve([sess_factory()], n_slots=1, reuse=reuse)
     sess = res.requests[0]
-    return sess.turns[1].ttft_s, [t.tokens for t in sess.turns], res.pool
+    return (sess.turns[1].ttft_s, [t.tokens for t in sess.turns],
+            res.pool, res.metrics)
 
 
 def main():
@@ -119,7 +120,8 @@ def main():
         for reuse in ("extend", "reprefill"):
             best = None
             for _ in range(args.repeat):
-                ttft2, toks, pool = run_once(engine, factory, reuse)
+                ttft2, toks, pool, metrics = run_once(engine, factory,
+                                                      reuse)
                 best = ttft2 if best is None else min(best, ttft2)
                 tokens[reuse] = toks
             timings[reuse] = best
@@ -132,7 +134,8 @@ def main():
                      "ttft2_reprefill_ms": 1e3 * timings["reprefill"],
                      "speedup": speedup,
                      "turn2_identical": identical,
-                     "pool": pool.to_dict() if pool else None})
+                     "pool": pool.to_dict() if pool else None,
+                     "metrics": metrics.to_dict() if metrics else None})
         if args.check:
             if timings["extend"] >= timings["reprefill"]:
                 failures.append(f"{policy}: extend TTFT "

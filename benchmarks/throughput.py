@@ -133,7 +133,9 @@ def main():
                           "tpot_ms": 1e3 * r.decode_s / max(r.n_steps, 1),
                           "p50_s": r.p50_latency_s, "p99_s": r.p99_latency_s,
                           "ttft_s": r.mean_ttft_s,
-                          "pool": r.pool.to_dict() if r.pool else None}
+                          "pool": r.pool.to_dict() if r.pool else None,
+                          "metrics": r.metrics.to_dict()
+                          if r.metrics else None}
                       for m, r in results.items()},
         }
         with open(args.json, "w") as f:

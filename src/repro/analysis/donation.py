@@ -56,6 +56,7 @@ def audit_engine_donation(engine, *, target: str, n_slots: int = 2,
     p = engine.params
     tok = jnp.zeros((n_slots,), jnp.int32)
     keep = np.ones((n_slots,), bool)
+    cap = jnp.zeros((n_slots,), jnp.int32)
     base = jax.random.key(0)
     uid = jnp.zeros((n_slots,), jnp.int32)
     step = jnp.zeros((n_slots,), jnp.int32)
@@ -76,6 +77,13 @@ def audit_engine_donation(engine, *, target: str, n_slots: int = 2,
         ("_step_greedy_m", (p, tok, state, keep)),
         ("_step_sampled_m", (p, tok, state, keep, base, uid, step, temp,
                              top_k, top_p)),
+        # SLO degraded-budget variants (cap: per-slot retrieval budgets)
+        ("_step_greedy_d", (p, tok, state, cap)),
+        ("_step_sampled_d", (p, tok, state, cap, base, uid, step, temp,
+                             top_k, top_p)),
+        ("_step_greedy_md", (p, tok, state, keep, cap)),
+        ("_step_sampled_md", (p, tok, state, keep, cap, base, uid, step,
+                              temp, top_k, top_p)),
         ("_prefill_slot", (p, prompt, state, slot)),
         ("_extend_slot", (p, prompt, state, slot)),
     ]

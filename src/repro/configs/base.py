@@ -75,6 +75,57 @@ class LycheeConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Latency-SLO scheduling + overload-degradation knobs of the serving
+    engine (``serving.engine`` / ``serving.scheduler``).
+
+    With ``enabled`` the scheduler replaces blind FIFO by deadline-ordered
+    admission over (priority, arrival + TTFT target) and the engine runs a
+    three-stage degradation ladder under overload (queue depth past
+    ``queue_high``, projected head TTFT past ``ttft_target_s``, or paged-
+    pool free fraction under ``pool_low_frac``):
+
+    1. **budget shrink** (``degrade_budget``, opt-in — bit-exactness of the
+       affected slots is deliberately traded and recorded per-turn on
+       ``Turn.degraded``): active slots of priority > 0 decode with their
+       retrieval budget capped at ``min_budget_frac`` of the configured
+       budget. Per-slot (the decode step is per-slot vmapped), so
+       co-scheduled non-degraded slots stay bit-identical to the unloaded
+       oracle.
+    2. **preemption** (``preempt``): a fresh turn-0 admission still in its
+       chunked-prefill phase (no token emitted yet) yields its slot at a
+       chunk boundary to a strictly-higher-priority arrival; the preempted
+       session re-queues and replays identically (its sample keys depend
+       only on (seed, uid, step)).
+    3. **shed** (``shed``): queued sessions of priority > 0 whose projected
+       TTFT exceeds ``shed_grace`` x their target are rejected with an
+       explicit :class:`~repro.serving.scheduler.ShedResult` instead of
+       queuing unboundedly. Priority 0 is never shed.
+
+    ``max_pending`` bounds the scheduler queue even without SLO scheduling:
+    exceeding it raises :class:`~repro.serving.scheduler.QueueFullError`
+    when ``enabled`` is False, and sheds the worst queued session when True.
+    """
+
+    enabled: bool = False
+    ttft_target_s: float = 0.0    # per-session default TTFT target; 0 = off
+    tpot_target_ms: float = 0.0   # decode-rate target (observability only)
+    max_pending: int = 0          # queue bound; 0 = unbounded
+    queue_high: int = 0           # overload when pending > this; 0 = auto
+                                  # (2 x n_slots)
+    pool_low_frac: float = 0.0    # paged: overload when free pages drop
+                                  # under this fraction (0 = off)
+    degrade_budget: bool = False  # stage 1 (opt-in: trades bit-exactness)
+    min_budget_frac: float = 0.25  # degraded budget floor (frac of budget)
+    preempt: bool = True          # stage 2: chunk-boundary admission yield
+    shed: bool = True             # stage 3: reject hopeless queued sessions
+    shed_grace: float = 4.0       # shed when projected TTFT > grace*target
+
+    def replace(self, **kw) -> "SLOConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class ServingConfig:
     """Serving-engine admission knobs (chunked prefill + shape bucketing).
 
@@ -133,6 +184,7 @@ class ServingConfig:
     page_tokens: int = 0          # logical page size; 0 = auto
     pool_pages: int = 0           # pool capacity in pages; 0 = auto
     prefix_cache: bool = True     # radix prefix cache (paged mode only)
+    slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
 
     def replace(self, **kw) -> "ServingConfig":
         return dataclasses.replace(self, **kw)

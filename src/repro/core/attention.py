@@ -89,7 +89,7 @@ def assemble_spans(ret_starts: jax.Array, ret_lens: jax.Array, t,
 
 def fused_policy_decode(q, k_cache, v_cache, pstate, t, pol,
                         ly: LycheeConfig, *, scale: float,
-                        softcap: float = 0.0):
+                        softcap: float = 0.0, budget=None):
     """THE policy-managed decode hot path, fused (Algorithm 1 steps 1-4):
 
         select (retrieval) -> assemble_spans (sink/recent merge)
@@ -118,6 +118,17 @@ def fused_policy_decode(q, k_cache, v_cache, pstate, t, pol,
     so outputs are bitwise identical to the contiguous layout; pstate:
     batched policy state (None for stateless policies); t: (B,) per-slot
     lengths BEFORE this token. Returns (out (B, Hq, dv), updated state).
+
+    ``budget`` is the serving engine's overload-degradation valve: a (B,)
+    int32 per-slot cap (in tokens) on the RETRIEVED part of the active set,
+    0 meaning uncapped. Every registered policy emits its spans in
+    descending score rank (lychee: top-k fine clusters cluster-major;
+    quest: top-k pages; clusterkv: top-k clusters member-major), so zeroing
+    the trailing spans past the cap keeps exactly the highest-scored subset
+    — a smaller but still best-first retrieval. Sink and recent spans are
+    appended by ``assemble_spans`` afterwards and never shrink. The mask is
+    elementwise per slot inside the per-slot vmap, so slots with cap 0 are
+    bitwise unaffected by other slots' degradation.
     """
     from repro.core.paging import PagedKV, translate_starts
     from repro.kernels import ops as kops
@@ -129,11 +140,26 @@ def fused_policy_decode(q, k_cache, v_cache, pstate, t, pol,
     G = Hq // Hkv
     probe = q.reshape(B, Hkv, G, dk).mean(axis=2)           # (B, Hkv, dk)
 
-    def per_b(st_b, probe_b, t_b):
-        s, ln = pol.select(st_b, probe_b, t_b)
-        return assemble_spans(s, ln, t_b, ly, max_chunk=pol.span_len)
+    if budget is None:
+        def per_b(st_b, probe_b, t_b):
+            s, ln = pol.select(st_b, probe_b, t_b)
+            return assemble_spans(s, ln, t_b, ly, max_chunk=pol.span_len)
 
-    starts, lens = jax.vmap(per_b)(pstate, probe, t)        # (B, Hkv, C)
+        starts, lens = jax.vmap(per_b)(pstate, probe, t)    # (B, Hkv, C)
+    else:
+        cap = jnp.broadcast_to(jnp.asarray(budget, jnp.int32), t.shape)
+
+        def per_b(st_b, probe_b, t_b, cap_b):
+            s, ln = pol.select(st_b, probe_b, t_b)
+            # overload valve: drop the lowest-ranked retrieved spans past
+            # the cap (0 = uncapped); sink/recent are added below and
+            # never shrink
+            off = jnp.arange(s.shape[-1], dtype=jnp.int32) * pol.span_len
+            keep = (off < cap_b) | (cap_b <= 0)
+            ln = jnp.where(keep[None, :], ln, 0)
+            return assemble_spans(s, ln, t_b, ly, max_chunk=pol.span_len)
+
+        starts, lens = jax.vmap(per_b)(pstate, probe, t, cap)
     qg = q.reshape(B, Hkv, G, dk)
     ctx_ax = kv_axes()[2]
     use_kernel = ly.use_kernel

@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ARCH_IDS, LycheeConfig, get_config
+from repro.configs.base import (ARCH_IDS, LycheeConfig, SLOConfig,
+                                get_config)
 from repro.core.policy import list_policies
 from repro.models import model as MD
 from repro.serving import (Engine, SamplerParams, make_session_trace,
@@ -85,6 +86,27 @@ def main():
                          "per-chunk CachePolicy.extend")
     ap.add_argument("--prompt-lens", type=int, nargs="+",
                     default=[64, 256, 1024])
+    # --- SLO scheduling / overload control (--stream only) ------------
+    ap.add_argument("--slo", action="store_true",
+                    help="deadline-ordered admission + overload ladder "
+                         "(degrade -> preempt -> shed); see "
+                         "configs.base.SLOConfig")
+    ap.add_argument("--ttft-slo", type=float, default=2.0,
+                    help="TTFT target (s) driving deadlines and shedding")
+    ap.add_argument("--tpot-slo", type=float, default=0.0,
+                    help="TPOT target (ms, informational; 0 = none)")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="arrived-queue bound (0 = unbounded); overflow "
+                         "sheds lowest-priority-first under --slo")
+    ap.add_argument("--degrade-budget", action="store_true",
+                    help="under overload, shrink non-premium slots' "
+                         "retrieval budgets (recorded on Turn.degraded)")
+    ap.add_argument("--shed-grace", type=float, default=4.0,
+                    help="shed a queued session once its projected TTFT "
+                         "exceeds grace x target")
+    ap.add_argument("--priorities", type=int, nargs="+", default=None,
+                    help="priority classes assigned round-robin to the "
+                         "trace (0 = premium: never shed/degraded)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -96,6 +118,12 @@ def main():
         dtype="float32", lychee=lychee)
     cfg = cfg.replace(serving=cfg.serving.replace(
         prefill_chunk=args.prefill_chunk, chunk_state=args.chunk_state))
+    if args.slo:
+        cfg = cfg.replace(serving=cfg.serving.replace(slo=SLOConfig(
+            enabled=True, ttft_target_s=args.ttft_slo,
+            tpot_target_ms=args.tpot_slo, max_pending=args.max_pending,
+            degrade_budget=args.degrade_budget,
+            shed_grace=args.shed_grace)))
     rng = np.random.default_rng(args.seed)
     params = MD.init_model(jax.random.key(0), cfg)
     mode = "full" if policy == "dense" else \
@@ -115,6 +143,9 @@ def main():
                                prompt_lens=args.prompt_lens,
                                gen_lens=(args.gen // 2, args.gen),
                                rate_rps=args.rate)
+        if args.priorities:
+            for i, sess in enumerate(trace):
+                sess.priority = args.priorities[i % len(args.priorities)]
         n_cache = max(s.total_len() for s in trace) + 32
         engine = Engine(cfg, params, n_cache=n_cache)
         on_token = None
@@ -134,6 +165,16 @@ def main():
               f"mean TTFT {res.mean_ttft_s:.2f}s  "
               f"TPOT {res.mean_tpot_ms:.1f}ms  "
               f"ITL p99 {res.p99_itl_ms:.1f}ms / max {res.max_itl_ms:.1f}ms")
+        if args.slo and res.metrics is not None:
+            c = res.metrics.to_dict()["counters"]
+            print(f"  [slo] finished {c['finished']}  shed {c['shed']}  "
+                  f"preempted {c['preempted']}  "
+                  f"degraded turns {c['degraded_turns']}  "
+                  f"queue overflow {c['queue_overflow']}")
+            for uid, sr in sorted(res.shed.items()):
+                print(f"    shed sess{uid} prio={sr.priority} "
+                      f"({sr.reason}) at {sr.at_s:.2f}s, projected TTFT "
+                      f"{sr.projected_ttft_s:.2f}s")
         for uid in sorted(res.requests)[:4]:
             s = res.requests[uid]
             per_turn = " | ".join(

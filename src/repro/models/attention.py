@@ -173,20 +173,22 @@ def _slot_t(t, B: int) -> jax.Array:
 
 
 def _policy_attend(q, k_cache, v_cache, pstate, t, cfg: ModelConfig,
-                   pol: CachePolicy):
+                   pol: CachePolicy, budget=None):
     """Policy-managed decode attention — a thin config adapter over
     :func:`repro.core.attention.fused_policy_decode`, the fused
     select -> assemble_spans -> span executor -> update_batched hot path
     every registered policy shares (GQA and MLA both land here).
 
-    q: (B, Hq, dk); t: (B,). Returns (out (B, Hq, dv), updated policy state
+    q: (B, Hq, dk); t: (B,); ``budget``: optional (B,) int32 per-slot
+    retrieval cap in tokens (0 = uncapped — the serving engine's overload
+    valve). Returns (out (B, Hq, dv), updated policy state
     — ``None`` for stateless policies)."""
     dk = q.shape[-1]
     scale = 1.0 / dk ** 0.5 if cfg.qk_nope_dim == 0 else \
         1.0 / (cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5
     return fused_policy_decode(q, k_cache, v_cache, pstate, t, pol,
                                cfg.lychee, scale=scale,
-                               softcap=cfg.attn_softcap)
+                               softcap=cfg.attn_softcap, budget=budget)
 
 
 def _append_kv(cache_kv: jax.Array, row: jax.Array, at: jax.Array
@@ -200,7 +202,8 @@ def _append_kv(cache_kv: jax.Array, row: jax.Array, at: jax.Array
 
 def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
                kind: str, managed: bool, rope: bool = True,
-               pol: Optional[CachePolicy] = None, paged=None) -> Tuple:
+               pol: Optional[CachePolicy] = None, paged=None,
+               budget=None) -> Tuple:
     """x: (B, 1, d); t: scalar or (B,) per-slot positions;
     cache: {"k","v"[, "policy_state"]}. ``managed`` marks layers whose cache
     is run through the configured CachePolicy (``pol`` may be passed by the
@@ -236,7 +239,7 @@ def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
         pk = PagedKV(pool_k, tbl, spec)
         pv = PagedKV(pool_v, tbl, spec)
         out, pstate = _policy_attend(q, pk, pv, cache.get("policy_state"),
-                                     tt, cfg, pol)
+                                     tt, cfg, pol, budget=budget)
         if pstate is not None:
             cache = dict(cache, policy_state=pstate)
         out = out.reshape(B, 1, -1) @ p["wo"]
@@ -265,7 +268,7 @@ def gqa_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
                 (not pol.stateful or "policy_state" in cache):
             out, pstate = _policy_attend(q, k_c, v_c,
                                          cache.get("policy_state"), tt,
-                                         cfg, pol)
+                                         cfg, pol, budget=budget)
             if pstate is not None:
                 cache = dict(cache, policy_state=pstate)
         elif kv_axes()[2] is not None:

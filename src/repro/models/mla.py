@@ -114,7 +114,7 @@ def _absorbed_queries(p, x, pos, cfg):
 
 def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
                managed: bool, pol: Optional[CachePolicy] = None,
-               paged=None) -> Tuple[jax.Array, dict]:
+               paged=None, budget=None) -> Tuple[jax.Array, dict]:
     """x: (B,1,d); t: scalar or (B,) per-slot positions;
     cache: {"latent": (B, N, kvl+rd)[, "policy_state"]} — or
     {"pool_latent": (R, kvl+rd)} (batchless shared page pool) with
@@ -167,7 +167,7 @@ def mla_decode(p: dict, x: jax.Array, t, cache: dict, cfg: ModelConfig,
         # to the head-mean q_eff, and the MLA scale comes from cfg.
         ctx, pstate = _policy_attend(q_eff, k_c, v_c,
                                      cache.get("policy_state"), tt, cfg,
-                                     pol)
+                                     pol, budget=budget)
         if pstate is not None:
             cache = dict(cache, policy_state=pstate)
     elif paged_kv:

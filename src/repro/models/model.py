@@ -210,12 +210,12 @@ def block_make_cache(bp: dict, kind: str, material, x: jax.Array,
 # --- single-token decode ------------------------------------------------------
 def block_decode(bp: dict, kind: str, x: jax.Array, t, cache: Any,
                  cfg: ModelConfig, managed: bool,
-                 pol=None, paged=None) -> Tuple[jax.Array, Any]:
+                 pol=None, paged=None, budget=None) -> Tuple[jax.Array, Any]:
     if kind in ("attn", "attn_local", "swa_moe", "shared_attn"):
         akind = "attn" if kind == "shared_attn" else kind
         h, cache = A.gqa_decode(bp["attn"], rmsnorm(bp["norm1"], x), t,
                                 cache, cfg, akind, managed, pol=pol,
-                                paged=paged)
+                                paged=paged, budget=budget)
         x = x + h
         if kind == "swa_moe":
             h, _ = MOE.moe_apply(bp["moe"], rmsnorm(bp["norm2"], x), cfg)
@@ -226,7 +226,8 @@ def block_decode(bp: dict, kind: str, x: jax.Array, t, cache: Any,
     if kind in MLA_KINDS:
         from repro.models.mla import mla_decode
         h, cache = mla_decode(bp["attn"], rmsnorm(bp["norm1"], x), t, cache,
-                              cfg, managed, pol=pol, paged=paged)
+                              cfg, managed, pol=pol, paged=paged,
+                              budget=budget)
         x = x + h
         if kind == "mla":
             x = x + mlp_apply(bp["mlp"], rmsnorm(bp["norm2"], x))
@@ -573,12 +574,19 @@ def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
 # Decode step
 # ---------------------------------------------------------------------------
 def decode_step(params: dict, token: jax.Array, state: dict,
-                cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+                cfg: ModelConfig, budget=None) -> Tuple[jax.Array, dict]:
     """token: (B,) int32. Returns (logits (B, V), new state).
 
     ``state["t"]`` is the per-slot position vector (B,) — each serving slot
     decodes at its own sequence length (a scalar broadcasts for legacy
     states). All attention/cache ops thread it per-batch-element.
+
+    ``budget`` (optional, (B,) int32, 0 = uncapped) is the serving
+    engine's overload-degradation valve: it caps each slot's RETRIEVED
+    token budget inside ``fused_policy_decode`` (sink/recent never
+    shrink). Per-slot and traced — capping one slot is bitwise invisible
+    to the others, and ``None`` (the default) traces the exact
+    pre-existing step.
     """
     t = jnp.broadcast_to(jnp.asarray(state["t"], jnp.int32),
                          (token.shape[0],))
@@ -606,7 +614,8 @@ def decode_step(params: dict, token: jax.Array, state: dict,
             bp = _shared_params(params, kind, gp[pos_i])
             managed = _policy_managed(cfg, kind, scanned=True)
             x, c = block_decode(bp, kind, x, t, caches[pos_i], cfg, managed,
-                                pol=pol if managed else None, paged=paged)
+                                pol=pol if managed else None, paged=paged,
+                                budget=budget if managed else None)
             new.append(c)
         return x, tuple(new)
 

@@ -1,13 +1,16 @@
 from repro.serving.engine import (Engine, GenerateResult, ServeResult,
                                   serve_step)
+from repro.serving.metrics import EngineMetrics, Histogram
 from repro.serving.pagepool import PagePool, PoolStats, PrefixEntry
 from repro.serving.sampler import (SamplerConfig, SamplerParams, sample,
                                    slot_keys)
-from repro.serving.scheduler import (Request, Scheduler, Session, Turn,
+from repro.serving.scheduler import (QueueFullError, Request, Scheduler,
+                                     Session, ShedResult, Turn,
                                      make_session_trace, make_trace)
 
-__all__ = ["Engine", "GenerateResult", "PagePool", "PoolStats",
-           "PrefixEntry", "Request", "SamplerConfig", "SamplerParams",
-           "Scheduler", "ServeResult", "Session", "Turn",
+__all__ = ["Engine", "EngineMetrics", "GenerateResult", "Histogram",
+           "PagePool", "PoolStats", "PrefixEntry", "QueueFullError",
+           "Request", "SamplerConfig", "SamplerParams", "Scheduler",
+           "ServeResult", "Session", "ShedResult", "Turn",
            "make_session_trace", "make_trace", "sample", "serve_step",
            "slot_keys"]

@@ -104,14 +104,19 @@ from repro.core.paging import copy_page_rows, resolve_page_spec
 from repro.core.policy import policy_for
 from repro.core.types import usable_rows
 from repro.models import model as MD
+from repro.serving.metrics import EngineMetrics
 from repro.serving.pagepool import PagePool, PoolStats
 from repro.serving.sampler import (SamplerParams, sample, slot_keys)
-from repro.serving.scheduler import Scheduler, Session, Turn
+from repro.serving.scheduler import (Scheduler, Session, ShedResult, Turn)
 
 
-def serve_step(params, token, state, cfg: ModelConfig):
-    """One decode step (the dry-run entry point). token: (B,) int32."""
-    return MD.decode_step(params, token, state, cfg)
+def serve_step(params, token, state, cfg: ModelConfig, budget=None):
+    """One decode step (the dry-run entry point). token: (B,) int32.
+
+    ``budget`` (optional (B,) int32, 0 = uncapped) caps each slot's
+    retrieved-token budget — the overload-degradation valve (see
+    ``MD.decode_step``). ``None`` traces the exact pre-existing step."""
+    return MD.decode_step(params, token, state, cfg, budget=budget)
 
 
 @dataclasses.dataclass
@@ -154,6 +159,15 @@ class ServeResult:
     # allocated/free/shared, prefix-cache hit rates and bytes saved by
     # cross-request page sharing — serving.pagepool.PoolStats
     pool: Optional[PoolStats] = None
+    # SLO/overload outcomes (empty without an SLO policy): sessions the
+    # overload controller explicitly rejected, and sessions cancelled
+    # mid-flight — disjoint from ``requests`` (finished sessions only)
+    shed: Dict[int, ShedResult] = dataclasses.field(default_factory=dict)
+    cancelled: Dict[int, Session] = dataclasses.field(default_factory=dict)
+    # scheduling + latency observability: counters (admissions, deferrals,
+    # preemptions, sheds, budget-degrade events) and TTFT/TPOT/ITL/queue-
+    # depth histograms — serving.metrics.EngineMetrics
+    metrics: Optional[EngineMetrics] = None
 
 
 @dataclasses.dataclass
@@ -271,12 +285,45 @@ class Engine:
             keys = slot_keys(base, uid, step)
             return sample(keys, logits, temp, top_k, top_p), ns
 
+        # degraded-step family: the same four steps with a (B,) per-slot
+        # retrieval-budget cap threaded into the fused decode (the SLO
+        # overload valve). Separate jits so the uncapped hot path keeps its
+        # exact pre-existing trace; only used while some slot is degraded.
+        def _greedy_step_d(p, tok, st, cap):
+            logits, ns = serve_step(p, tok, st, cfg, budget=cap)
+            return jnp.argmax(logits, -1).astype(jnp.int32), ns
+
+        def _sampled_step_d(p, tok, st, cap, base, uid, step, temp, top_k,
+                            top_p):
+            logits, ns = serve_step(p, tok, st, cfg, budget=cap)
+            keys = slot_keys(base, uid, step)
+            return sample(keys, logits, temp, top_k, top_p), ns
+
+        def _greedy_step_md(p, tok, st, keep, cap):
+            logits, ns = serve_step(p, tok, st, cfg, budget=cap)
+            ns = MD.mask_step_slots(st, ns, keep)
+            return jnp.argmax(logits, -1).astype(jnp.int32), ns
+
+        def _sampled_step_md(p, tok, st, keep, cap, base, uid, step, temp,
+                             top_k, top_p):
+            logits, ns = serve_step(p, tok, st, cfg, budget=cap)
+            ns = MD.mask_step_slots(st, ns, keep)
+            keys = slot_keys(base, uid, step)
+            return sample(keys, logits, temp, top_k, top_p), ns
+
         self._step_greedy = jax.jit(_greedy_step, donate_argnums=donate)
         self._step_sampled = jax.jit(_sampled_step, donate_argnums=donate)
         self._step_greedy_m = jax.jit(_greedy_step_masked,
                                       donate_argnums=donate)
         self._step_sampled_m = jax.jit(_sampled_step_masked,
                                        donate_argnums=donate)
+        self._step_greedy_d = jax.jit(_greedy_step_d, donate_argnums=donate)
+        self._step_sampled_d = jax.jit(_sampled_step_d,
+                                       donate_argnums=donate)
+        self._step_greedy_md = jax.jit(_greedy_step_md,
+                                       donate_argnums=donate)
+        self._step_sampled_md = jax.jit(_sampled_step_md,
+                                        donate_argnums=donate)
         self._prefill_slot = jax.jit(
             lambda p, tk, st, slot: MD.prefill_into_slot(
                 p, tk, cfg, n_cache, st, slot),
@@ -494,7 +541,7 @@ class Engine:
               sampler: SamplerParams = SamplerParams(),
               seed: int = 0, verbose: bool = False,
               on_token: Optional[Callable[[int, int], None]] = None,
-              reuse: str = "extend") -> ServeResult:
+              reuse: str = "extend", slo=None) -> ServeResult:
         """Replay a session trace through the slot scheduler.
 
         mode="continuous": a freed slot immediately admits the next pending
@@ -513,6 +560,12 @@ class Engine:
         "reprefill" always rebuilds from the concatenated history (the
         baseline ``benchmarks/session_reuse.py`` compares against).
 
+        ``cfg.serving.slo`` (see :class:`~repro.configs.base.SLOConfig`)
+        turns on SLO-aware scheduling: deadline-ordered admission by
+        (priority, arrival + TTFT target), bounded queues, cooperative
+        cancellation and the staged overload ladder (budget degradation →
+        admission preemption → load shedding) — see :class:`_ServeLoop`.
+
         Session objects are mutated in place (lifecycle timestamps +
         generated tokens); pass fresh copies to compare modes. Greedy
         outputs per session are identical across modes, across ``reuse``
@@ -520,551 +573,905 @@ class Engine:
         of the session alone; sampled outputs are identical across
         co-scheduling/admission permutations (see module docstring).
         """
+        loop = self.serve_loop(requests, n_slots=n_slots, mode=mode,
+                               sampler=sampler, seed=seed, verbose=verbose,
+                               on_token=on_token, reuse=reuse, slo=slo)
+        loop.run()
+        return loop.result()
+
+    def serve_loop(self, requests: Sequence[Session], *, n_slots: int,
+                   mode: str = "continuous",
+                   sampler: SamplerParams = SamplerParams(),
+                   seed: int = 0, verbose: bool = False,
+                   on_token: Optional[Callable[[int, int], None]] = None,
+                   reuse: str = "extend", clock=None,
+                   slo=None) -> "_ServeLoop":
+        """Build the step-driven serve loop WITHOUT running it — the
+        journey-fuzzing entry point: the harness interleaves ``step()``
+        with mid-run ``submit()``/``Session.cancel()`` and checks engine
+        invariants between steps, under an injectable virtual ``clock``
+        (deterministic replay of randomized schedules). ``slo`` overrides
+        ``cfg.serving.slo`` for THIS loop only (the oracle replay runs
+        SLO-free on the same engine, reusing its jit caches). ``serve``
+        is exactly ``serve_loop(...).run()`` + ``result()``."""
+        return _ServeLoop(self, requests, n_slots=n_slots, mode=mode,
+                          sampler=sampler, seed=seed, verbose=verbose,
+                          on_token=on_token, reuse=reuse, clock=clock,
+                          slo=slo)
+
+
+class _RealClock:
+    """Wall-clock time source (the serve default). The journey harness
+    swaps in a virtual clock (``now_s``/``sleep``) so randomized schedules
+    replay deterministically and idle waits cost nothing."""
+
+    now_s = staticmethod(time.perf_counter)
+    sleep = staticmethod(time.sleep)
+
+
+class _ServeLoop:
+    """One ``Engine.serve`` invocation as an explicit, step-driven object.
+
+    Every iteration of the old monolithic serve loop is one ``step()``:
+
+    1. honor cooperative cancellations (queued, mid-prefill at a chunk
+       boundary, mid-decode) — slot, policy state and paged-pool refs are
+       reclaimed immediately;
+    2. SLO overload control (``cfg.serving.slo``): enforce the queue
+       bound, then — when overloaded (deep queue / low free pages /
+       projected head TTFT past target) — walk the degradation ladder:
+       stage 1 shrinks the retrieval budget of non-premium ACTIVE slots
+       (opt-in: trades bit-exactness, recorded on ``Turn.degraded``),
+       stage 2 preempts fresh lower-priority chunked admissions in favor
+       of a higher-priority arrival (chunk-boundary yield; no emitted
+       token is ever lost), stage 3 sheds queued sessions whose projected
+       TTFT is hopeless (``ShedResult``, exactly once, never priority 0);
+    3. admission phase: bind arrivals to free slots — FIFO, or
+       deadline-ordered under the SLO policy;
+    4. one bounded admission chunk (the chunked-prefill state machine);
+    5. one lock-step decode over the live slots (the degraded-budget jit
+       variants run ONLY while some slot is capped, so the unloaded hot
+       path keeps its exact pre-existing trace).
+
+    The loop's clock is injectable: the journey fuzzer drives a virtual
+    clock, submits sessions mid-run and asserts engine invariants between
+    steps (``serving.journeys``)."""
+
+    def __init__(self, eng: Engine, requests: Sequence[Session], *,
+                 n_slots: int, mode: str = "continuous",
+                 sampler: SamplerParams = SamplerParams(), seed: int = 0,
+                 verbose: bool = False,
+                 on_token: Optional[Callable[[int, int], None]] = None,
+                 reuse: str = "extend", clock=None, slo=None):
         assert mode in ("continuous", "static"), mode
         assert reuse in ("extend", "reprefill"), reuse
-        assert not (self.cfg.is_encdec or self.cfg.n_patches), \
+        assert not (eng.cfg.is_encdec or eng.cfg.n_patches), \
             "streaming admission serves text-only requests"
+        self.eng = eng
+        self.n_slots = n_slots
+        self.mode = mode
+        self.sampler = sampler
+        self.verbose = verbose
+        self.on_token = on_token
+        self.clock = clock if clock is not None else _RealClock()
         for s in requests:
-            assert s.total_len() <= self.usable, \
-                f"session {s.uid}: cache too small (tail cache_slack " \
-                f"reserved; total prompt+gen across turns must fit)"
-            assert all(t.max_new >= 1 for t in s.turns), \
-                f"session {s.uid}: every turn generates at least one " \
-                f"token (its first sample IS its generation; max_new=0 " \
-                f"would emit a token the total_len() guard never counted)"
-        use_extend = reuse == "extend" and self.can_extend
+            self._check_session(s)
+        self.use_extend = reuse == "extend" and eng.can_extend
 
-        sched = Scheduler(n_slots)
-        sched.submit_all(requests)
-        spec = None
-        pool: Optional[PagePool] = None
-        slot_pages = [[] for _ in range(n_slots)]   # refs this slot holds
-        slot_rows = [None] * n_slots                # (max_pages,) np rows
-        if self.paged:
-            spec = resolve_page_spec(
-                self.n_cache, self.cfg.lychee,
-                page_tokens=self.page_tokens,
-                pool_pages=self.cfg.serving.pool_pages, n_slots=n_slots)
-            state = self._zero_state_paged(n_slots, spec)
-            pool = PagePool(spec,
-                            bytes_per_page=self._bytes_per_page(state, spec),
-                            prefix_cache=self.cfg.serving.prefix_cache)
+        slo = slo if slo is not None else eng.cfg.serving.slo
+        self.slo = slo
+        self.sched = Scheduler(
+            n_slots,
+            max_pending=slo.max_pending if slo.enabled else 0,
+            order="slo" if slo.enabled else "fifo",
+            default_ttft_s=slo.ttft_target_s if slo.enabled else 0.0)
+        self.metrics = EngineMetrics()
+        self.sched.on_shed = self._on_shed
+        self.sched.submit_all(requests)
+        self.spec = None
+        self.pool: Optional[PagePool] = None
+        self.slot_pages = [[] for _ in range(n_slots)]  # refs slot holds
+        self.slot_rows = [None] * n_slots               # (max_pages,) rows
+        if eng.paged:
+            self.spec = resolve_page_spec(
+                eng.n_cache, eng.cfg.lychee,
+                page_tokens=eng.page_tokens,
+                pool_pages=eng.cfg.serving.pool_pages, n_slots=n_slots)
+            self.state = eng._zero_state_paged(n_slots, self.spec)
+            self.pool = PagePool(
+                self.spec,
+                bytes_per_page=eng._bytes_per_page(self.state, self.spec),
+                prefix_cache=eng.cfg.serving.prefix_cache)
         else:
-            state = self._zero_state(n_slots)
-        base = jax.random.key(seed)
-        cur = np.zeros((n_slots,), np.int32)
-        active = np.zeros((n_slots,), bool)
-        remaining = np.zeros((n_slots,), np.int64)
-        uid = np.zeros((n_slots,), np.int32)
-        stepc = np.zeros((n_slots,), np.int32)   # per-session sample counter
-        temp = np.zeros((n_slots,), np.float32)
-        top_k = np.zeros((n_slots,), np.int32)
-        top_p = np.ones((n_slots,), np.float32)
-        slot_t = np.zeros((n_slots,), np.int64)  # host mirror of device t
-        jobs: Dict[int, _AdmitJob] = {}          # slot -> in-flight admission
-        job_seq = 0
+            self.state = eng._zero_state(n_slots)
+        self.base = jax.random.key(seed)
+        self.cur = np.zeros((n_slots,), np.int32)
+        self.active = np.zeros((n_slots,), bool)
+        self.remaining = np.zeros((n_slots,), np.int64)
+        self.uid = np.zeros((n_slots,), np.int32)
+        self.stepc = np.zeros((n_slots,), np.int32)  # per-session samples
+        self.temp = np.zeros((n_slots,), np.float32)
+        self.top_k = np.zeros((n_slots,), np.int32)
+        self.top_p = np.ones((n_slots,), np.float32)
+        self.slot_t = np.zeros((n_slots,), np.int64)  # host mirror of t
+        self.jobs: Dict[int, _AdmitJob] = {}   # slot -> in-flight admission
+        self.job_seq = 0
         # an all-greedy trace keeps the leaner argmax-fused step
-        all_greedy = sampler.temperature <= 0.0 and all(
+        self.all_greedy = sampler.temperature <= 0.0 and all(
             (t.sampling is None or t.sampling.temperature <= 0.0)
             for s in requests for t in s.turns)
-        n_steps = 0
-        decode_s = 0.0
-        idle_s = 0.0
-        self.last_host_samples = 0
+        self.n_steps = 0
+        self.decode_s = 0.0
+        self.idle_s = 0.0
+        eng.last_host_samples = 0
         # static mode keeps its lock-step-wave timing: admissions drain all
         # their chunks back to back (the throughput baseline); continuous
         # mode interleaves one decode step per chunk
-        interleave = self.chunked and mode == "continuous"
+        self.interleave = eng.chunked and mode == "continuous"
         # uid/temperature/top-k/top-p only change at turn transitions —
         # cache their device copies so the hot loop uploads just the token
         # vector and the per-slot sample counter each step
-        slots_dirty = True
-        dev_slots = None
-        t0 = time.perf_counter()
+        self.slots_dirty = True
+        self.dev_slots = None
+        # SLO runtime state: per-slot retrieval-budget caps (0 = uncapped;
+        # recomputed every step by stage 1), an EMA of turn-0 admission
+        # service time (the projected-TTFT estimator; seeded
+        # optimistically, corrected by the first real admission) and the
+        # current overload verdict
+        self._cap = np.zeros((n_slots,), np.int32)
+        self.admit_ema = 0.05
+        self.overloaded = False
+        self._deg_cap_val = 0
+        ly = eng.cfg.lychee
+        if slo.enabled and slo.degrade_budget and ly.enabled:
+            pol = policy_for(ly)
+            if not pol.is_dense:
+                self._deg_cap_val = max(
+                    int(pol.span_len),
+                    int(ly.budget * slo.min_budget_frac))
+        self.t0 = self.clock.now_s()
 
-        def now() -> float:
-            return time.perf_counter() - t0
+    # -- plumbing ----------------------------------------------------------
+    def _check_session(self, s: Session) -> None:
+        assert s.total_len() <= self.eng.usable, \
+            f"session {s.uid}: cache too small (tail cache_slack " \
+            f"reserved; total prompt+gen across turns must fit)"
+        assert all(t.max_new >= 1 for t in s.turns), \
+            f"session {s.uid}: every turn generates at least one " \
+            f"token (its first sample IS its generation; max_new=0 " \
+            f"would emit a token the total_len() guard never counted)"
 
-        def n_pieces(total: int) -> int:
-            if not self.chunked:
-                return 1
-            return -(-total // self.prefill_chunk)
+    def _on_shed(self, sess: Session, res) -> None:
+        if res.reason == "queue_overflow":
+            self.metrics.queue_overflow += 1
+        if self.verbose:
+            print(f"[serve:{self.mode}] t={res.at_s:7.3f}s SHED "
+                  f"sess{sess.uid} prio={sess.priority} ({res.reason}, "
+                  f"depth={res.queue_depth}, "
+                  f"proj_ttft={res.projected_ttft_s:.3f}s)")
 
-        def setup_turn(slot: int, sess: Session) -> Turn:
-            """Per-turn slot bookkeeping shared by every admission path
-            (jobs and the zero-forward prefix-hit splice)."""
-            nonlocal slots_dirty
-            slots_dirty = True
-            turn = sess.turns[sess.cur]
-            turn.started_s = now()
-            remaining[slot] = turn.max_new
-            sp = turn.sampling if turn.sampling is not None else sampler
-            temp[slot] = sp.temperature
-            top_k[slot] = sp.top_k
-            top_p[slot] = sp.top_p
-            return turn
+    def now(self) -> float:
+        return self.clock.now_s() - self.t0
 
-        def begin_job(slot: int, sess: Session, toks=None, fresh=None,
-                      base_t=None) -> None:
-            """Create this turn's admission job. Turn 0 (and the re-prefill
-            fallback) is ``fresh`` — its first piece overwrites the slot;
-            extend turns feed their delta (led by the previous turn's final
-            sampled token — it was never fed back, so its KV row is still
-            absent) onto the slot's live rows. ``toks``/``fresh``/``base_t``
-            override the defaults for the prefix-cache partial-hit path
-            (the suffix streams onto the spliced prefix)."""
-            nonlocal job_seq
-            turn = setup_turn(slot, sess)
-            if toks is None:
-                if sess.cur == 0:
-                    toks, fresh = np.asarray(turn.prompt, np.int32), True
-                elif use_extend:
-                    prev = sess.turns[sess.cur - 1]
-                    toks = np.concatenate([
-                        np.asarray(prev.sampled[-1:], np.int32),
-                        np.asarray(turn.prompt, np.int32)])
-                    fresh = False
-                else:
-                    toks, fresh = sess.history_tokens(sess.cur), True
-            active[slot] = False
-            jobs[slot] = _AdmitJob(
-                slot=slot, sess=sess, tokens=toks, fresh=fresh,
-                base_t=(0 if fresh else int(slot_t[slot]))
-                if base_t is None else base_t, seq=job_seq,
-                multi=n_pieces(len(toks)) > 1)
-            job_seq += 1
-            if verbose:
-                kind = ("admit" if sess.cur == 0 else
-                        "extend" if use_extend else "reprefill")
-                how = (f"{n_pieces(len(toks))}x{self.prefill_chunk}-chunked"
-                       if n_pieces(len(toks)) > 1 else "monolithic")
-                print(f"[serve:{mode}] t={now():7.3f}s {kind} ({how}) "
-                      f"sess{sess.uid} turn {sess.cur + 1}/{sess.n_turns} "
-                      f"(S={turn.prompt_len}, gen={turn.max_new}) "
-                      f"-> slot {slot}")
+    @property
+    def done(self) -> bool:
+        return self.sched.all_done
 
-        def needs_rebuild(job: _AdmitJob) -> bool:
-            return job.fresh and job.multi and self.can_pad and \
-                self.chunk_state == "rebuild" and self.policy_stateful
-
-        def rebuild_leg(slot: int, job: _AdmitJob) -> None:
-            """ONE monolithic CachePolicy.build over the chunk-streamed
-            cache rows, at the exact bucket/shape a monolithic admission
-            would have used — the monolithic-build oracle, so chunked
-            greedy outputs are token-identical to monolithic admission at
-            any retrieval budget."""
-            nonlocal state
-            total = len(job.tokens)
-            Sp = self._pad_shape(total, self.usable)
-            buf = np.zeros((1, Sp), np.int32)
-            buf[0, :total] = job.tokens
-            if self.paged:
-                state = self._p_rebuild_slot(
-                    self.params, jnp.asarray(buf), jnp.int32(total), state,
-                    jnp.int32(slot), spec)
-            else:
-                state = self._rebuild_slot(
-                    self.params, jnp.asarray(buf), jnp.int32(total), state,
-                    jnp.int32(slot))
-
-        def job_piece(slot: int) -> bool:
-            """Run ONE bounded unit of the slot's admission per engine
-            iteration: a chunk forward, or (rebuild mode) the deferred
-            policy build as its own leg — so the worst interleaved stall is
-            max(chunk forward, policy build), never their sum. True when
-            the admission is complete — ``job.logits`` then holds the
-            admission logits of the full prompt."""
-            nonlocal state
-            job = jobs[slot]
-            total = len(job.tokens)
-            if job.pos >= total:
-                # all chunks fed; the deferred build is its own iteration
-                rebuild_leg(slot, job)
-                return True
-            left = total - job.pos
-            C = self.prefill_chunk if self.chunked else left
-            take = min(C, left)
-            last = take == left
-            piece = job.tokens[job.pos:job.pos + take]
-            t_cur = job.base_t + job.pos
-            dev_slot = jnp.int32(slot)
-            if not self.can_pad:
-                # monolithic natural-length admission (SSM/MoE/enc-dec)
-                logits, state = self._prefill_slot(
-                    self.params, jnp.asarray(piece[None]), state, dev_slot)
-            else:
-                # full chunks run at the one static chunk shape; the tail
-                # (or a short/monolithic prompt) pads to its pow2 bucket,
-                # clamped so pad rows never reach the reserved cache tail
-                shape = take if (self.chunked and
-                                 take == self.prefill_chunk) else \
-                    self._pad_shape(take, self.usable - t_cur)
-                buf = np.zeros((1, shape), np.int32)
-                buf[0, :take] = piece
-                tk, n = jnp.asarray(buf), jnp.int32(take)
-                if self.paged:
-                    # paged dispatch: a fresh first piece scatters the
-                    # prefilled rows through the slot's freshly-planned
-                    # page-table row; later pieces/extends stream onto the
-                    # live table
-                    if job.fresh and job.pos == 0:
-                        fn = self._p_prefill_slot_nb if needs_rebuild(job) \
-                            else self._p_prefill_slot_b
-                        logits, state = fn(
-                            self.params, tk, n, state, dev_slot,
-                            jnp.asarray(slot_rows[slot]), spec)
-                    else:
-                        fn = self._p_extend_slot_nu \
-                            if job.fresh and needs_rebuild(job) \
-                            else self._p_extend_slot_u
-                        logits, state = fn(
-                            self.params, tk, n, state, dev_slot, spec)
-                else:
-                    if job.fresh and job.pos == 0:
-                        fn = self._prefill_slot_nb if needs_rebuild(job) \
-                            else self._prefill_slot_b
-                    elif job.fresh and needs_rebuild(job):
-                        fn = self._extend_slot_nu
-                    else:
-                        fn = self._extend_slot_u
-                    logits, state = fn(self.params, tk, n, state, dev_slot)
-            job.pos += take
-            job.logits = logits
-            if not last:
-                return False
-            if needs_rebuild(job):
-                if interleave:
-                    return False        # build in its own iteration
-                rebuild_leg(slot, job)
-            return True
-
-        def register_prefix(slot: int, job: _AdmitJob) -> None:
-            """Snapshot a freshly-prefilled turn-0 prompt into the prefix
-            cache. Safe pages (halo rows complete — see ``core.paging``)
-            are shared by reference; the 1-2 unsafe tail pages (the slot
-            keeps appending into them) are deep-copied into entry-owned
-            pages; the residual per-slot state (policy selection state,
-            prelude caches, ``t``) plus the admission logits are stored so
-            a later EXACT hit replays the admission with zero forwards."""
-            nonlocal state
-            tokens = np.asarray(job.tokens, np.int32)
-            Lc = len(tokens)
-            P = spec.page_tokens
-            n_cov = -(-Lc // P)
-            n_safe = min(max(0, (Lc - spec.slack) // P), n_cov)
-            n_copy = n_cov - n_safe
-            owned = pool.alloc(n_copy)
-            if owned is None:
-                return              # pool too tight to snapshot — skip
-            if n_copy:
-                src_rows, dst_rows = copy_page_rows(
-                    spec, slot_pages[slot][n_safe:n_cov], owned)
-                state = self._p_copy_pages(
-                    state, jnp.asarray(src_rows), jnp.asarray(dst_rows))
-            shared = slot_pages[slot][:n_safe]
-            pool.incref(shared)
-            sub = self._p_slice_slot(state, jnp.int32(slot))
-            pool.register(tokens, shared + owned, n_safe, sub,
-                          job.logits, uid=job.sess.uid)
-
-        def complete_job(slot: int) -> None:
-            """Admission complete: mark the slot decoding and sample the
-            turn's first token from the last chunk's logits."""
-            job = jobs.pop(slot)
-            sess = job.sess
-            slot_t[slot] = job.base_t + len(job.tokens)
-            active[slot] = True
-            if self.paged and pool.prefix_cache and job.fresh and \
-                    sess.cur == 0 and job.base_t == 0:
-                register_prefix(slot, job)
-            turn = sess.turns[sess.cur]
-            if emit(slot, sess, turn, first_token(slot, turn, job.logits)):
-                advance(slot)
-
-        def run_job(slot: int) -> None:
-            """Drain the slot's admission (and any follow-up turn jobs its
-            completion spawns) without interleaving — the monolithic-timing
-            path (static mode / single-piece jobs / chunking disabled). In
-            interleave mode a multi-piece job — including one spawned
-            mid-drain by an instantly-completing turn — is left to the
-            chunk phase, preserving the bounded-stall contract."""
-            while slot in jobs:
-                if interleave and jobs[slot].multi:
-                    return
-                if job_piece(slot):
-                    complete_job(slot)
-
-        def first_token(slot: int, turn: Turn, logits) -> int:
-            """Sample this turn's first token from the prefill/extend
-            logits (host-side — once per TURN, not per token) with the same
-            (uid, step) key the fused loop would use."""
-            keys = slot_keys(base, jnp.asarray([uid[slot]], jnp.int32),
-                             jnp.asarray([stepc[slot]], jnp.int32))
-            tok = int(np.asarray(sample(
-                keys, logits, temp[slot:slot + 1], top_k[slot:slot + 1],
-                top_p[slot:slot + 1]))[0])
-            self.last_host_samples += 1
-            stepc[slot] += 1
-            cur[slot] = tok
-            return tok
-
-        def emit(slot: int, sess: Session, turn: Turn, tok: int) -> bool:
-            """Record one sampled token; True when it ends the turn
-            (budget, EOS, or a stop-sequence match — the matched suffix is
-            trimmed from the public ``tokens`` but stays in ``sampled``:
-            those tokens are in the KV cache and the next turn's history).
-            """
-            turn.sampled.append(tok)
-            turn.tokens.append(tok)
-            turn.token_times_s.append(now())
-            if turn.first_token_s is None:
-                turn.first_token_s = now()
-            if on_token is not None:
-                on_token(sess.uid, tok)
-            remaining[slot] -= 1
-            eos = turn.eos_id if turn.eos_id is not None else self.eos_id
-            done = remaining[slot] <= 0 or (eos is not None and tok == eos)
-            for seq in turn.stop:
-                L = len(seq)
-                if L and len(turn.sampled) >= L and \
-                        tuple(turn.sampled[-L:]) == tuple(seq):
-                    del turn.tokens[-L:]
-                    done = True
+    def submit(self, sess: Session, now_s: Optional[float] = None) -> bool:
+        """Mid-run submission (how the journey harness feeds the loop).
+        Returns False iff the session itself was shed by the queue bound.
+        """
+        self._check_session(sess)
+        ok = self.sched.submit(
+            sess, now_s=self.now() if now_s is None else now_s)
+        if ok and self.all_greedy:
+            for t in sess.turns:
+                sp = t.sampling if t.sampling is not None else self.sampler
+                if sp.temperature > 0.0:
+                    self.all_greedy = False
                     break
-            if done:
-                turn.finished_s = now()
-            return done
+        return ok
 
-        def advance(slot: int) -> None:
-            """Current turn ended: start the next turn in place (the slot —
-            and its KV/index — is retained) or retire the session. A next
-            turn becomes an admission job; single-piece jobs run to
-            completion immediately (the pre-chunking timing), multi-piece
-            jobs interleave with decode in continuous mode."""
-            nonlocal state
-            sess = sched.slot_of(slot)
-            sess.cur += 1
-            if sess.cur >= sess.n_turns:
-                sched.finish(slot, now())
-                active[slot] = False
-                cur[slot] = 0
-                if self.paged:
-                    # reset the table row to the dump page BEFORE freeing:
-                    # the freed pages may be re-allocated immediately, and
-                    # this (inactive, lock-stepped) slot keeps appending
-                    # garbage rows through its table every decode step
-                    state = self._p_reset_tbl(state, jnp.int32(slot), spec)
-                    pool.decref(slot_pages[slot])
-                    slot_pages[slot] = []
-                    slot_rows[slot] = None
-                if verbose:
-                    ntok = sum(len(t.tokens) for t in sess.turns)
-                    print(f"[serve:{mode}] t={now():7.3f}s finish "
-                          f"sess{sess.uid} ({ntok} tok, "
-                          f"{sess.n_turns} turns)")
-                return
-            begin_job(slot, sess)
-            run_job(slot)
+    def _n_pieces(self, total: int) -> int:
+        if not self.eng.chunked:
+            return 1
+        return -(-total // self.eng.prefill_chunk)
 
-        def plan_admission(sess: Session):
-            """Paged admission planning: reserve every page the session
-            will EVER need (all-or-nothing — an admitted session can
-            always run to completion, the pool never deadlocks) and
-            consult the prefix cache for the first turn's prompt. Under
-            page pressure, LRU prefix entries are evicted (the hit being
-            spliced is protected); if the pool is still too full the
-            admission is DEFERRED — a free slot without free pages waits,
-            so concurrency is bounded by pool pages, not slot count.
-            Returns None to defer, else (kind, entry, keep, shared,
-            copy_src, fresh) where ``shared`` are increfed safe pages of
-            the hit, ``copy_src`` its unsafe pages to deep-copy, and
-            ``fresh`` this session's own pages."""
-            P = spec.page_tokens
-            total_pages = -(-sess.total_len() // P)
-            prompt = np.asarray(sess.turns[0].prompt, np.int32)
-            kind, entry, keep = pool.lookup(prompt)
-            if kind is not None:
-                n_cov = -(-keep // P) if kind == "full" else keep // P
-                # the reader may only share pages whose halo rows are
-                # complete RELATIVE TO ITS OWN coverage: its first append
-                # halo-writes into page keep//P - 1 when keep%P < slack
-                n_share = min(entry.n_safe, max(0, (keep - spec.slack) // P))
-                copy_src = entry.pages[n_share:n_cov]
+    def _release_slot_pages(self, slot: int) -> None:
+        """Paged slot teardown, shared by finish/cancel/preempt: reset the
+        table row to the dump page BEFORE freeing — the freed pages may be
+        re-allocated immediately, and an inactive lock-stepped slot keeps
+        appending garbage rows through its table every decode step."""
+        if not self.eng.paged:
+            return
+        self.state = self.eng._p_reset_tbl(self.state, jnp.int32(slot),
+                                           self.spec)
+        self.pool.decref(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        self.slot_rows[slot] = None
+
+    # -- turn / admission machinery (one method per old closure) ----------
+    def _setup_turn(self, slot: int, sess: Session) -> Turn:
+        """Per-turn slot bookkeeping shared by every admission path
+        (jobs and the zero-forward prefix-hit splice)."""
+        self.slots_dirty = True
+        turn = sess.turns[sess.cur]
+        turn.started_s = self.now()
+        self.remaining[slot] = turn.max_new
+        sp = turn.sampling if turn.sampling is not None else self.sampler
+        self.temp[slot] = sp.temperature
+        self.top_k[slot] = sp.top_k
+        self.top_p[slot] = sp.top_p
+        return turn
+
+    def _begin_job(self, slot: int, sess: Session, toks=None, fresh=None,
+                   base_t=None) -> None:
+        """Create this turn's admission job. Turn 0 (and the re-prefill
+        fallback) is ``fresh`` — its first piece overwrites the slot;
+        extend turns feed their delta (led by the previous turn's final
+        sampled token — it was never fed back, so its KV row is still
+        absent) onto the slot's live rows. ``toks``/``fresh``/``base_t``
+        override the defaults for the prefix-cache partial-hit path
+        (the suffix streams onto the spliced prefix)."""
+        turn = self._setup_turn(slot, sess)
+        if toks is None:
+            if sess.cur == 0:
+                toks, fresh = np.asarray(turn.prompt, np.int32), True
+            elif self.use_extend:
+                prev = sess.turns[sess.cur - 1]
+                toks = np.concatenate([
+                    np.asarray(prev.sampled[-1:], np.int32),
+                    np.asarray(turn.prompt, np.int32)])
+                fresh = False
             else:
-                n_share, copy_src = 0, []
+                toks, fresh = sess.history_tokens(sess.cur), True
+        self.active[slot] = False
+        self.jobs[slot] = _AdmitJob(
+            slot=slot, sess=sess, tokens=toks, fresh=fresh,
+            base_t=(0 if fresh else int(self.slot_t[slot]))
+            if base_t is None else base_t, seq=self.job_seq,
+            multi=self._n_pieces(len(toks)) > 1)
+        self.job_seq += 1
+        if self.verbose:
+            kind = ("admit" if sess.cur == 0 else
+                    "extend" if self.use_extend else "reprefill")
+            how = (f"{self._n_pieces(len(toks))}"
+                   f"x{self.eng.prefill_chunk}-chunked"
+                   if self._n_pieces(len(toks)) > 1 else "monolithic")
+            print(f"[serve:{self.mode}] t={self.now():7.3f}s {kind} "
+                  f"({how}) sess{sess.uid} turn "
+                  f"{sess.cur + 1}/{sess.n_turns} "
+                  f"(S={turn.prompt_len}, gen={turn.max_new}) "
+                  f"-> slot {slot}")
+
+    def _needs_rebuild(self, job: _AdmitJob) -> bool:
+        eng = self.eng
+        return job.fresh and job.multi and eng.can_pad and \
+            eng.chunk_state == "rebuild" and eng.policy_stateful
+
+    def _rebuild_leg(self, slot: int, job: _AdmitJob) -> None:
+        """ONE monolithic CachePolicy.build over the chunk-streamed
+        cache rows, at the exact bucket/shape a monolithic admission
+        would have used — the monolithic-build oracle, so chunked
+        greedy outputs are token-identical to monolithic admission at
+        any retrieval budget."""
+        eng = self.eng
+        total = len(job.tokens)
+        Sp = eng._pad_shape(total, eng.usable)
+        buf = np.zeros((1, Sp), np.int32)
+        buf[0, :total] = job.tokens
+        if eng.paged:
+            self.state = eng._p_rebuild_slot(
+                eng.params, jnp.asarray(buf), jnp.int32(total), self.state,
+                jnp.int32(slot), self.spec)
+        else:
+            self.state = eng._rebuild_slot(
+                eng.params, jnp.asarray(buf), jnp.int32(total), self.state,
+                jnp.int32(slot))
+
+    def _job_piece(self, slot: int) -> bool:
+        """Run ONE bounded unit of the slot's admission per engine
+        iteration: a chunk forward, or (rebuild mode) the deferred
+        policy build as its own leg — so the worst interleaved stall is
+        max(chunk forward, policy build), never their sum. True when
+        the admission is complete — ``job.logits`` then holds the
+        admission logits of the full prompt."""
+        eng = self.eng
+        job = self.jobs[slot]
+        total = len(job.tokens)
+        if job.pos >= total:
+            # all chunks fed; the deferred build is its own iteration
+            self._rebuild_leg(slot, job)
+            return True
+        left = total - job.pos
+        C = eng.prefill_chunk if eng.chunked else left
+        take = min(C, left)
+        last = take == left
+        piece = job.tokens[job.pos:job.pos + take]
+        t_cur = job.base_t + job.pos
+        dev_slot = jnp.int32(slot)
+        if not eng.can_pad:
+            # monolithic natural-length admission (SSM/MoE/enc-dec)
+            logits, self.state = eng._prefill_slot(
+                eng.params, jnp.asarray(piece[None]), self.state, dev_slot)
+        else:
+            # full chunks run at the one static chunk shape; the tail
+            # (or a short/monolithic prompt) pads to its pow2 bucket,
+            # clamped so pad rows never reach the reserved cache tail
+            shape = take if (eng.chunked and
+                             take == eng.prefill_chunk) else \
+                eng._pad_shape(take, eng.usable - t_cur)
+            buf = np.zeros((1, shape), np.int32)
+            buf[0, :take] = piece
+            tk, n = jnp.asarray(buf), jnp.int32(take)
+            if eng.paged:
+                # paged dispatch: a fresh first piece scatters the
+                # prefilled rows through the slot's freshly-planned
+                # page-table row; later pieces/extends stream onto the
+                # live table
+                if job.fresh and job.pos == 0:
+                    fn = eng._p_prefill_slot_nb \
+                        if self._needs_rebuild(job) \
+                        else eng._p_prefill_slot_b
+                    logits, self.state = fn(
+                        eng.params, tk, n, self.state, dev_slot,
+                        jnp.asarray(self.slot_rows[slot]), self.spec)
+                else:
+                    fn = eng._p_extend_slot_nu \
+                        if job.fresh and self._needs_rebuild(job) \
+                        else eng._p_extend_slot_u
+                    logits, self.state = fn(
+                        eng.params, tk, n, self.state, dev_slot, self.spec)
+            else:
+                if job.fresh and job.pos == 0:
+                    fn = eng._prefill_slot_nb if self._needs_rebuild(job) \
+                        else eng._prefill_slot_b
+                elif job.fresh and self._needs_rebuild(job):
+                    fn = eng._extend_slot_nu
+                else:
+                    fn = eng._extend_slot_u
+                logits, self.state = fn(eng.params, tk, n, self.state,
+                                        dev_slot)
+        job.pos += take
+        job.logits = logits
+        if not last:
+            return False
+        if self._needs_rebuild(job):
+            if self.interleave:
+                return False        # build in its own iteration
+            self._rebuild_leg(slot, job)
+        return True
+
+    def _register_prefix(self, slot: int, job: _AdmitJob) -> None:
+        """Snapshot a freshly-prefilled turn-0 prompt into the prefix
+        cache. Safe pages (halo rows complete — see ``core.paging``)
+        are shared by reference; the 1-2 unsafe tail pages (the slot
+        keeps appending into them) are deep-copied into entry-owned
+        pages; the residual per-slot state (policy selection state,
+        prelude caches, ``t``) plus the admission logits are stored so
+        a later EXACT hit replays the admission with zero forwards."""
+        eng, spec, pool = self.eng, self.spec, self.pool
+        tokens = np.asarray(job.tokens, np.int32)
+        Lc = len(tokens)
+        P = spec.page_tokens
+        n_cov = -(-Lc // P)
+        n_safe = min(max(0, (Lc - spec.slack) // P), n_cov)
+        n_copy = n_cov - n_safe
+        owned = pool.alloc(n_copy)
+        if owned is None:
+            return              # pool too tight to snapshot — skip
+        if n_copy:
+            src_rows, dst_rows = copy_page_rows(
+                spec, self.slot_pages[slot][n_safe:n_cov], owned)
+            self.state = eng._p_copy_pages(
+                self.state, jnp.asarray(src_rows), jnp.asarray(dst_rows))
+        shared = self.slot_pages[slot][:n_safe]
+        pool.incref(shared)
+        sub = eng._p_slice_slot(self.state, jnp.int32(slot))
+        pool.register(tokens, shared + owned, n_safe, sub,
+                      job.logits, uid=job.sess.uid)
+
+    def _complete_job(self, slot: int) -> None:
+        """Admission complete: mark the slot decoding and sample the
+        turn's first token from the last chunk's logits."""
+        eng = self.eng
+        job = self.jobs.pop(slot)
+        sess = job.sess
+        self.slot_t[slot] = job.base_t + len(job.tokens)
+        self.active[slot] = True
+        if sess.cur == 0 and sess.admitted_s is not None:
+            # turn-0 admission service time feeds the projected-TTFT EMA
+            delta = max(0.0, self.now() - sess.admitted_s)
+            self.admit_ema = 0.8 * self.admit_ema + 0.2 * delta
+        if eng.paged and self.pool.prefix_cache and job.fresh and \
+                sess.cur == 0 and job.base_t == 0:
+            self._register_prefix(slot, job)
+        turn = sess.turns[sess.cur]
+        if self._emit(slot, sess, turn,
+                      self._first_token(slot, turn, job.logits)):
+            self._advance(slot)
+
+    def _run_job(self, slot: int) -> None:
+        """Drain the slot's admission (and any follow-up turn jobs its
+        completion spawns) without interleaving — the monolithic-timing
+        path (static mode / single-piece jobs / chunking disabled). In
+        interleave mode a multi-piece job — including one spawned
+        mid-drain by an instantly-completing turn — is left to the
+        chunk phase, preserving the bounded-stall contract."""
+        while slot in self.jobs:
+            if self.interleave and self.jobs[slot].multi:
+                return
+            if self._job_piece(slot):
+                self._complete_job(slot)
+
+    def _first_token(self, slot: int, turn: Turn, logits) -> int:
+        """Sample this turn's first token from the prefill/extend
+        logits (host-side — once per TURN, not per token) with the same
+        (uid, step) key the fused loop would use."""
+        keys = slot_keys(self.base,
+                         jnp.asarray([self.uid[slot]], jnp.int32),
+                         jnp.asarray([self.stepc[slot]], jnp.int32))
+        tok = int(np.asarray(sample(
+            keys, logits, self.temp[slot:slot + 1],
+            self.top_k[slot:slot + 1], self.top_p[slot:slot + 1]))[0])
+        self.eng.last_host_samples += 1
+        self.stepc[slot] += 1
+        self.cur[slot] = tok
+        return tok
+
+    def _emit(self, slot: int, sess: Session, turn: Turn,
+              tok: int) -> bool:
+        """Record one sampled token; True when it ends the turn
+        (budget, EOS, or a stop-sequence match — the matched suffix is
+        trimmed from the public ``tokens`` but stays in ``sampled``:
+        those tokens are in the KV cache and the next turn's history).
+        """
+        now = self.now()
+        turn.sampled.append(tok)
+        turn.tokens.append(tok)
+        turn.token_times_s.append(now)
+        if turn.first_token_s is None:
+            turn.first_token_s = now
+            if sess.cur == 0:
+                self.metrics.observe_ttft(now - sess.arrival_s)
+        if self.on_token is not None:
+            self.on_token(sess.uid, tok)
+        self.remaining[slot] -= 1
+        eos = turn.eos_id if turn.eos_id is not None else self.eng.eos_id
+        done = self.remaining[slot] <= 0 or \
+            (eos is not None and tok == eos)
+        for seq in turn.stop:
+            L = len(seq)
+            if L and len(turn.sampled) >= L and \
+                    tuple(turn.sampled[-L:]) == tuple(seq):
+                del turn.tokens[-L:]
+                done = True
+                break
+        if done:
+            turn.finished_s = self.now()
+            tp = turn.tpot_ms
+            if tp is not None:
+                self.metrics.tpot_ms.observe(tp)
+            for g in turn.itl_ms:
+                self.metrics.itl_ms.observe(g)
+        return done
+
+    def _advance(self, slot: int) -> None:
+        """Current turn ended: start the next turn in place (the slot —
+        and its KV/index — is retained) or retire the session. A next
+        turn becomes an admission job; single-piece jobs run to
+        completion immediately (the pre-chunking timing), multi-piece
+        jobs interleave with decode in continuous mode."""
+        sess = self.sched.slot_of(slot)
+        sess.cur += 1
+        if sess.cur >= sess.n_turns:
+            self.sched.finish(slot, self.now())
+            self.active[slot] = False
+            self.cur[slot] = 0
+            self._release_slot_pages(slot)
+            if self.verbose:
+                ntok = sum(len(t.tokens) for t in sess.turns)
+                print(f"[serve:{self.mode}] t={self.now():7.3f}s finish "
+                      f"sess{sess.uid} ({ntok} tok, "
+                      f"{sess.n_turns} turns)")
+            return
+        self._begin_job(slot, sess)
+        self._run_job(slot)
+
+    def _plan_admission(self, sess: Session):
+        """Paged admission planning: reserve every page the session
+        will EVER need (all-or-nothing — an admitted session can
+        always run to completion, the pool never deadlocks) and
+        consult the prefix cache for the first turn's prompt. Under
+        page pressure, LRU prefix entries are evicted (the hit being
+        spliced is protected); if the pool is still too full the
+        admission is DEFERRED — a free slot without free pages waits,
+        so concurrency is bounded by pool pages, not slot count.
+        Returns None to defer, else (kind, entry, keep, shared,
+        copy_src, fresh) where ``shared`` are increfed safe pages of
+        the hit, ``copy_src`` its unsafe pages to deep-copy, and
+        ``fresh`` this session's own pages."""
+        spec, pool = self.spec, self.pool
+        P = spec.page_tokens
+        total_pages = -(-sess.total_len() // P)
+        prompt = np.asarray(sess.turns[0].prompt, np.int32)
+        kind, entry, keep = pool.lookup(prompt)
+        if kind is not None:
+            n_cov = -(-keep // P) if kind == "full" else keep // P
+            # the reader may only share pages whose halo rows are
+            # complete RELATIVE TO ITS OWN coverage: its first append
+            # halo-writes into page keep//P - 1 when keep%P < slack
+            n_share = min(entry.n_safe, max(0, (keep - spec.slack) // P))
+            copy_src = entry.pages[n_share:n_cov]
+        else:
+            n_share, copy_src = 0, []
+        fresh = pool.alloc(total_pages - n_share)
+        while fresh is None and pool.evict_lru(protect=entry):
             fresh = pool.alloc(total_pages - n_share)
-            while fresh is None and pool.evict_lru(protect=entry):
-                fresh = pool.alloc(total_pages - n_share)
-            if fresh is None and kind is not None:
-                # the protected hit itself may be what keeps the pool
-                # full (it can be the last remaining entry): degrade to a
-                # miss so IT becomes evictable — a plain reservation
-                # always fits an otherwise idle pool (total_pages <=
-                # max_pages <= n_pages), so this cannot livelock
-                kind, entry, keep, n_share, copy_src = None, None, 0, 0, []
+        if fresh is None and kind is not None:
+            # the protected hit itself may be what keeps the pool
+            # full (it can be the last remaining entry): degrade to a
+            # miss so IT becomes evictable — a plain reservation
+            # always fits an otherwise idle pool (total_pages <=
+            # max_pages <= n_pages), so this cannot livelock
+            kind, entry, keep, n_share, copy_src = None, None, 0, 0, []
+            fresh = pool.alloc(total_pages)
+            while fresh is None and pool.evict_lru():
                 fresh = pool.alloc(total_pages)
-                while fresh is None and pool.evict_lru():
-                    fresh = pool.alloc(total_pages)
-            if fresh is None:
-                pool.deferred_admissions += 1
-                return None
-            shared = entry.pages[:n_share] if n_share else []
-            pool.incref(shared)
-            return kind, entry, keep, shared, copy_src, fresh
+        if fresh is None:
+            pool.deferred_admissions += 1
+            return None
+        shared = entry.pages[:n_share] if n_share else []
+        pool.incref(shared)
+        return kind, entry, keep, shared, copy_src, fresh
 
-        def admit_paged(slot: int, sess: Session, plan) -> None:
-            """Bind a planned paged admission to ``slot``: install the
-            page table, deep-copy the hit's unsafe tail pages, splice the
-            cached snapshot (full hit: zero forward passes; partial hit:
-            truncate via ``CachePolicy.splice_prefix`` then stream only
-            the suffix), or fall through to a normal prefill job."""
-            nonlocal state
-            kind, entry, keep, shared, copy_src, fresh = plan
-            pages = shared + fresh
-            slot_pages[slot] = pages
-            row = np.full((spec.max_pages,), spec.dump_page, np.int32)
-            row[:len(pages)] = pages
-            slot_rows[slot] = row
-            row_dev = jnp.asarray(row)
-            if copy_src:
-                src_rows, dst_rows = copy_page_rows(
-                    spec, copy_src, fresh[:len(copy_src)])
-                state = self._p_copy_pages(
-                    state, jnp.asarray(src_rows), jnp.asarray(dst_rows))
-            if kind == "full":
-                state = self._p_splice_full(
-                    state, entry.sub, jnp.int32(slot), row_dev)
-                slot_t[slot] = len(sess.turns[0].prompt)
-                turn = setup_turn(slot, sess)
-                active[slot] = True
-                if verbose:
-                    print(f"[serve:{mode}] t={now():7.3f}s admit "
-                          f"(prefix-cache FULL hit, 0 forwards) "
-                          f"sess{sess.uid} -> slot {slot}")
-                if emit(slot, sess, turn,
-                        first_token(slot, turn, entry.logits)):
-                    advance(slot)
-                return
-            if kind == "partial":
-                state = self._p_splice_part(
-                    state, entry.sub, jnp.int32(slot), row_dev,
-                    jnp.int32(keep))
-                slot_t[slot] = keep
-                prompt = np.asarray(sess.turns[0].prompt, np.int32)
-                if verbose:
-                    print(f"[serve:{mode}] t={now():7.3f}s admit "
-                          f"(prefix-cache partial hit, keep={keep}) "
-                          f"sess{sess.uid} -> slot {slot}")
-                begin_job(slot, sess, toks=prompt[keep:], fresh=False,
-                          base_t=keep)
-                run_job(slot)
-                return
-            begin_job(slot, sess)
-            run_job(slot)
+    def _admit_paged(self, slot: int, sess: Session, plan) -> None:
+        """Bind a planned paged admission to ``slot``: install the
+        page table, deep-copy the hit's unsafe tail pages, splice the
+        cached snapshot (full hit: zero forward passes; partial hit:
+        truncate via ``CachePolicy.splice_prefix`` then stream only
+        the suffix), or fall through to a normal prefill job."""
+        eng, spec = self.eng, self.spec
+        kind, entry, keep, shared, copy_src, fresh = plan
+        pages = shared + fresh
+        self.slot_pages[slot] = pages
+        row = np.full((spec.max_pages,), spec.dump_page, np.int32)
+        row[:len(pages)] = pages
+        self.slot_rows[slot] = row
+        row_dev = jnp.asarray(row)
+        if copy_src:
+            src_rows, dst_rows = copy_page_rows(
+                spec, copy_src, fresh[:len(copy_src)])
+            self.state = eng._p_copy_pages(
+                self.state, jnp.asarray(src_rows), jnp.asarray(dst_rows))
+        if kind == "full":
+            self.state = eng._p_splice_full(
+                self.state, entry.sub, jnp.int32(slot), row_dev)
+            self.slot_t[slot] = len(sess.turns[0].prompt)
+            turn = self._setup_turn(slot, sess)
+            self.active[slot] = True
+            if self.verbose:
+                print(f"[serve:{self.mode}] t={self.now():7.3f}s admit "
+                      f"(prefix-cache FULL hit, 0 forwards) "
+                      f"sess{sess.uid} -> slot {slot}")
+            if self._emit(slot, sess, turn,
+                          self._first_token(slot, turn, entry.logits)):
+                self._advance(slot)
+            return
+        if kind == "partial":
+            self.state = eng._p_splice_part(
+                self.state, entry.sub, jnp.int32(slot), row_dev,
+                jnp.int32(keep))
+            self.slot_t[slot] = keep
+            prompt = np.asarray(sess.turns[0].prompt, np.int32)
+            if self.verbose:
+                print(f"[serve:{self.mode}] t={self.now():7.3f}s admit "
+                      f"(prefix-cache partial hit, keep={keep}) "
+                      f"sess{sess.uid} -> slot {slot}")
+            self._begin_job(slot, sess, toks=prompt[keep:], fresh=False,
+                            base_t=keep)
+            self._run_job(slot)
+            return
+        self._begin_job(slot, sess)
+        self._run_job(slot)
 
-        while not sched.all_done:
-            # ---- admission phase: bind arrivals to free slots ----------
-            if mode == "continuous" or sched.active == 0:
-                for slot in sched.free_slots():
-                    head = sched.next_ready(now())
-                    if head is None:
-                        break
-                    plan = None
-                    if self.paged:
-                        plan = plan_admission(head)
-                        if plan is None:
-                            break       # page pressure: defer admission
-                    sess = sched.admit(slot, now())
-                    sess.cur = 0
-                    uid[slot] = sess.uid
-                    stepc[slot] = 0
-                    # single-piece jobs prefill + emit their first token
-                    # right here (the monolithic-timing path); multi-piece
-                    # jobs are left to the bounded chunk phase
-                    if self.paged:
-                        admit_paged(slot, sess, plan)
-                    else:
-                        begin_job(slot, sess)
-                        run_job(slot)
-            # ---- one admission chunk (bounded: <= prefill_chunk toks) --
-            if jobs:
-                slot = min(jobs, key=lambda s: jobs[s].seq)
-                if job_piece(slot):
-                    complete_job(slot)
-            if not active.any():
-                if not jobs and sched.pending:
-                    # open-loop trace: nothing can happen before the FIFO
-                    # head arrives — sleep until exactly then (no 10 ms
-                    # busy-poll) and book the wait as trace idleness, not
-                    # engine time
-                    wait = (sched.next_arrival_s() or 0.0) - now()
-                    if wait > 0:
-                        time.sleep(wait)
-                        idle_s += wait
+    # -- SLO control -------------------------------------------------------
+    def _process_cancellations(self, now: float) -> None:
+        """Honor ``Session.cancel()`` at this step boundary: queued
+        sessions leave the queue; a mid-prefill slot aborts its job at the
+        chunk boundary; a mid-decode slot stops emitting — in every case
+        the slot, its policy state (masked out of future steps) and its
+        paged-pool page refs are reclaimed immediately."""
+        sched = self.sched
+        for s in [q for q in sched.queued() if q.cancel_requested]:
+            sched.cancel_queued(s, now)
+            if self.verbose:
+                print(f"[serve:{self.mode}] t={now:7.3f}s cancel "
+                      f"sess{s.uid} (queued)")
+        for slot in range(self.n_slots):
+            sess = sched.slot_of(slot)
+            if sess is None or not sess.cancel_requested:
                 continue
-
-            # ---- one lock-step decode over the live slots --------------
-            # (with an in-flight admission the masked step discards the
-            # prefilling/idle slots' side effects — see mask_step_slots)
-            stepped = active.copy()
-            t_step = time.perf_counter()
-            if all_greedy:
-                if jobs:
-                    tok_d, state = self._step_greedy_m(
-                        self.params, jnp.asarray(cur), state,
-                        jnp.asarray(stepped))
-                else:
-                    tok_d, state = self._step_greedy(
-                        self.params, jnp.asarray(cur), state)
-            else:
-                if slots_dirty:
-                    dev_slots = (jnp.asarray(uid), jnp.asarray(temp),
-                                 jnp.asarray(top_k), jnp.asarray(top_p))
-                    slots_dirty = False
-                d_uid, d_temp, d_top_k, d_top_p = dev_slots
-                if jobs:
-                    tok_d, state = self._step_sampled_m(
-                        self.params, jnp.asarray(cur), state,
-                        jnp.asarray(stepped), base, d_uid,
-                        jnp.asarray(stepc), d_temp, d_top_k, d_top_p)
-                else:
-                    tok_d, state = self._step_sampled(
-                        self.params, jnp.asarray(cur), state, base,
-                        d_uid, jnp.asarray(stepc), d_temp, d_top_k,
-                        d_top_p)
-            tok = np.asarray(tok_d)
-            n_steps += 1
-            decode_s += time.perf_counter() - t_step
-            slot_t[stepped] += 1          # mirrors the device-side t + 1
-            for slot in range(n_slots):
-                if not stepped[slot]:
-                    continue
-                sess = sched.slot_of(slot)
+            where = "mid-prefill" if slot in self.jobs else "mid-decode"
+            self.jobs.pop(slot, None)
+            if sess.cur < sess.n_turns:
                 turn = sess.turns[sess.cur]
-                tk = int(tok[slot])
-                stepc[slot] += 1
-                cur[slot] = tk
-                if emit(slot, sess, turn, tk):
-                    advance(slot)
+                if turn.started_s is not None and turn.finished_s is None:
+                    turn.finished_s = now
+            self.active[slot] = False
+            self.cur[slot] = 0
+            self.slots_dirty = True
+            self._release_slot_pages(slot)
+            sched.cancel_active(slot, now)
+            if self.verbose:
+                print(f"[serve:{self.mode}] t={now:7.3f}s cancel "
+                      f"sess{sess.uid} ({where}, slot {slot})")
 
-        jax.block_until_ready(state["t"])
-        wall = now()
+    def _ttft_target(self, sess: Session) -> float:
+        return sess.ttft_target_s if sess.ttft_target_s is not None \
+            else self.slo.ttft_target_s
+
+    def _overload_check(self, now: float) -> bool:
+        """Overload = deep queue OR paged-pool pressure OR the head's
+        projected TTFT already past its target."""
+        slo, sched = self.slo, self.sched
+        qh = slo.queue_high if slo.queue_high > 0 else 2 * self.n_slots
+        if len(sched.arrived(now)) > qh:
+            return True
+        if self.pool is not None and slo.pool_low_frac > 0.0 and \
+                self.pool.pages_free < slo.pool_low_frac * \
+                self.spec.n_pages:
+            return True
+        head = sched.next_ready(now)
+        if head is not None:
+            target = self._ttft_target(head)
+            if target > 0 and \
+                    (now - head.arrival_s) + self.admit_ema > target:
+                return True
+        return False
+
+    def _slo_control(self, now: float) -> None:
+        """The staged overload ladder (see class docstring): queue bound,
+        stage-3 shedding of hopeless queued sessions, stage-1 retrieval-
+        budget degradation of non-premium active slots."""
+        slo = self.slo
+        if not slo.enabled:
+            return
+        self.sched.enforce_bound(now)
+        over = self._overload_check(now)
+        self.overloaded = over
+        if over and slo.shed:
+            arrived = sorted(self.sched.arrived(now),
+                             key=self.sched.slo_key)
+            for i, s in enumerate(arrived):
+                if s.priority <= 0:
+                    continue        # premium is never shed
+                target = self._ttft_target(s)
+                if target <= 0:
+                    continue
+                projected = (now - s.arrival_s) + \
+                    (i // self.n_slots + 1) * self.admit_ema
+                if projected > slo.shed_grace * target:
+                    self.sched.shed_queued(
+                        s, reason="slo", now_s=now,
+                        projected_ttft_s=projected)
+        new_cap = np.zeros_like(self._cap)
+        if over and self._deg_cap_val:
+            for slot in range(self.n_slots):
+                sess = self.sched.slot_of(slot)
+                if sess is None or not self.active[slot]:
+                    continue
+                if sess.priority > 0:   # premium is never degraded
+                    new_cap[slot] = self._deg_cap_val
+        self.metrics.degrade_events += int(
+            ((self._cap == 0) & (new_cap > 0)).sum())
+        self._cap = new_cap
+
+    def _maybe_preempt(self, now: float) -> None:
+        """Stage 2: when overloaded with no free slot, a strictly-higher-
+        priority arrival evicts the worst FRESH in-flight admission (a
+        turn-0 job that has emitted nothing — its chunks are abandoned at
+        the boundary, its pages refunded, and it re-queues keeping its
+        arrival time). Sessions with any emitted token are never
+        preempted: their KV rows are live state a re-admission would have
+        to rebuild."""
+        if not (self.slo.enabled and self.slo.preempt and
+                self.mode == "continuous" and self.overloaded):
+            return
+        if not self.jobs or self.sched.free_slots():
+            return
+        head = self.sched.next_ready(now)
+        if head is None:
+            return
+        cands = [(j.sess.priority, j.seq, s)
+                 for s, j in self.jobs.items()
+                 if j.sess.cur == 0 and
+                 not any(t.sampled for t in j.sess.turns)]
+        if not cands:
+            return
+        pr, _seq, slot = max(cands)
+        if head.priority >= pr:
+            return
+        victim = self.jobs.pop(slot).sess
+        self._release_slot_pages(slot)
+        self.sched.release(slot)
+        victim.cur = 0
+        self.slots_dirty = True
+        self.metrics.preempted += 1
+        if self.verbose:
+            print(f"[serve:{self.mode}] t={now:7.3f}s preempt "
+                  f"sess{victim.uid} prio={pr} (slot {slot}) for "
+                  f"sess{head.uid} prio={head.priority}")
+
+    # -- the loop ----------------------------------------------------------
+    def step(self) -> None:
+        """One engine iteration: cancellations -> SLO control ->
+        admission -> one bounded admission chunk -> one lock-step decode
+        (or an idle wait when nothing is live)."""
+        eng, sched = self.eng, self.sched
+        if sched.all_done:
+            return
+        now = self.now()
+        self._process_cancellations(now)
+        self._slo_control(now)
+        # ---- admission phase: bind arrivals to free slots --------------
+        if self.mode == "continuous" or sched.active == 0:
+            self._maybe_preempt(now)
+            for slot in sched.free_slots():
+                head = sched.next_ready(now)
+                if head is None:
+                    break
+                plan = None
+                if eng.paged:
+                    plan = self._plan_admission(head)
+                    if plan is None:
+                        break       # page pressure: defer admission
+                sess = sched.admit(slot, now, head)
+                sess.cur = 0
+                self.uid[slot] = sess.uid
+                self.stepc[slot] = 0
+                # single-piece jobs prefill + emit their first token
+                # right here (the monolithic-timing path); multi-piece
+                # jobs are left to the bounded chunk phase
+                if eng.paged:
+                    self._admit_paged(slot, sess, plan)
+                else:
+                    self._begin_job(slot, sess)
+                    self._run_job(slot)
+        # ---- one admission chunk (bounded: <= prefill_chunk toks) ------
+        if self.jobs:
+            slot = min(self.jobs, key=lambda s: self.jobs[s].seq)
+            if self._job_piece(slot):
+                self._complete_job(slot)
+        self.metrics.observe_depth(sched.pending, sched.active)
+        if not self.active.any():
+            if not self.jobs and sched.pending:
+                # open-loop trace: nothing can happen before the next
+                # arrival — sleep until exactly then (no 10 ms busy-poll)
+                # and book the wait as trace idleness, not engine time
+                wait = (sched.next_arrival_s() or 0.0) - self.now()
+                if wait > 0:
+                    self.clock.sleep(wait)
+                    self.idle_s += wait
+            return
+
+        # ---- one lock-step decode over the live slots ------------------
+        # (with an in-flight admission the masked step discards the
+        # prefilling/idle slots' side effects — see mask_step_slots; with
+        # any degraded slot the capped-step variants thread the per-slot
+        # retrieval-budget vector)
+        stepped = self.active.copy()
+        capped = bool(self._cap.any())
+        t_step = time.perf_counter()
+        cur_d = jnp.asarray(self.cur)
+        if self.all_greedy:
+            if self.jobs:
+                if capped:
+                    tok_d, self.state = eng._step_greedy_md(
+                        eng.params, cur_d, self.state,
+                        jnp.asarray(stepped), jnp.asarray(self._cap))
+                else:
+                    tok_d, self.state = eng._step_greedy_m(
+                        eng.params, cur_d, self.state,
+                        jnp.asarray(stepped))
+            elif capped:
+                tok_d, self.state = eng._step_greedy_d(
+                    eng.params, cur_d, self.state, jnp.asarray(self._cap))
+            else:
+                tok_d, self.state = eng._step_greedy(
+                    eng.params, cur_d, self.state)
+        else:
+            if self.slots_dirty:
+                self.dev_slots = (jnp.asarray(self.uid),
+                                  jnp.asarray(self.temp),
+                                  jnp.asarray(self.top_k),
+                                  jnp.asarray(self.top_p))
+                self.slots_dirty = False
+            d_uid, d_temp, d_top_k, d_top_p = self.dev_slots
+            if self.jobs:
+                if capped:
+                    tok_d, self.state = eng._step_sampled_md(
+                        eng.params, cur_d, self.state,
+                        jnp.asarray(stepped), jnp.asarray(self._cap),
+                        self.base, d_uid, jnp.asarray(self.stepc),
+                        d_temp, d_top_k, d_top_p)
+                else:
+                    tok_d, self.state = eng._step_sampled_m(
+                        eng.params, cur_d, self.state,
+                        jnp.asarray(stepped), self.base, d_uid,
+                        jnp.asarray(self.stepc), d_temp, d_top_k,
+                        d_top_p)
+            elif capped:
+                tok_d, self.state = eng._step_sampled_d(
+                    eng.params, cur_d, self.state, jnp.asarray(self._cap),
+                    self.base, d_uid, jnp.asarray(self.stepc), d_temp,
+                    d_top_k, d_top_p)
+            else:
+                tok_d, self.state = eng._step_sampled(
+                    eng.params, cur_d, self.state, self.base,
+                    d_uid, jnp.asarray(self.stepc), d_temp, d_top_k,
+                    d_top_p)
+        tok = np.asarray(tok_d)
+        self.n_steps += 1
+        self.decode_s += time.perf_counter() - t_step
+        self.slot_t[stepped] += 1     # mirrors the device-side t + 1
+        for slot in range(self.n_slots):
+            if not stepped[slot]:
+                continue
+            sess = sched.slot_of(slot)
+            turn = sess.turns[sess.cur]
+            if capped and self._cap[slot] > 0:
+                # this token decoded with a shrunken retrieval budget:
+                # record the bit-exactness trade on the turn, visibly
+                self.metrics.degraded_steps += 1
+                if not turn.degraded:
+                    turn.degraded = True
+                    self.metrics.degraded_turns += 1
+            tk = int(tok[slot])
+            self.stepc[slot] += 1
+            self.cur[slot] = tk
+            if self._emit(slot, sess, turn, tk):
+                self._advance(slot)
+
+    def run(self) -> None:
+        while not self.sched.all_done:
+            self.step()
+
+    def result(self) -> ServeResult:
+        """Final accounting (call once, after the loop drains)."""
+        sched = self.sched
+        jax.block_until_ready(self.state["t"])
+        wall = self.now()
         done = sched.finished
         total = sum(len(t.tokens) for s in done.values() for t in s.turns)
         lats = np.asarray([s.latency_s for s in done.values()])
-        ttfts = np.asarray([s.ttft_s for s in done.values()])
+        ttfts = np.asarray([s.ttft_s for s in done.values()
+                            if s.ttft_s is not None])
         tpots = [t.tpot_ms for s in done.values() for t in s.turns
                  if t.tpot_ms is not None]
         gaps = [g for s in done.values() for t in s.turns for g in t.itl_ms]
-        busy = max(wall - idle_s, 1e-9)
+        busy = max(wall - self.idle_s, 1e-9)
+        m = self.metrics
+        m.admitted = sched.n_admitted
+        m.finished = len(done)
+        m.cancelled = len(sched.cancelled)
+        m.shed = len(sched.shed)
+        m.preempted = sched.n_preempted
+        if self.pool is not None:
+            m.admit_deferred = self.pool.deferred_admissions
         return ServeResult(
-            mode=mode, requests=done, wall_s=wall, decode_s=decode_s,
-            idle_s=idle_s, n_steps=n_steps, total_new_tokens=total,
+            mode=self.mode, requests=done, wall_s=wall,
+            decode_s=self.decode_s, idle_s=self.idle_s,
+            n_steps=self.n_steps, total_new_tokens=total,
             tokens_per_s=total / busy,
-            p50_latency_s=float(np.percentile(lats, 50)) if len(lats) else 0.0,
-            p99_latency_s=float(np.percentile(lats, 99)) if len(lats) else 0.0,
+            p50_latency_s=float(np.percentile(lats, 50)) if len(lats)
+            else 0.0,
+            p99_latency_s=float(np.percentile(lats, 99)) if len(lats)
+            else 0.0,
             mean_ttft_s=float(ttfts.mean()) if len(ttfts) else 0.0,
             mean_tpot_ms=float(np.mean(tpots)) if tpots else 0.0,
             p99_itl_ms=float(np.percentile(gaps, 99)) if gaps else 0.0,
             max_itl_ms=float(max(gaps)) if gaps else 0.0,
-            pool=pool.stats() if pool is not None else None)
+            pool=self.pool.stats() if self.pool is not None else None,
+            shed=dict(sched.shed), cancelled=dict(sched.cancelled),
+            metrics=m)

@@ -1,0 +1,538 @@
+"""Invariant-fuzzing journey harness for the serving engine.
+
+venomqa-style journey testing: drive a REAL :class:`~repro.serving.
+engine.Engine` through randomized *action sequences* — submit /
+extend-turn / cancel / overload-burst / clock-advance / engine step —
+and check machine-checkable invariants after EVERY step, under a
+virtual clock so each seeded journey replays deterministically.
+
+Checked invariants (``JourneyRunner.check_invariants``):
+
+* **slot-table consistency** — the scheduler's slot table, the engine's
+  ``active`` mask and the in-flight admission jobs agree (a slot is
+  decoding XOR prefilling XOR free; a job's session IS the slot's);
+* **monotone per-slot position** — a slot's host-mirrored ``t`` never
+  decreases while the same (session, turn) occupies it;
+* **token-budget accounting** — no turn ever emits more than
+  ``max_new`` samples; public ``tokens`` never exceeds raw ``sampled``;
+* **paged ledger** — free + in-use pages == ``n_pages``; every page's
+  refcount equals the number of slot page-lists plus prefix-cache
+  entries holding it; free pages have refcount 0, no duplicates;
+* **terminal partition** — finished / shed / cancelled are disjoint,
+  outcomes match, every SLO-shed session is surfaced exactly once, and
+  (with the queue bound) the arrived backlog never exceeds
+  ``max_pending`` after a step;
+* **drain cleanliness** — once the journey drains and the prefix cache
+  is cleared, the pool is fully free (zero leaked pages);
+* **oracle token identity** — every finished session whose turns were
+  never budget-degraded replays SOLO on the same engine (same seed,
+  SLO off) with bit-identical per-turn ``sampled`` tokens — the
+  serve==solo invariant fuzzed across cancellation, preemption,
+  shedding and overload.
+
+Failures raise :class:`InvariantViolation` carrying the seed and the
+full action log, so a failing journey is a committable regression test
+(``JourneyRunner.replay`` re-runs an action log verbatim).
+
+CLI (the CI fuzz gate)::
+
+    python -m repro.serving.journeys --seeds 0 1 2 --actions 200 \
+        --artifact journey-failure.json
+
+exits non-zero on the first violated journey after writing the
+seed + action log + violation to ``--artifact``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, SLOConfig
+from repro.serving.sampler import SamplerParams
+from repro.serving.scheduler import Session, Turn
+
+
+class InvariantViolation(AssertionError):
+    """One journey invariant failed; carries the replayable evidence."""
+
+    def __init__(self, message: str, *, seed: int, step: int,
+                 log: List[Tuple]):
+        super().__init__(message)
+        self.seed = seed
+        self.step = step
+        self.log = log
+
+
+@dataclasses.dataclass(frozen=True)
+class JourneySpec:
+    """One fuzzed configuration axis: which engine variant to drive."""
+
+    policy: str = "lychee"        # lychee | quest | streaming | ...
+    paged: bool = False
+    n_slots: int = 2
+    n_cache: int = 160
+    prefill_chunk: int = 16       # 0 = monolithic admission
+    slo: Optional[SLOConfig] = None   # None -> a fuzz-friendly default
+
+    def slo_config(self) -> SLOConfig:
+        if self.slo is not None:
+            return self.slo
+        return SLOConfig(enabled=True, ttft_target_s=0.5,
+                         max_pending=8, queue_high=4,
+                         degrade_budget=True, min_budget_frac=0.25,
+                         preempt=True, shed=True, shed_grace=4.0)
+
+
+def journey_config(spec: JourneySpec) -> ModelConfig:
+    """The tiny test-scale model config the journeys run on (matches the
+    tier-1 serving-test fixture scale, so compiles stay in seconds)."""
+    cfg = get_config("granite-3-8b", reduced=True).replace(dtype="float32")
+    ly = cfg.lychee.replace(budget=64, sink=4, buffer_size=16,
+                            max_coarse=8, top_kg=4, full_attn_layers=0,
+                            policy=spec.policy,
+                            enabled=spec.policy != "dense")
+    sv = cfg.serving.replace(paged=spec.paged,
+                             prefill_chunk=spec.prefill_chunk,
+                             slo=spec.slo_config())
+    return cfg.replace(lychee=ly, serving=sv)
+
+
+class FakeClock:
+    """Virtual time: ``sleep`` advances it, nothing ever blocks — the
+    loop's arrival gating, SLO deadlines and idle waits all replay
+    deterministically and instantly."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def now_s(self) -> float:
+        return self.t
+
+    def sleep(self, dt: float) -> None:
+        self.t += max(0.0, float(dt))
+
+
+def clone_session(sess: Session) -> Session:
+    """A fresh lifecycle-clean copy for the solo oracle replay (same uid:
+    sampling keys fold the uid, so identity must be preserved)."""
+    return Session(
+        uid=sess.uid, arrival_s=0.0, priority=sess.priority,
+        ttft_target_s=None,
+        turns=[Turn(prompt=np.asarray(t.prompt, np.int32),
+                    max_new=t.max_new, sampling=t.sampling,
+                    stop=t.stop, eos_id=t.eos_id) for t in sess.turns])
+
+
+class JourneyRunner:
+    """Drives one engine through a journey; checks invariants per step.
+
+    ``engine`` is shared across journeys of the same spec (jit caches are
+    the expensive part); every journey builds a fresh ``_ServeLoop`` so
+    device state starts clean.
+    """
+
+    # action weights for the randomized walk (steps dominate so queues
+    # actually drain; bursts + cancels keep the SLO machinery hot)
+    ACTIONS = (("step", 10), ("submit", 3), ("burst", 1), ("cancel", 2),
+               ("sleep", 2))
+
+    def __init__(self, engine, *, seed: int, n_slots: int = 2,
+                 max_live: int = 12):
+        self.eng = engine
+        self.seed = int(seed)
+        self.n_slots = n_slots
+        self.max_live = max_live
+        self.rng = np.random.default_rng(seed)
+        self.clock = FakeClock()
+        self.loop = engine.serve_loop([], n_slots=n_slots, seed=seed,
+                                      clock=self.clock)
+        self.sessions: Dict[int, Session] = {}
+        self.log: List[Tuple] = []
+        self.next_uid = 0
+        self.steps = 0
+        self._slot_marks = [None] * n_slots   # (sess id, cur, t) mirrors
+
+    # -- session synthesis ---------------------------------------------
+    def _new_session(self, *, priority: int, n_turns: int,
+                     lens: List[int], gens: List[int],
+                     temps: List[float], target: float) -> Session:
+        turns = []
+        for j in range(n_turns):
+            S, gen, temp = lens[j], gens[j], temps[j]
+            sp = SamplerParams(temperature=temp,
+                               top_k=20 if temp > 0 else 0)
+            prompt = self.rng.integers(
+                0, self.eng.cfg.vocab, size=(S,)).astype(np.int32)
+            turns.append(Turn(prompt=prompt, max_new=gen, sampling=sp))
+        sess = Session(uid=self.next_uid, turns=turns,
+                       arrival_s=self.clock.t, priority=priority,
+                       ttft_target_s=target if target > 0 else None)
+        self.next_uid += 1
+        return sess
+
+    def _rand_session_args(self) -> dict:
+        rng = self.rng
+        n_turns = int(rng.integers(1, 3))
+        return dict(
+            priority=int(rng.choice([0, 1, 1, 2])),
+            n_turns=n_turns,
+            lens=[int(rng.choice([8, 24, 48])) for _ in range(n_turns)],
+            gens=[int(rng.integers(1, 8)) for _ in range(n_turns)],
+            temps=[float(rng.choice([0.0, 0.0, 0.8]))
+                   for _ in range(n_turns)],
+            target=float(rng.choice([0.0, 0.2, 1.0])))
+
+    def _live_uids(self) -> List[int]:
+        return [u for u, s in self.sessions.items() if s.outcome == ""]
+
+    # -- actions --------------------------------------------------------
+    def do(self, action: str, **kw) -> None:
+        """Execute one journey action and append it to the replay log
+        (``burst`` logs as its inner submits, so logs replay verbatim)."""
+        if action == "burst":
+            for _ in range(kw["n"]):
+                self.do("submit",
+                        **{k: v for k, v in kw.items() if k != "n"})
+            return
+        self.log.append((action, kw))
+        if action == "submit":
+            sess = self._new_session(**kw)
+            if sess.total_len() > self.eng.usable:
+                return
+            self.sessions[sess.uid] = sess
+            self.loop.submit(sess)
+        elif action == "cancel":
+            sess = self.sessions.get(kw["uid"])
+            if sess is not None and sess.outcome == "":
+                sess.cancel()
+        elif action == "sleep":
+            self.clock.sleep(kw["dt"])
+        elif action == "step":
+            self.loop.step()
+            self.steps += 1
+            self.check_invariants()
+        else:
+            raise ValueError(f"unknown journey action {action!r}")
+
+    def random_action(self) -> None:
+        names = [n for n, _ in self.ACTIONS]
+        weights = np.asarray([w for _, w in self.ACTIONS], np.float64)
+        act = str(self.rng.choice(names, p=weights / weights.sum()))
+        if act == "submit":
+            if len(self._live_uids()) >= self.max_live:
+                act = "step"
+            else:
+                return self.do("submit", **self._rand_session_args())
+        if act == "burst":
+            if len(self._live_uids()) >= self.max_live:
+                act = "step"
+            else:
+                args = self._rand_session_args()
+                args["n"] = int(self.rng.integers(3, 7))
+                return self.do("burst", **args)
+        if act == "cancel":
+            live = self._live_uids()
+            if not live:
+                act = "step"
+            else:
+                return self.do("cancel",
+                               uid=int(self.rng.choice(live)))
+        if act == "sleep":
+            return self.do("sleep",
+                           dt=float(self.rng.choice([0.05, 0.3, 1.0])))
+        return self.do("step")
+
+    def run(self, n_actions: int) -> None:
+        """The fuzz loop: ``n_actions`` random actions, drain, then the
+        final leak + oracle sweep."""
+        for _ in range(n_actions):
+            self.random_action()
+        self.drain()
+        self.check_drained()
+        self.check_oracle()
+
+    def replay(self, log: List[Tuple]) -> None:
+        """Re-run a recorded action log verbatim (shrunken regression
+        journeys commit these), then the same final sweep as ``run``."""
+        for action, kw in log:
+            self.do(action, **kw)
+        self.drain()
+        self.check_drained()
+        self.check_oracle()
+
+    def drain(self, max_steps: int = 20_000) -> None:
+        for _ in range(max_steps):
+            if self.loop.done:
+                return
+            self.do("step")
+        self._fail(f"journey failed to drain within {max_steps} steps "
+                   f"(pending={self.loop.sched.pending}, "
+                   f"active={self.loop.sched.active})")
+
+    # -- invariants -----------------------------------------------------
+    def _fail(self, msg: str) -> None:
+        raise InvariantViolation(
+            f"[seed={self.seed} step={self.steps}] {msg}",
+            seed=self.seed, step=self.steps, log=self.log)
+
+    def _ok(self, cond: bool, msg: str) -> None:
+        if not cond:
+            self._fail(msg)
+
+    def check_invariants(self) -> None:
+        loop, sched = self.loop, self.loop.sched
+        # 1. slot-table consistency
+        for slot in range(self.n_slots):
+            sess = sched.slot_of(slot)
+            job = loop.jobs.get(slot)
+            if loop.active[slot]:
+                self._ok(sess is not None,
+                         f"slot {slot} active without a session")
+                self._ok(job is None,
+                         f"slot {slot} active AND prefilling")
+            if job is not None:
+                self._ok(sess is job.sess,
+                         f"slot {slot} job session mismatch")
+            if sess is None:
+                self._ok(not loop.active[slot] and job is None,
+                         f"free slot {slot} still live")
+            else:
+                self._ok(sess.cur < sess.n_turns,
+                         f"slot {slot} session past its last turn")
+        # 2. monotone per-slot t while the same (session, turn) occupies
+        for slot in range(self.n_slots):
+            sess = sched.slot_of(slot)
+            if sess is None or not loop.active[slot]:
+                self._slot_marks[slot] = None
+                continue
+            mark = (id(sess), sess.cur)
+            t = int(loop.slot_t[slot])
+            prev = self._slot_marks[slot]
+            if prev is not None and prev[0] == mark:
+                self._ok(t >= prev[1],
+                         f"slot {slot} position went backwards "
+                         f"({prev[1]} -> {t})")
+            self._slot_marks[slot] = (mark, t)
+            self._ok(0 <= t <= self.eng.usable,
+                     f"slot {slot} position {t} out of range")
+        # 3. token budgets
+        for sess in self.sessions.values():
+            for j, turn in enumerate(sess.turns):
+                self._ok(len(turn.sampled) <= turn.max_new,
+                         f"sess{sess.uid} turn {j} over budget: "
+                         f"{len(turn.sampled)} > {turn.max_new}")
+                self._ok(len(turn.tokens) <= len(turn.sampled),
+                         f"sess{sess.uid} turn {j} tokens > sampled")
+        # 4. paged ledger
+        if loop.pool is not None:
+            self._check_pool_ledger()
+        # 5. terminal partition + shed-exactly-once + queue bound
+        fin, shd, can = (set(sched.finished), set(sched.shed),
+                         set(sched.cancelled))
+        self._ok(not (fin & shd) and not (fin & can) and not (shd & can),
+                 f"terminal sets overlap: fin&shd={fin & shd} "
+                 f"fin&can={fin & can} shd&can={shd & can}")
+        self._ok(set(sched.shed_sessions) == shd,
+                 "shed records and shed sessions disagree")
+        for uid in shd:
+            self._ok(sched.shed_sessions[uid].outcome == "shed",
+                     f"sess{uid} shed without outcome")
+        queued_uids = [s.uid for s in sched.queued()]
+        self._ok(len(queued_uids) == len(set(queued_uids)),
+                 "duplicate session in queue")
+        for uid in queued_uids:
+            self._ok(uid not in fin | shd | can,
+                     f"terminal sess{uid} still queued")
+        if loop.slo.enabled and loop.slo.max_pending:
+            arrived = sched.arrived(self.clock.t - loop.t0)
+            self._ok(len(arrived) <= loop.slo.max_pending,
+                     f"arrived backlog {len(arrived)} exceeds "
+                     f"max_pending={loop.slo.max_pending}")
+
+    def _check_pool_ledger(self) -> None:
+        loop = self.loop
+        pool, spec = loop.pool, loop.spec
+        self._ok(pool.pages_free + pool.pages_in_use == spec.n_pages,
+                 "pool free+in_use != n_pages")
+        self._ok(len(set(pool._free)) == len(pool._free),
+                 "duplicate page on the free list")
+        refs = np.zeros((spec.n_pages,), np.int64)
+        for pages in loop.slot_pages:
+            for p in pages:
+                refs[p] += 1
+        for entry in pool._entries:
+            for p in entry.pages:
+                refs[p] += 1
+        if not np.array_equal(refs, pool._ref):
+            bad = np.nonzero(refs != pool._ref)[0][:8]
+            self._fail(
+                "page refcount ledger mismatch at pages "
+                f"{bad.tolist()}: expected {refs[bad].tolist()}, "
+                f"allocator has {pool._ref[bad].tolist()}")
+        for p in pool._free:
+            self._ok(pool._ref[p] == 0, f"free page {p} with refs")
+
+    def check_drained(self) -> None:
+        """After the queue drains: no jobs, no active slots and — once
+        the prefix cache is dropped — zero allocated pages (the leak
+        check cancellation/preemption regressions are caught by)."""
+        loop = self.loop
+        self._ok(loop.done, "drain finished with live sessions")
+        self._ok(not loop.jobs, "drained loop still has admission jobs")
+        self._ok(not loop.active.any(), "drained loop has active slots")
+        for uid, sess in self.sessions.items():
+            self._ok(sess.outcome in ("finished", "shed", "cancelled"),
+                     f"sess{uid} drained without a terminal outcome "
+                     f"({sess.outcome!r})")
+        if loop.pool is not None:
+            loop.pool.clear_prefix_cache()
+            self._check_pool_ledger()
+            self._ok(loop.pool.pages_in_use == 0,
+                     f"{loop.pool.pages_in_use} pages leaked after "
+                     f"drain + prefix-cache clear")
+
+    def check_oracle(self) -> None:
+        """Solo-replay every finished, never-degraded session on the SAME
+        engine (fresh loop state, shared jit caches, SLO off) and demand
+        bit-identical per-turn sampled tokens."""
+        saved = self.eng.last_host_samples
+        try:
+            for uid, sess in sorted(self.sessions.items()):
+                if sess.outcome != "finished":
+                    continue
+                if any(t.degraded for t in sess.turns):
+                    continue
+                ref = clone_session(sess)
+                oloop = self.eng.serve_loop(
+                    [ref], n_slots=self.n_slots, seed=self.seed,
+                    clock=FakeClock(), slo=SLOConfig())
+                oloop.run()
+                for j, (got, want) in enumerate(zip(sess.turns,
+                                                    ref.turns)):
+                    if got.sampled != want.sampled:
+                        self._fail(
+                            f"oracle mismatch sess{uid} turn {j}: "
+                            f"served {got.sampled} != solo "
+                            f"{want.sampled}")
+        finally:
+            self.eng.last_host_samples = saved
+
+
+def verify_drained_loop(loop, sessions) -> None:
+    """One-shot invariant sweep over a DRAINED serve loop — the subset of
+    journey checks that make sense post-hoc (benchmarks use this as their
+    zero-violations gate): terminal partition + shed-exactly-once, token
+    budgets, and the paged refcount ledger incl. drain cleanliness.
+
+    ``sessions`` is every Session ever submitted to the loop. Raises
+    :class:`InvariantViolation` on the first failure.
+    """
+
+    def fail(msg):
+        raise InvariantViolation(msg, seed=-1, step=-1, log=[])
+
+    sched = loop.sched
+    if not loop.done:
+        fail("loop not drained")
+    if loop.jobs or loop.active.any():
+        fail("drained loop still has live slots/jobs")
+    fin, shd, can = (set(sched.finished), set(sched.shed),
+                     set(sched.cancelled))
+    if (fin & shd) or (fin & can) or (shd & can):
+        fail("terminal sets overlap")
+    if set(sched.shed_sessions) != shd:
+        fail("shed records and shed sessions disagree")
+    for sess in sessions:
+        if sess.outcome not in ("finished", "shed", "cancelled"):
+            fail(f"sess{sess.uid} has no terminal outcome")
+        want = {"finished": fin, "shed": shd, "cancelled": can}
+        if sess.uid not in want[sess.outcome]:
+            fail(f"sess{sess.uid} outcome {sess.outcome!r} not surfaced")
+        for j, turn in enumerate(sess.turns):
+            if len(turn.sampled) > turn.max_new:
+                fail(f"sess{sess.uid} turn {j} over token budget")
+    if loop.pool is not None:
+        loop.pool.clear_prefix_cache()
+        refs = np.zeros((loop.spec.n_pages,), np.int64)
+        for pages in loop.slot_pages:
+            for p in pages:
+                refs[p] += 1
+        for entry in loop.pool._entries:
+            for p in entry.pages:
+                refs[p] += 1
+        if not np.array_equal(refs, loop.pool._ref):
+            fail("page refcount ledger mismatch after drain")
+        if loop.pool.pages_in_use != 0:
+            fail(f"{loop.pool.pages_in_use} pages leaked after drain")
+
+
+def _build_engine(spec: JourneySpec):
+    import jax
+    from repro.models import model as MD
+    from repro.serving.engine import Engine
+    cfg = journey_config(spec)
+    params = MD.init_model(jax.random.key(0), cfg)
+    return Engine(cfg, params, n_cache=spec.n_cache)
+
+
+def run_sweep(specs, seeds, n_actions: int,
+              artifact: Optional[str] = None, verbose: bool = True
+              ) -> int:
+    """Run every (spec, seed) journey; on the first violation, dump the
+    seed + action log + message to ``artifact`` and return 1."""
+    for spec in specs:
+        eng = _build_engine(spec)
+        for seed in seeds:
+            runner = JourneyRunner(eng, seed=seed, n_slots=spec.n_slots)
+            try:
+                runner.run(n_actions)
+            except InvariantViolation as e:
+                if verbose:
+                    print(f"FAIL {spec.policy} paged={spec.paged} "
+                          f"seed={seed}: {e}", file=sys.stderr)
+                if artifact:
+                    with open(artifact, "w") as f:
+                        json.dump({
+                            "spec": dataclasses.asdict(spec),
+                            "seed": e.seed, "step": e.step,
+                            "violation": str(e),
+                            "log": [[a, kw] for a, kw in e.log],
+                        }, f, indent=2, default=str)
+                return 1
+            if verbose:
+                print(f"ok   {spec.policy:10s} paged={int(spec.paged)} "
+                      f"seed={seed}: {runner.steps} steps, "
+                      f"{len(runner.sessions)} sessions "
+                      f"({len(runner.loop.sched.finished)} finished, "
+                      f"{len(runner.loop.sched.shed)} shed, "
+                      f"{len(runner.loop.sched.cancelled)} cancelled)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--seeds", type=int, nargs="+", default=[0, 1])
+    ap.add_argument("--actions", type=int, default=200)
+    ap.add_argument("--policies", nargs="+",
+                    default=["lychee", "quest", "streaming"])
+    ap.add_argument("--layouts", nargs="+", default=["contiguous",
+                                                     "paged"],
+                    choices=["contiguous", "paged"])
+    ap.add_argument("--n-slots", type=int, default=2)
+    ap.add_argument("--artifact", default="journey-failure.json")
+    args = ap.parse_args(argv)
+    specs = [JourneySpec(policy=p, paged=(lay == "paged"),
+                         n_slots=args.n_slots)
+             for p in args.policies for lay in args.layouts]
+    return run_sweep(specs, args.seeds, args.actions,
+                     artifact=args.artifact)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

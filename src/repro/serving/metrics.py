@@ -1,0 +1,166 @@
+"""Prometheus-style serving metrics: counters, gauges, histograms.
+
+Pure-Python, dependency-free observability for the serving engine.
+Every serve loop owns one :class:`EngineMetrics`; the engine bumps
+counters as scheduling events happen (admission, deferral, preemption,
+shed, budget degradation) and feeds latency observations (TTFT, TPOT,
+ITL) into fixed-bucket histograms. The result rides on
+``ServeResult.metrics`` and is serialized into every serve-driven
+benchmark ``--json`` artifact via :meth:`EngineMetrics.to_dict`, so
+overload behaviour is auditable offline alongside pool stats.
+
+The histogram is the classic Prometheus cumulative-bucket shape
+(``le`` upper bounds, ``+Inf`` implicit via ``count``), which keeps
+percentile estimates mergeable across runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence
+
+
+# Default latency buckets (seconds) — log-spaced 1 ms .. 60 s.
+_LATENCY_BUCKETS_S = (
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5, 5.0, 10.0, 30.0, 60.0,
+)
+# Queue-depth buckets (sessions).
+_DEPTH_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0)
+
+
+@dataclasses.dataclass
+class Histogram:
+    """Fixed-bucket cumulative histogram (Prometheus ``le`` semantics)."""
+
+    buckets: Sequence[float]
+    counts: List[int] = dataclasses.field(default_factory=list)
+    count: int = 0
+    total: float = 0.0
+    min: float = math.inf
+    max: float = -math.inf
+
+    def __post_init__(self) -> None:
+        assert list(self.buckets) == sorted(self.buckets)
+        if not self.counts:
+            self.counts = [0] * len(self.buckets)
+
+    def observe(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        self.min = v if v < self.min else self.min
+        self.max = v if v > self.max else self.max
+        for i, le in enumerate(self.buckets):
+            if v <= le:
+                self.counts[i] += 1
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Estimate the q-quantile from cumulative buckets (upper bound
+        of the first bucket whose cumulative count covers rank q)."""
+        assert 0.0 <= q <= 1.0
+        if self.count == 0:
+            return 0.0
+        rank = q * self.count
+        for le, c in zip(self.buckets, self.counts):
+            if c >= rank:
+                return min(le, self.max)
+        return self.max
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "count": self.count,
+            "sum": round(self.total, 6),
+            "mean": round(self.mean, 6),
+            "min": round(self.min, 6) if self.count else 0.0,
+            "max": round(self.max, 6) if self.count else 0.0,
+            "p50": round(self.quantile(0.50), 6),
+            "p90": round(self.quantile(0.90), 6),
+            "p99": round(self.quantile(0.99), 6),
+            "buckets": {str(le): c
+                        for le, c in zip(self.buckets, self.counts)},
+        }
+
+
+def latency_histogram() -> Histogram:
+    return Histogram(buckets=_LATENCY_BUCKETS_S)
+
+
+def depth_histogram() -> Histogram:
+    return Histogram(buckets=_DEPTH_BUCKETS)
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """One serve loop's worth of scheduling + latency observability."""
+
+    # counters -----------------------------------------------------------
+    admitted: int = 0          # sessions granted a slot
+    finished: int = 0          # sessions that completed every turn
+    cancelled: int = 0         # sessions cancelled (queued or active)
+    shed: int = 0              # sessions rejected by the SLO policy
+    preempted: int = 0         # chunked admissions yielded to higher prio
+    admit_deferred: int = 0    # paged admissions deferred on page pressure
+    queue_overflow: int = 0    # max_pending overflow events
+    degrade_events: int = 0    # slots entering degraded-budget mode
+    degraded_steps: int = 0    # decode steps taken with a shrunken budget
+    degraded_turns: int = 0    # turns flagged Turn.degraded
+    # gauges (last observed) --------------------------------------------
+    queue_depth: int = 0
+    active_slots: int = 0
+    # histograms ---------------------------------------------------------
+    ttft_s: Histogram = dataclasses.field(default_factory=latency_histogram)
+    tpot_ms: Histogram = dataclasses.field(default_factory=latency_histogram)
+    itl_ms: Histogram = dataclasses.field(default_factory=latency_histogram)
+    queue_depth_hist: Histogram = dataclasses.field(
+        default_factory=depth_histogram)
+
+    # -- observation helpers --------------------------------------------
+    def observe_depth(self, pending: int, active: int) -> None:
+        self.queue_depth = pending
+        self.active_slots = active
+        self.queue_depth_hist.observe(float(pending))
+
+    def observe_ttft(self, seconds: float) -> None:
+        self.ttft_s.observe(seconds)
+
+    def observe_turn(self, decode_s: float, n_tokens: int) -> None:
+        """Record per-turn decode-rate stats: TPOT is the mean
+        time-per-output-token over the turn; ITL gets one sample per
+        inter-token gap at that mean (per-token timestamps are not kept
+        on the hot path)."""
+        if n_tokens <= 0:
+            return
+        per_tok_ms = 1e3 * decode_s / n_tokens
+        self.tpot_ms.observe(per_tok_ms)
+        for _ in range(max(0, n_tokens - 1)):
+            self.itl_ms.observe(per_tok_ms)
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "counters": {
+                "admitted": self.admitted,
+                "finished": self.finished,
+                "cancelled": self.cancelled,
+                "shed": self.shed,
+                "preempted": self.preempted,
+                "admit_deferred": self.admit_deferred,
+                "queue_overflow": self.queue_overflow,
+                "degrade_events": self.degrade_events,
+                "degraded_steps": self.degraded_steps,
+                "degraded_turns": self.degraded_turns,
+            },
+            "gauges": {
+                "queue_depth": self.queue_depth,
+                "active_slots": self.active_slots,
+            },
+            "histograms": {
+                "ttft_s": self.ttft_s.to_dict(),
+                "tpot_ms": self.tpot_ms.to_dict(),
+                "itl_ms": self.itl_ms.to_dict(),
+                "queue_depth": self.queue_depth_hist.to_dict(),
+            },
+        }

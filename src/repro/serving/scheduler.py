@@ -34,11 +34,32 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.serving.sampler import SamplerParams
+
+
+class QueueFullError(RuntimeError):
+    """``Scheduler.submit`` past ``max_pending`` without an SLO policy:
+    the caller asked for a bounded queue but configured no shed policy, so
+    overflow is an error instead of silent unbounded (or silently dropped)
+    queuing."""
+
+
+@dataclasses.dataclass
+class ShedResult:
+    """One session rejected by overload control — the explicit record the
+    engine surfaces instead of silent unbounded queuing. Every shed session
+    appears in exactly one of these (``Scheduler.shed``), once."""
+
+    uid: int
+    priority: int
+    reason: str                   # "queue_overflow" | "slo"
+    at_s: float                   # trace-relative shed time
+    queue_depth: int              # pending sessions at shed time
+    projected_ttft_s: float = 0.0  # estimate that triggered an "slo" shed
 
 
 @dataclasses.dataclass
@@ -57,6 +78,11 @@ class Turn:
     eos_id: Optional[int] = None       # per-turn EOS override (None -> engine)
 
     # lifecycle (filled by the engine) ------------------------------------
+    # True once ANY of this turn's tokens decoded with an overload-shrunken
+    # retrieval budget (SLOConfig.degrade_budget): the turn's output is no
+    # longer bit-comparable to the unloaded oracle — deliberately traded
+    # and recorded, never silent
+    degraded: bool = False
     started_s: Optional[float] = None  # prefill/extend for this turn began
     first_token_s: Optional[float] = None
     finished_s: Optional[float] = None
@@ -118,11 +144,25 @@ class Session:
     uid: int
     turns: List[Turn]
     arrival_s: float = 0.0        # offset from trace start (0 = offline)
+    # SLO scheduling (see configs.base.SLOConfig): 0 = highest priority
+    # (premium — never budget-degraded, never shed); ties admit by
+    # deadline (arrival + TTFT target), then arrival
+    priority: int = 1
+    ttft_target_s: Optional[float] = None   # per-session override
 
     # lifecycle (filled by the scheduler / engine) ------------------------
     admitted_s: Optional[float] = None
     finished_s: Optional[float] = None
     cur: int = 0                  # index of the active turn
+    # cooperative cancellation: set via cancel(); the engine honors it at
+    # its next step boundary — mid-queue, mid-prefill (chunk boundary) or
+    # mid-decode — reclaiming the slot, policy state and paged-pool refs
+    cancel_requested: bool = False
+    # terminal outcome: "" while live, then "finished"|"shed"|"cancelled"
+    outcome: str = ""
+
+    def cancel(self) -> None:
+        self.cancel_requested = True
 
     # -- compat / convenience views --------------------------------------
     @property
@@ -184,32 +224,128 @@ class Session:
 def Request(uid: int, prompt: np.ndarray, max_new: int,
             arrival_s: float = 0.0,
             sampling: Optional[SamplerParams] = None,
-            stop: Tuple[Tuple[int, ...], ...] = ()) -> Session:
+            stop: Tuple[Tuple[int, ...], ...] = (),
+            priority: int = 1,
+            ttft_target_s: Optional[float] = None) -> Session:
     """Single-turn Session factory — the pre-session ``Request`` surface."""
-    return Session(uid=uid, arrival_s=arrival_s,
+    return Session(uid=uid, arrival_s=arrival_s, priority=priority,
+                   ttft_target_s=ttft_target_s,
                    turns=[Turn(prompt=np.asarray(prompt, np.int32),
                                max_new=max_new, sampling=sampling,
                                stop=tuple(tuple(s) for s in stop))])
 
 
 class Scheduler:
-    """FIFO session queue + slot table for a fixed-capacity decode batch."""
+    """Session queue + slot table for a fixed-capacity decode batch.
 
-    def __init__(self, n_slots: int):
+    ``order="fifo"`` (default) keeps the original arrival-ordered queue.
+    ``order="slo"`` makes ``next_ready`` deadline-ordered: among arrived
+    sessions, admit the one minimizing (priority, arrival + TTFT target,
+    arrival, uid) — premium traffic overtakes the backlog instead of
+    queuing behind it.
+
+    ``max_pending`` bounds the queue. Overflow without the SLO policy
+    raises :class:`QueueFullError`; with it, the WORST queued-or-new
+    session (lowest priority, latest deadline) is shed with an explicit
+    :class:`ShedResult`. Terminal bookkeeping is a strict partition:
+    every submitted session ends in exactly one of ``finished``,
+    ``shed_sessions`` or ``cancelled``.
+    """
+
+    def __init__(self, n_slots: int, *, max_pending: int = 0,
+                 order: str = "fifo", default_ttft_s: float = 0.0):
         assert n_slots >= 1
+        assert order in ("fifo", "slo"), order
         self.n_slots = n_slots
+        self.max_pending = int(max_pending)
+        self.order = order
+        self.default_ttft_s = float(default_ttft_s)
         self._queue: Deque[Session] = deque()
         self._slots: List[Optional[Session]] = [None] * n_slots
         self.finished: Dict[int, Session] = {}
+        self.shed: Dict[int, ShedResult] = {}
+        self.shed_sessions: Dict[int, Session] = {}
+        self.cancelled: Dict[int, Session] = {}
         self.n_admitted = 0
+        self.n_preempted = 0
+        # optional observer, called once per shed (engine metrics hook)
+        self.on_shed: Optional[Callable[[Session, ShedResult], None]] = None
+
+    # -- SLO ordering ------------------------------------------------------
+    def deadline_s(self, sess: Session) -> float:
+        target = sess.ttft_target_s if sess.ttft_target_s is not None \
+            else self.default_ttft_s
+        return sess.arrival_s + (target if target > 0 else 0.0)
+
+    def slo_key(self, sess: Session):
+        return (sess.priority, self.deadline_s(sess), sess.arrival_s,
+                sess.uid)
+
+    def _shed_key(self, sess: Session):
+        """Worst-first ordering for overflow shedding (max of this key)."""
+        return (sess.priority, self.deadline_s(sess), -sess.arrival_s,
+                sess.uid)
 
     # -- queue -------------------------------------------------------------
-    def submit(self, sess: Session) -> None:
+    def _remove(self, sess: Session) -> None:
+        """Drop ``sess`` from the queue by IDENTITY (Session is a dataclass
+        whose ``__eq__`` compares numpy prompt arrays — deque.remove would
+        be wrong/ambiguous on duplicate uids)."""
+        for i, s in enumerate(self._queue):
+            if s is sess:
+                del self._queue[i]
+                return
+        raise ValueError(f"session {sess.uid} not queued")
+
+    def arrived(self, now_s: float) -> List[Session]:
+        return [s for s in self._queue if s.arrival_s <= now_s]
+
+    def submit(self, sess: Session, now_s: float = 0.0) -> bool:
+        """Queue a session. ``max_pending`` bounds the ARRIVED backlog (a
+        pre-loaded open-loop trace is not a queue yet): on overflow, raise
+        :class:`QueueFullError` without an SLO policy, else shed the worst
+        arrived session. Returns False iff ``sess`` itself was shed."""
+        if self.max_pending and sess.arrival_s <= now_s:
+            arrived = self.arrived(now_s)
+            if len(arrived) >= self.max_pending:
+                if self.order != "slo":
+                    raise QueueFullError(
+                        f"scheduler queue full ({len(arrived)} arrived >= "
+                        f"max_pending={self.max_pending}) and no SLO shed "
+                        f"policy configured — refusing to queue session "
+                        f"{sess.uid} unboundedly")
+                victim = max(arrived + [sess], key=self._shed_key)
+                if victim is not sess:
+                    self._remove(victim)
+                self.shed_session(victim, reason="queue_overflow",
+                                  now_s=now_s)
+                if victim is sess:
+                    return False
         self._queue.append(sess)
+        return True
+
+    def enforce_bound(self, now_s: float) -> int:
+        """Shed arrived overflow down to ``max_pending`` (SLO order only —
+        the engine calls this every step as pre-loaded arrivals come
+        due)."""
+        if not (self.max_pending and self.order == "slo"):
+            return 0
+        n = 0
+        while True:
+            arrived = self.arrived(now_s)
+            if len(arrived) <= self.max_pending:
+                return n
+            victim = max(arrived, key=self._shed_key)
+            self._remove(victim)
+            self.shed_session(victim, reason="queue_overflow", now_s=now_s)
+            n += 1
 
     def submit_all(self, sessions: Sequence[Session]) -> None:
         for s in sorted(sessions, key=lambda s: s.arrival_s):
-            self.submit(s)
+            self.submit(s, now_s=0.0)
+
+    def queued(self) -> List[Session]:
+        return list(self._queue)
 
     @property
     def pending(self) -> int:
@@ -229,20 +365,44 @@ class Scheduler:
     def slot_of(self, slot: int) -> Optional[Session]:
         return self._slots[slot]
 
-    def next_arrival_s(self) -> Optional[float]:
-        return self._queue[0].arrival_s if self._queue else None
-
-    def next_ready(self, now_s: float) -> Optional[Session]:
-        """Peek the FIFO head if it has arrived by ``now_s``."""
-        if self._queue and self._queue[0].arrival_s <= now_s:
-            return self._queue[0]
+    def slot_index(self, sess: Session) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s is sess:
+                return i
         return None
 
+    def next_arrival_s(self) -> Optional[float]:
+        if not self._queue:
+            return None
+        if self.order == "slo":
+            return min(s.arrival_s for s in self._queue)
+        return self._queue[0].arrival_s
+
+    def next_ready(self, now_s: float) -> Optional[Session]:
+        """Peek the next admissible session: the FIFO head if arrived, or
+        (SLO order) the arrived session with the smallest
+        (priority, deadline, arrival, uid)."""
+        if not self._queue:
+            return None
+        if self.order != "slo":
+            if self._queue[0].arrival_s <= now_s:
+                return self._queue[0]
+            return None
+        ready = [s for s in self._queue if s.arrival_s <= now_s]
+        if not ready:
+            return None
+        return min(ready, key=self.slo_key)
+
     # -- slot lifecycle ------------------------------------------------------
-    def admit(self, slot: int, now_s: float) -> Session:
-        """Pop the FIFO head into ``slot`` (held until its LAST turn)."""
+    def admit(self, slot: int, now_s: float,
+              sess: Optional[Session] = None) -> Session:
+        """Pop ``sess`` (default: the FIFO head) into ``slot`` (held until
+        its LAST turn)."""
         assert self._slots[slot] is None, f"slot {slot} busy"
-        sess = self._queue.popleft()
+        if sess is None:
+            sess = self._queue.popleft()
+        else:
+            self._remove(sess)
         sess.admitted_s = now_s
         self._slots[slot] = sess
         self.n_admitted += 1
@@ -252,8 +412,64 @@ class Scheduler:
         sess = self._slots[slot]
         assert sess is not None, f"slot {slot} already free"
         sess.finished_s = now_s
+        sess.outcome = "finished"
         self._slots[slot] = None
         self.finished[sess.uid] = sess
+        return sess
+
+    def release(self, slot: int) -> Session:
+        """Preemption: un-admit the slot's session back to the queue HEAD
+        (it keeps its arrival time, so its deadline — and its eventual
+        TTFT accounting — includes the wasted admission)."""
+        sess = self._slots[slot]
+        assert sess is not None, f"slot {slot} already free"
+        self._slots[slot] = None
+        sess.admitted_s = None
+        self._queue.appendleft(sess)
+        self.n_preempted += 1
+        return sess
+
+    # -- terminal records (shed / cancel) ----------------------------------
+    def shed_session(self, sess: Session, *, reason: str, now_s: float,
+                     projected_ttft_s: float = 0.0) -> ShedResult:
+        """Record a shed session (must already be OFF the queue). Each
+        session is shed at most once — double-shedding is a bug."""
+        assert sess.uid not in self.shed, \
+            f"session {sess.uid} shed twice"
+        assert all(s is not sess for s in self._queue)
+        assert all(s is not sess for s in self._slots)
+        sess.outcome = "shed"
+        sess.finished_s = now_s
+        res = ShedResult(uid=sess.uid, priority=sess.priority,
+                         reason=reason, at_s=now_s,
+                         queue_depth=len(self._queue),
+                         projected_ttft_s=projected_ttft_s)
+        self.shed[sess.uid] = res
+        self.shed_sessions[sess.uid] = sess
+        if self.on_shed is not None:
+            self.on_shed(sess, res)
+        return res
+
+    def shed_queued(self, sess: Session, *, reason: str, now_s: float,
+                    projected_ttft_s: float = 0.0) -> ShedResult:
+        self._remove(sess)
+        return self.shed_session(sess, reason=reason, now_s=now_s,
+                                 projected_ttft_s=projected_ttft_s)
+
+    def cancel_queued(self, sess: Session, now_s: float) -> None:
+        self._remove(sess)
+        sess.outcome = "cancelled"
+        sess.finished_s = now_s
+        self.cancelled[sess.uid] = sess
+
+    def cancel_active(self, slot: int, now_s: float) -> Session:
+        """Release a cancelled slot WITHOUT marking it finished."""
+        sess = self._slots[slot]
+        assert sess is not None, f"slot {slot} already free"
+        self._slots[slot] = None
+        sess.outcome = "cancelled"
+        sess.finished_s = now_s
+        self.cancelled[sess.uid] = sess
         return sess
 
 

@@ -1,0 +1,294 @@
+"""SLO scheduling, overload degradation and cancellation tests.
+
+Covers the robustness surface added with ``SLOConfig``:
+
+* ``Scheduler.submit`` with ``max_pending`` but no SLO policy raises
+  ``QueueFullError`` on an arrived burst — and with the SLO policy the
+  same burst sheds lowest-priority-first with ``ShedResult`` records;
+* cancellation never leaks: cancelling mid-queue, mid-prefill and
+  mid-decode on the PAGED engine returns the pool to the exact
+  pre-admission free-page count and leaves the radix prefix cache
+  consistent (refcount ledger intact, drain leaves zero pages in use);
+* degraded-mode semantics: an overload that shrinks one slot's
+  retrieval budget keeps every NON-degraded co-scheduled session
+  bit-identical to its unloaded solo oracle, flags exactly the degraded
+  turns, and does this for each span policy (lychee / quest /
+  clusterkv);
+* priority-0 (premium) sessions are never shed and never degraded.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import LycheeConfig, SLOConfig, get_config
+from repro.models import model as MD
+from repro.serving import (Engine, QueueFullError, Request, Scheduler,
+                           Session, Turn)
+from repro.serving.sampler import SamplerParams
+
+N_CACHE = 160
+
+
+def _cfg(policy="lychee", **serving):
+    ly = LycheeConfig(budget=64, sink=4, buffer_size=16, max_coarse=8,
+                      top_kg=4, full_attn_layers=0, policy=policy)
+    cfg = get_config("granite-3-8b", reduced=True).replace(
+        dtype="float32", lychee=ly)
+    if serving:
+        cfg = cfg.replace(serving=cfg.serving.replace(**serving))
+    return cfg
+
+
+def _req(uid, rng, vocab, n=16, gen=4, **kw):
+    return Request(uid, rng.integers(0, vocab, size=(n,)).astype(np.int32),
+                   gen, **kw)
+
+
+@pytest.fixture(scope="module")
+def paged_engine():
+    cfg = _cfg(paged=True, prefill_chunk=16,
+               slo=SLOConfig(enabled=True, ttft_target_s=5.0,
+                             max_pending=16))
+    params = MD.init_model(jax.random.key(0), cfg)
+    return cfg, Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-level queue bound (no engine needed)
+# ---------------------------------------------------------------------------
+
+def test_max_pending_without_slo_raises():
+    rng = np.random.default_rng(0)
+    sched = Scheduler(2, max_pending=3, order="fifo")
+    for uid in range(3):
+        assert sched.submit(_req(uid, rng, 100), now_s=0.0)
+    with pytest.raises(QueueFullError):
+        sched.submit(_req(3, rng, 100), now_s=0.0)
+    # the bound counts ARRIVED sessions: a future arrival is not a queue
+    late = _req(4, rng, 100)
+    late.arrival_s = 60.0
+    assert sched.submit(late, now_s=0.0)
+
+
+def test_max_pending_slo_sheds_lowest_priority_first():
+    rng = np.random.default_rng(1)
+    sched = Scheduler(2, max_pending=3, order="slo", default_ttft_s=1.0)
+    keep = [_req(0, rng, 100, priority=0),
+            _req(1, rng, 100, priority=1),
+            _req(2, rng, 100, priority=1)]
+    for s in keep:
+        assert sched.submit(s, now_s=0.0)
+    # burst: a priority-2 straggler is itself refused...
+    low = _req(3, rng, 100, priority=2)
+    assert not sched.submit(low, now_s=0.0)
+    assert low.outcome == "shed"
+    assert sched.shed[3].reason == "queue_overflow"
+    # ...while a premium arrival displaces the worst queued session
+    prem = _req(4, rng, 100, priority=0)
+    assert sched.submit(prem, now_s=0.0)
+    shed_uids = set(sched.shed)
+    assert 4 not in shed_uids and len(shed_uids) == 2
+    assert all(sched.shed_sessions[u].priority > 0 for u in shed_uids)
+    assert sched.pending == 3
+    # every shed surfaced exactly once, disjoint from the queue
+    assert shed_uids.isdisjoint({s.uid for s in sched.queued()})
+
+
+def test_slo_order_prefers_priority_then_deadline():
+    rng = np.random.default_rng(2)
+    sched = Scheduler(1, order="slo", default_ttft_s=10.0)
+    a = _req(0, rng, 100, priority=1)
+    b = _req(1, rng, 100, priority=0)          # premium, later arrival
+    a.arrival_s, b.arrival_s = 0.0, 1.0
+    sched.submit_all([a, b])
+    assert sched.next_ready(2.0) is b
+    tight = _req(2, rng, 100, priority=0, ttft_target_s=0.01)
+    tight.arrival_s = 1.5
+    sched.submit(tight, now_s=2.0)
+    assert sched.next_ready(2.0) is tight      # earlier deadline wins
+
+
+# ---------------------------------------------------------------------------
+# Cancellation: paged pools must return to their pre-admission state
+# ---------------------------------------------------------------------------
+
+def _pool_ledger_ok(loop):
+    pool, spec = loop.pool, loop.spec
+    refs = np.zeros((spec.n_pages,), np.int64)
+    for pages in loop.slot_pages:
+        for p in pages:
+            refs[p] += 1
+    for entry in pool._entries:
+        for p in entry.pages:
+            refs[p] += 1
+    assert np.array_equal(refs, pool._ref)
+    assert pool.pages_free + pool.pages_in_use == spec.n_pages
+
+
+def test_cancel_mid_queue_paged_no_pages_touched(paged_engine):
+    cfg, eng = paged_engine
+    rng = np.random.default_rng(3)
+    reqs = [_req(uid, rng, cfg.vocab, n=24, gen=4) for uid in range(3)]
+    loop = eng.serve_loop(reqs, n_slots=2)
+    free0 = loop.pool.pages_free
+    reqs[2].cancel()                     # still queued: slots are busy
+    loop.run()
+    res = loop.result()
+    assert set(res.cancelled) == {2}
+    assert set(res.requests) == {0, 1}
+    assert reqs[2].outcome == "cancelled"
+    assert not reqs[2].tokens
+    loop.pool.clear_prefix_cache()
+    assert loop.pool.pages_free == free0
+    _pool_ledger_ok(loop)
+
+
+def test_cancel_mid_prefill_paged_reclaims_pages(paged_engine):
+    cfg, eng = paged_engine
+    rng = np.random.default_rng(4)
+    # long prompt + chunked admission: cancellation lands mid-prefill
+    victim = _req(0, rng, cfg.vocab, n=80, gen=8)
+    loop = eng.serve_loop([victim], n_slots=2)
+    free0 = loop.pool.pages_free
+    loop.step()                          # admission starts, job in flight
+    assert 0 in loop.jobs and loop.pool.pages_free < free0
+    victim.cancel()
+    loop.step()
+    assert victim.outcome == "cancelled" and not loop.jobs
+    loop.run()
+    loop.pool.clear_prefix_cache()
+    assert loop.pool.pages_free == free0, "mid-prefill cancel leaked pages"
+    _pool_ledger_ok(loop)
+    assert loop.result().metrics.cancelled == 1
+
+
+def test_cancel_mid_decode_paged_reclaims_pages(paged_engine):
+    cfg, eng = paged_engine
+    rng = np.random.default_rng(5)
+    victim = _req(0, rng, cfg.vocab, n=24, gen=64)
+    other = _req(1, rng, cfg.vocab, n=24, gen=6)
+    loop = eng.serve_loop([victim, other], n_slots=2)
+    free0 = loop.pool.pages_free
+    while len(victim.turns[0].sampled) < 3:     # decode well underway
+        loop.step()
+    victim.cancel()
+    loop.run()
+    res = loop.result()
+    assert set(res.cancelled) == {0} and set(res.requests) == {1}
+    assert 3 <= len(victim.turns[0].sampled) < 64
+    loop.pool.clear_prefix_cache()
+    assert loop.pool.pages_free == free0, "mid-decode cancel leaked pages"
+    _pool_ledger_ok(loop)
+    # the survivor is untouched by its neighbour's cancellation
+    alone = eng.generate(other.prompt[None], 6)
+    assert res.requests[1].tokens == alone.tokens[0].tolist()
+
+
+# ---------------------------------------------------------------------------
+# Degraded mode: shrunken budgets never perturb non-degraded slots
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["lychee", "quest", "clusterkv"])
+def test_degraded_slot_keeps_neighbours_bit_identical(policy):
+    cfg = _cfg(policy=policy)
+    params = MD.init_model(jax.random.key(0), cfg)
+    eng = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    rng = np.random.default_rng(6)
+    prem = _req(0, rng, cfg.vocab, n=48, gen=6, priority=0)
+    std = _req(1, rng, cfg.vocab, n=48, gen=6, priority=1)
+    slo = SLOConfig(enabled=True, ttft_target_s=1e-9, queue_high=1,
+                    degrade_budget=True, min_budget_frac=0.25,
+                    shed=False, preempt=False)
+    loop = eng.serve_loop([prem, std], n_slots=2, slo=slo)
+    # a perpetually-arrived backlog keeps the loop in overload so the
+    # standard-priority slot decodes with a shrunken budget throughout
+    backlog = [_req(10 + i, rng, cfg.vocab, n=16, gen=2, priority=2)
+               for i in range(4)]
+    for s in backlog:
+        s.arrival_s = 0.0
+    while not (loop.active[0] and loop.active[1]):
+        loop.step()
+    for s in backlog:
+        loop.submit(s)
+    while prem.outcome != "finished" or std.outcome != "finished":
+        loop.step()
+    assert any(t.degraded for t in std.turns), \
+        "overload never degraded the standard-priority slot"
+    assert not any(t.degraded for t in prem.turns), \
+        "premium slot must never be degraded"
+    assert loop.metrics.degraded_steps > 0
+    assert loop.metrics.degraded_turns >= 1
+    # the premium neighbour is bit-identical to its unloaded solo oracle
+    alone = eng.generate(prem.prompt[None], 6)
+    assert prem.turns[0].sampled == alone.tokens[0].tolist(), \
+        f"{policy}: degraded neighbour perturbed a non-degraded slot"
+    # the degraded output is a best-effort, full-length generation
+    assert len(std.turns[0].sampled) == 6
+
+
+def test_degrade_disabled_never_caps():
+    cfg = _cfg()
+    params = MD.init_model(jax.random.key(0), cfg)
+    eng = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    rng = np.random.default_rng(7)
+    reqs = [_req(uid, rng, cfg.vocab, n=16, gen=3, priority=2)
+            for uid in range(5)]
+    slo = SLOConfig(enabled=True, ttft_target_s=1e-9, queue_high=1,
+                    degrade_budget=False, shed=False, preempt=False)
+    res_loop = eng.serve_loop(reqs, n_slots=2, slo=slo)
+    res_loop.run()
+    res = res_loop.result()
+    assert res.metrics.degraded_steps == 0
+    assert not any(t.degraded for r in reqs for t in r.turns)
+    for r in reqs:
+        alone = eng.generate(r.prompt[None], 3)
+        assert res.requests[r.uid].tokens == alone.tokens[0].tolist()
+
+
+# ---------------------------------------------------------------------------
+# Shedding surfaces exactly once, on the result, with premium immunity
+# ---------------------------------------------------------------------------
+
+def test_overload_shed_spares_premium():
+    cfg = _cfg()
+    params = MD.init_model(jax.random.key(0), cfg)
+    eng = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    rng = np.random.default_rng(8)
+    reqs = [_req(uid, rng, cfg.vocab, n=16, gen=2,
+                 priority=0 if uid < 2 else 2) for uid in range(8)]
+    slo = SLOConfig(enabled=True, ttft_target_s=1e-4, queue_high=1,
+                    shed=True, shed_grace=1.0, degrade_budget=False,
+                    preempt=False)
+    loop = eng.serve_loop(reqs, n_slots=2, slo=slo)
+    loop.run()
+    res = loop.result()
+    assert set(res.requests) | set(res.shed) == set(range(8))
+    assert set(res.requests) & set(res.shed) == set()
+    assert {0, 1} <= set(res.requests), "premium sessions were shed"
+    assert all(r.reason == "slo" for r in res.shed.values())
+    assert all(res.shed[u].priority > 0 for u in res.shed)
+    assert res.metrics.shed == len(res.shed) > 0
+
+
+def test_multi_turn_session_cancel_between_turns():
+    cfg = _cfg()
+    params = MD.init_model(jax.random.key(0), cfg)
+    eng = Engine(cfg, params, n_cache=N_CACHE, donate_state=False)
+    rng = np.random.default_rng(9)
+    sp = SamplerParams()
+    sess = Session(uid=0, turns=[
+        Turn(prompt=rng.integers(0, cfg.vocab, size=(16,)).astype(np.int32),
+             max_new=3, sampling=sp),
+        Turn(prompt=rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32),
+             max_new=32, sampling=sp)])
+    loop = eng.serve_loop([sess], n_slots=1)
+    while len(sess.turns[0].sampled) < 3:
+        loop.step()
+    sess.cancel()
+    loop.run()
+    assert sess.outcome == "cancelled"
+    assert len(sess.turns[0].sampled) == 3       # turn 0 completed
+    assert len(sess.turns[1].sampled) < 32       # turn 1 cut short
+    res = loop.result()
+    assert set(res.cancelled) == {0} and not res.requests
